@@ -1,0 +1,43 @@
+"""Shared benchmark scaffolding: timing, artifact output, market access."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """(result, microseconds-per-call) with one warmup."""
+    fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def write_artifact(name: str, payload: dict) -> Path:
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    path = ARTIFACTS / f"{name}.json"
+    path.write_text(json.dumps(payload, indent=1, default=_np_default))
+    return path
+
+
+def _np_default(o):
+    if isinstance(o, (np.floating, np.integer)):
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+def region_prices(region: str, seed: int | None = None) -> np.ndarray:
+    from repro.energy.markets import generate_market
+    from repro.energy.presets import region_params
+    return np.asarray(
+        generate_market(region_params(region, seed=seed)).prices)

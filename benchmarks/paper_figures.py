@@ -1,0 +1,169 @@
+"""One benchmark per paper figure/table (Figs. 1-7, Table II).
+
+Each function reproduces the figure's underlying data from our calibrated
+synthetic markets + the jnp model, times the computation, and writes a
+JSON artifact with the derived numbers next to the paper's published
+values where the paper states them.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import region_prices, timed, write_artifact
+from repro.core import price_model as pm
+from repro.core import tco
+from repro.core.optimizer import optimal_shutdown, psi_sweep
+from repro.core.regions import (PAPER_LICHTENBERG, PAPER_TABLE2,
+                                PSI_LICHTENBERG,
+                                PAPER_SOUTH_AUSTRALIA_IV_B,
+                                compute_region_row)
+from repro.core.scenarios import (amplify_volatility, fossil_share,
+                                  scale_fixed_costs)
+from repro.energy.markets import diurnal_profile, generate_market
+from repro.energy.presets import region_params
+
+
+def fig1_diurnal() -> dict:
+    """Fig. 1: average diurnal price/generation profile (Germany)."""
+    md = generate_market(region_params("germany"))
+    prof, us = timed(lambda: np.asarray(diurnal_profile(md)))
+    n = (md.renewable.shape[0] // 24) * 24
+    ren = np.asarray(md.renewable)[:n].reshape(-1, 24).mean(0)
+    out = {"hourly_price": prof.tolist(),
+           "hourly_renewable": ren.tolist(),
+           # midday prices can be negative (solar surplus): report the
+           # spread, not a ratio
+           "evening_minus_midday": float(prof[19] - prof[13]),
+           "us_per_call": us}
+    write_artifact("fig1_diurnal", out)
+    return out
+
+
+def fig2_price_regions(x: float = 0.0115) -> dict:
+    """Fig. 2: price-duration view, threshold + region means at x=1.15%."""
+    prices = region_prices("germany")
+    st, us = timed(pm.price_stats, prices, x)
+    srt = np.sort(prices)[::-1]
+    out = {"x": float(st.x), "p_thresh": float(st.p_thresh),
+           "p_high": float(st.p_high), "p_low": float(st.p_low),
+           "p_avg": float(st.p_avg),
+           "duration_curve_sample": srt[:: max(len(srt) // 64, 1)].tolist(),
+           "us_per_call": us}
+    write_artifact("fig2_price_regions", out)
+    return out
+
+
+def fig3_pv_intervals() -> dict:
+    """Fig. 3: PV k-x lines at 1 h / 1 day / 1 week sampling + x_BE for
+    Psi_LB = 2 (paper: weekly never viable; 1 h viable below x=3.32%)."""
+    prices = region_prices("germany")
+    out = {"psi": PSI_LICHTENBERG, "intervals": {}}
+    for name, factor in [("1h", 1), ("1d", 24), ("1w", 24 * 7)]:
+        p = np.asarray(pm.resample(prices, factor))
+        (plan), us = timed(optimal_shutdown, p, PSI_LICHTENBERG)
+        pv = pm.price_variability(p)
+        k_max = float(np.max(np.asarray(pv.k)))
+        out["intervals"][name] = {
+            "k_max": k_max,
+            "viable": bool(plan.viable),
+            "x_be_pct": float(plan.x_break_even) * 100,
+            "x_opt_pct": float(plan.x_opt) * 100,
+            "us_per_call": us,
+        }
+    out["paper"] = {"x_be_pct_1h": PAPER_LICHTENBERG["x_be_pct"],
+                    "weekly_viable": False}
+    write_artifact("fig3_pv_intervals", out)
+    return out
+
+
+def fig4_de_vs_sa() -> dict:
+    """Fig. 4: Germany vs South Australia PV at Psi=2 (paper IV-B:
+    x_BE 3.32% -> 25.66%)."""
+    out = {}
+    for region, paper_xbe in [("germany", PAPER_LICHTENBERG["x_be_pct"]),
+                              ("south_australia",
+                               PAPER_SOUTH_AUSTRALIA_IV_B["x_be_pct"])]:
+        prices = region_prices(region)
+        plan, us = timed(optimal_shutdown, prices, 2.0)
+        out[region] = {"x_be_pct": float(plan.x_break_even) * 100,
+                       "x_opt_pct": float(plan.x_opt) * 100,
+                       "cpc_red_pct": float(plan.cpc_reduction) * 100,
+                       "paper_x_be_pct": paper_xbe,
+                       "us_per_call": us}
+    write_artifact("fig4_de_vs_sa", out)
+    return out
+
+
+def fig5_psi_sweep() -> dict:
+    """Fig. 5: max theoretical CPC reduction vs Psi (Germany 1 h). Paper:
+    Psi must fall to ~0.38 to match South Australia's ~8%."""
+    prices = region_prices("germany")
+    psis = np.logspace(np.log10(0.05), np.log10(8.0), 40)
+    red, us = timed(lambda: np.asarray(psi_sweep(prices, psis)))
+    # Psi at which the reduction reaches 8% (paper: ~0.38)
+    above = psis[red >= 0.08]
+    out = {"psi": psis.tolist(), "cpc_reduction": red.tolist(),
+           "psi_for_8pct": float(above.max()) if len(above) else None,
+           "paper_psi_for_8pct": 0.38, "us_per_call": us}
+    write_artifact("fig5_psi_sweep", out)
+    return out
+
+
+def fig6_combined() -> dict:
+    """Fig. 6 / IV-D: combined scenario — Eq. (30) volatility amplification
+    + 20% cheaper hardware (Psi 2.0 -> 1.6). Paper: x_BE 10.15%,
+    x_opt 2.77%."""
+    md = generate_market(region_params("germany"))
+    prices = np.asarray(md.prices)
+    beta = np.asarray(fossil_share(md.fossil, md.renewable))
+    amplified = np.asarray(amplify_volatility(prices, beta))
+    psi_new = float(scale_fixed_costs(PSI_LICHTENBERG, 0.8))
+
+    scen = {}
+    for name, p, psi_v in [("historic", prices, PSI_LICHTENBERG),
+                           ("amplified", amplified, PSI_LICHTENBERG),
+                           ("amplified+cheap_hw", amplified, psi_new)]:
+        plan, us = timed(optimal_shutdown, p, psi_v)
+        pv = pm.price_variability(p)
+        red = np.asarray(tco.cpc_reduction(psi_v, pv.k, pv.x))
+        scen[name] = {"psi": psi_v,
+                      "x_be_pct": float(plan.x_break_even) * 100,
+                      "x_opt_pct": float(plan.x_opt) * 100,
+                      "cpc_red_pct": float(plan.cpc_reduction) * 100,
+                      "reduction_curve_x": np.asarray(pv.x)[::200].tolist(),
+                      "reduction_curve": red[::200].tolist(),
+                      "us_per_call": us}
+    scen["paper"] = {"x_be_pct": 10.15, "x_opt_pct": 2.77}
+    write_artifact("fig6_combined", scen)
+    return scen
+
+
+def table2_regions() -> dict:
+    """Table II / Fig. 7: the regional study on calibrated markets."""
+    rows = {}
+    for region, paper in PAPER_TABLE2.items():
+        prices = region_prices(region)
+        row, us = timed(compute_region_row, region, prices, paper.psi)
+        rows[region] = {
+            "ours": {"p_avg": row.p_avg, "x_be_pct": row.x_be_pct,
+                     "x_opt_pct": row.x_opt_pct,
+                     "cpc_red_pct": row.cpc_red_pct},
+            "paper": {"p_avg": paper.p_avg, "x_be_pct": paper.x_be_pct,
+                      "x_opt_pct": paper.x_opt_pct,
+                      "cpc_red_pct": paper.cpc_red_pct},
+            "us_per_call": us,
+        }
+    write_artifact("table2_regions", rows)
+    return rows
+
+
+ALL = {
+    "fig1_diurnal": fig1_diurnal,
+    "fig2_price_regions": fig2_price_regions,
+    "fig3_pv_intervals": fig3_pv_intervals,
+    "fig4_de_vs_sa": fig4_de_vs_sa,
+    "fig5_psi_sweep": fig5_psi_sweep,
+    "fig6_combined": fig6_combined,
+    "table2_regions": table2_regions,
+}

@@ -1,0 +1,74 @@
+"""§Roofline: assemble the per-(arch x shape x mesh) roofline table from
+dry-run artifacts (benchmarks/artifacts/dryrun/...).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import ARTIFACTS, write_artifact
+from repro.configs.base import SHAPES, get_config
+from repro.launch.roofline import (RooflineRow, roofline_from_record)
+
+DRYRUN = ARTIFACTS / "dryrun"
+
+
+def load_rows(mesh_dir: str) -> list[RooflineRow]:
+    rows = []
+    for f in sorted((DRYRUN / mesh_dir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if not rec.get("ok"):
+            continue
+        cfg = get_config(rec["arch"])
+        rows.append(roofline_from_record(rec, cfg, SHAPES[rec["shape"]]))
+    return rows
+
+
+def to_markdown(rows: list[RooflineRow]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | bound "
+           "| useful frac | MFU @roofline | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = "".join(
+        f"| {r.arch} | {r.shape} | {r.compute_s:.3g} | {r.memory_s:.3g} "
+        f"| {r.collective_s:.3g} | **{r.bound}** | {r.useful_frac:.2f} "
+        f"| {r.mfu:.1%} | {'y' if r.fits else 'NO'} |\n"
+        for r in rows)
+    return hdr + body
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(args.mesh)
+    if not rows:
+        print(f"no artifacts under {DRYRUN / args.mesh}; "
+              "run `python -m repro.launch.dryrun` first")
+        return 1
+    payload = {f"{r.arch}__{r.shape}": {
+        "compute_s": r.compute_s, "memory_s": r.memory_s,
+        "collective_s": r.collective_s, "bound": r.bound,
+        "model_flops": r.model_flops,
+        "hlo_flops_global": r.hlo_flops_global,
+        "useful_frac": r.useful_frac, "mfu_at_roofline": r.mfu,
+        "fits": r.fits, "peak_gib": r.peak_gib,
+    } for r in rows}
+    write_artifact(f"roofline_{args.mesh}", payload)
+    if args.md:
+        print(to_markdown(rows))
+    else:
+        for r in rows:
+            print(f"{r.arch:18s} {r.shape:12s} c={r.compute_s:9.3g} "
+                  f"m={r.memory_s:9.3g} x={r.collective_s:9.3g} "
+                  f"{r.bound:10s} useful={r.useful_frac:5.2f} "
+                  f"mfu={r.mfu:6.1%} fits={r.fits}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

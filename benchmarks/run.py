@@ -1,0 +1,98 @@
+"""Benchmark aggregator: one entry per paper figure/table + runtime
+benches + the roofline table (if dry-run artifacts exist).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3_pv_intervals]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import bench_runtime, paper_figures
+from benchmarks.common import ARTIFACTS
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-runtime", action="store_true",
+                    help="paper figures only (fast)")
+    args = ap.parse_args()
+
+    suites = dict(paper_figures.ALL)
+    if not args.skip_runtime:
+        suites.update(bench_runtime.ALL)
+    if args.only:
+        suites = {k: v for k, v in suites.items() if k == args.only}
+
+    failures = 0
+    print(f"{'benchmark':28s} {'seconds':>8s}  headline")
+    for name, fn in suites.items():
+        t0 = time.perf_counter()
+        try:
+            out = fn()
+            dt = time.perf_counter() - t0
+            headline = _headline(name, out)
+            print(f"{name:28s} {dt:8.2f}  {headline}")
+        except Exception as e:                      # pragma: no cover
+            failures += 1
+            print(f"{name:28s} {'FAIL':>8s}  {type(e).__name__}: {e}")
+            traceback.print_exc()
+
+    # roofline (only if the dry-run has produced artifacts)
+    dryrun = ARTIFACTS / "dryrun" / "pod16x16"
+    if dryrun.exists() and any(dryrun.glob("*.json")):
+        from benchmarks.roofline import load_rows
+        rows = load_rows("pod16x16")
+        n_fit = sum(r.fits for r in rows)
+        bounds = {b: sum(1 for r in rows if r.bound == b)
+                  for b in ("compute", "memory", "collective")}
+        print(f"{'roofline(pod16x16)':28s} {'-':>8s}  "
+              f"{len(rows)} cells, {n_fit} fit, bounds: {bounds}")
+    print(f"artifacts -> {ARTIFACTS}")
+    return 1 if failures else 0
+
+
+def _headline(name: str, out: dict) -> str:
+    if name == "fig3_pv_intervals":
+        h = out["intervals"]["1h"]
+        return (f"x_BE(1h)={h['x_be_pct']:.2f}% "
+                f"(paper {out['paper']['x_be_pct_1h']}%), "
+                f"weekly viable={out['intervals']['1w']['viable']}")
+    if name == "fig4_de_vs_sa":
+        return (f"x_BE DE={out['germany']['x_be_pct']:.1f}% "
+                f"SA={out['south_australia']['x_be_pct']:.1f}% "
+                f"(paper 3.3/25.7)")
+    if name == "fig5_psi_sweep":
+        psi8 = out.get("psi_for_8pct")
+        return (f"Psi for 8% reduction: "
+                f"{psi8:.2f}" if psi8 else "8% never reached"
+                ) + f" (paper ~{out['paper_psi_for_8pct']})"
+    if name == "fig6_combined":
+        c = out["amplified+cheap_hw"]
+        return (f"combined x_BE={c['x_be_pct']:.1f}% "
+                f"x_opt={c['x_opt_pct']:.2f}% (paper 10.15/2.77)")
+    if name == "table2_regions":
+        import numpy as np
+        errs = [abs(v["ours"]["x_be_pct"] - v["paper"]["x_be_pct"])
+                for v in out.values()
+                if v["paper"]["x_be_pct"] and v["ours"]["x_be_pct"]]
+        return f"{len(out)} regions, mean |x_BE err| = {np.mean(errs):.2f}pp"
+    if name == "energy_aware_training":
+        return (f"CPC red: predicted {out['predicted_cpc_red_pct']:.2f}% "
+                f"realized {out['realized_cpc_red_pct']:.2f}%")
+    if name == "fig1_diurnal":
+        return (f"evening - midday = {out['evening_minus_midday']:.1f} "
+                "EUR/MWh")
+    if name == "fig2_price_regions":
+        return f"p_thresh(x=1.15%) = {out['p_thresh']:.1f} EUR/MWh"
+    if name == "step_time":
+        return ", ".join(f"{k}: {v['s_per_step']:.2f}s"
+                         for k, v in out.items())
+    return ""
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

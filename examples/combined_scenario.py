@@ -1,0 +1,43 @@
+"""The paper's combined future scenario (Section IV-D), as a narrative:
+what happens to the shutdown calculus when volatility rises (Eq. 30,
+carbon-tax + cheap renewables) *and* hardware gets 20% cheaper?
+
+  PYTHONPATH=src python examples/combined_scenario.py
+"""
+
+import numpy as np
+
+from repro.core.optimizer import optimal_shutdown
+from repro.core.scenarios import (amplify_volatility, fossil_share,
+                                  scale_fixed_costs)
+from repro.energy.markets import generate_market
+from repro.energy.presets import region_params
+
+
+def main() -> None:
+    md = generate_market(region_params("germany"))
+    prices = np.asarray(md.prices)
+    beta = np.asarray(fossil_share(md.fossil, md.renewable))
+    amplified = np.asarray(amplify_volatility(prices, beta))
+
+    scenarios = [
+        ("historic Germany, Psi=2.0", prices, 2.0),
+        ("+ Eq.(30) volatility,  Psi=2.0", amplified, 2.0),
+        ("+ 20% cheaper hardware, Psi=1.6", amplified,
+         float(scale_fixed_costs(2.0, 0.8))),
+    ]
+    print("paper IV-D: combined scenario -> x_BE 10.15%, x_opt 2.77%\n")
+    print(f"{'scenario':34s} {'x_BE':>7s} {'x_opt':>7s} {'CPC red':>8s} "
+          f"{'threshold':>10s}")
+    for name, p, psi in scenarios:
+        plan = optimal_shutdown(p, psi)
+        print(f"{name:34s} {float(plan.x_break_even):7.2%} "
+              f"{float(plan.x_opt):7.2%} {float(plan.cpc_reduction):8.2%} "
+              f"{float(plan.p_thresh):8.1f}")
+    print("\nEach factor alone moves the needle a little; together they "
+          "make double-digit\nshutdown fractions viable — the paper's "
+          "argument for variable-capacity-ready\nprocurement, quantified.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the paper's model end-to-end in ~60 lines.
+
+Reproduces the Lichtenberg case study (Section IV-A) on our calibrated
+synthetic German market, then asks the question the paper's model answers:
+*should this cluster shut down during price spikes, and for how long?*
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.optimizer import optimal_shutdown
+from repro.core.price_model import price_variability, resample
+from repro.core.regions import PAPER_LICHTENBERG, PSI_LICHTENBERG
+from repro.core.tco import shutdowns_viable
+from repro.energy.markets import generate_market
+from repro.energy.presets import region_params
+
+
+def main() -> None:
+    # 1. a year of hourly prices (calibrated to Germany 2024 statistics)
+    market = generate_market(region_params("germany"))
+    prices = np.asarray(market.prices)
+    print(f"p_avg = {prices.mean():.2f} EUR/MWh "
+          f"(paper: 77.84), min {prices.min():.0f}, max {prices.max():.0f}")
+
+    # 2. the system: Lichtenberg's cost distribution (Psi ~ 2)
+    psi = PSI_LICHTENBERG
+
+    # 3. the paper's question: is variable capacity worth it?  (Eq. 19)
+    pv = price_variability(prices)
+    k_small_x = float(np.asarray(pv.k)[10])
+    print(f"k at small x: {k_small_x:.2f}; viable iff k > Psi+1 = {psi+1}: "
+          f"{bool(shutdowns_viable(psi, k_small_x))}")
+
+    # 4. the full plan: break-even and optimal shutdown fraction
+    plan = optimal_shutdown(prices, psi)
+    print(f"break-even x  : {float(plan.x_break_even):7.2%} "
+          f"(paper {PAPER_LICHTENBERG['x_be_pct']}%)")
+    print(f"optimal x     : {float(plan.x_opt):7.2%} "
+          f"(paper {PAPER_LICHTENBERG['x_opt_pct']}%)")
+    print(f"threshold     : {float(plan.p_thresh):7.2f} EUR/MWh "
+          f"(paper {PAPER_LICHTENBERG['p_thresh']})")
+    print(f"CPC reduction : {float(plan.cpc_reduction):7.2%} "
+          f"(paper {PAPER_LICHTENBERG['cpc_red_pct']}%)")
+
+    # 5. the sampling-interval effect (Fig. 3): weekly shutdowns never pay
+    weekly = optimal_shutdown(np.asarray(resample(prices, 24 * 7)), psi)
+    print(f"weekly-scale shutdowns viable: {bool(weekly.viable)} "
+          "(paper: never)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""repro — production JAX framework reproducing and extending
+"Navigating the Energy Doldrums" (Arzt & Wolf, 2025).
+
+Layers:
+  core      — the paper's TCO / price-variability model (Eqs. 1-29, Eq. 30)
+  energy    — price-market substrate (synthetic generators, streams, loaders)
+  models    — LM workload substrate (dense/GQA/MoE/SSM/hybrid/enc-dec)
+  kernels   — Pallas TPU kernels for compute hot spots
+  parallel  — sharding rules for the (pod, data, model) production mesh
+  optim     — optimizer + schedules + gradient machinery
+  checkpoint— sharded checkpoints, async save, elastic re-shard
+  runtime   — energy-aware variable-capacity trainer
+  serving   — price-aware batched inference engine
+  configs   — assigned architectures × input shapes
+  launch    — mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "1.0.0"

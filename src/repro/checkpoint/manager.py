@@ -1,0 +1,208 @@
+"""Sharded checkpointing with async save and elastic restore.
+
+The checkpoint is the mechanism behind everything the paper's technique
+needs at runtime: temporary shutdowns (checkpoint -> power off -> restore),
+fault tolerance (restore after node loss), and elastic capacity changes
+(restore under a different mesh).
+
+Layout: one directory per step:
+
+    <dir>/step_000123/
+        manifest.json          pytree structure, shapes, dtypes, metadata
+        shard_<host>.npz       this host's param/opt leaves (unique shards)
+
+Leaves are saved by flattened key path. On restore, arrays are placed
+against *target* shardings (``jax.device_put`` with the restore mesh's
+NamedShardings), so a checkpoint written on a 2x16x16 mesh restores onto a
+16x16 mesh (or a shrunken elastic DP world) without a resharding pass —
+GSPMD placement does the work. On this CPU container everything is a
+single host shard; the format and the restore path are the real ones.
+
+Async: ``save(..., blocking=False)`` snapshots leaves to host RAM
+(device_get) and writes in a background thread, so the train loop resumes
+after the copy, not after the fsync — checkpoint stalls are what make
+frequent price-driven suspends affordable (measured in
+EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def _to_savable(a: np.ndarray) -> np.ndarray:
+    """np.savez can't serialise ml_dtypes (bf16/f8, numpy kind 'V');
+    store them as same-width unsigned ints — the manifest records the true
+    dtype and the loader views them back."""
+    if a.dtype.kind == "V":
+        return a.view(np.dtype(f"u{a.dtype.itemsize}"))
+    return a
+
+
+def _from_savable(a: np.ndarray, dtype_name: str) -> np.ndarray:
+    want = np.dtype(getattr(jax.numpy, dtype_name, dtype_name))
+    if a.dtype != want and want.kind == "V":
+        return a.view(want)
+    return a
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Any,
+                    metadata: Optional[dict] = None, *,
+                    blocking: bool = True,
+                    host_index: int = 0) -> "SaveHandle":
+    """Write ``tree`` under ``directory/step_<step>``; returns a handle
+    (``.wait()`` joins the writer thread)."""
+    directory = Path(directory)
+    stepdir = directory / f"step_{step:08d}"
+    tmpdir = directory / f".tmp_step_{step:08d}"
+    flat = _flatten(tree)
+    # snapshot to host memory first (device buffers may be donated next step)
+    host_flat = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    treedef = jax.tree_util.tree_structure(tree)
+
+    def write():
+        tmpdir.mkdir(parents=True, exist_ok=True)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "keys": sorted(host_flat.keys()),
+            "shapes": {k: list(v.shape) for k, v in host_flat.items()},
+            "dtypes": {k: str(v.dtype) for k, v in host_flat.items()},
+            "metadata": metadata or {},
+            "written_at": time.time(),
+        }
+        (tmpdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        np.savez(tmpdir / f"shard_{host_index}.npz",
+                 **{k: _to_savable(v) for k, v in host_flat.items()})
+        if stepdir.exists():
+            shutil.rmtree(stepdir)
+        tmpdir.rename(stepdir)           # atomic publish
+
+    if blocking:
+        write()
+        return SaveHandle(None, stepdir)
+    th = threading.Thread(target=write, daemon=True)
+    th.start()
+    return SaveHandle(th, stepdir)
+
+
+class SaveHandle:
+    def __init__(self, thread: Optional[threading.Thread], path: Path):
+        self._thread = thread
+        self.path = path
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+
+
+def load_checkpoint(directory: str | Path, template: Any, *,
+                    step: Optional[int] = None,
+                    shardings: Any = None) -> tuple[Any, dict]:
+    """Restore the latest (or a specific) step into ``template``'s
+    structure. ``shardings``: optional matching pytree of NamedShardings —
+    the elastic-restore path places every leaf straight onto the (possibly
+    different) target mesh."""
+    directory = Path(directory)
+    if step is None:
+        steps = sorted(directory.glob("step_*"))
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+        stepdir = steps[-1]
+    else:
+        stepdir = directory / f"step_{step:08d}"
+    manifest = json.loads((stepdir / "manifest.json").read_text())
+    arrays: dict[str, np.ndarray] = {}
+    for shard in sorted(stepdir.glob("shard_*.npz")):
+        with np.load(shard) as z:
+            arrays.update({k: _from_savable(z[k],
+                                            manifest["dtypes"][k])
+                           for k in z.files})
+
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    flat_s = (jax.tree_util.tree_flatten(shardings)[0]
+              if shardings is not None else [None] * len(flat_t))
+    leaves = []
+    for (path, leaf), shard in zip(flat_t, flat_s):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        want = tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: checkpoint {arr.shape} != {want}")
+        if arr.dtype != np.dtype(leaf.dtype):
+            arr = arr.astype(leaf.dtype)
+        leaves.append(jax.device_put(arr, shard) if shard is not None
+                      else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), \
+        manifest["metadata"] | {"step": manifest["step"]}
+
+
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints; one in-flight async save."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._pending: Optional[SaveHandle] = None
+        # measured save/restore latency feeds the runtime's shutdown-cost
+        # correction (paper §V-A: shutdowns are not free)
+        self.last_save_s: float = 0.0
+        self.last_restore_s: float = 0.0
+
+    def save(self, step: int, tree: Any, metadata: Optional[dict] = None,
+             *, blocking: bool = False) -> SaveHandle:
+        if self._pending is not None:
+            self._pending.wait()
+        t0 = time.perf_counter()
+        handle = save_checkpoint(self.directory, step, tree, metadata,
+                                 blocking=blocking)
+        self.last_save_s = time.perf_counter() - t0
+        self._pending = None if blocking else handle
+        self._gc()
+        return handle
+
+    def restore(self, template: Any, *, step: Optional[int] = None,
+                shardings: Any = None) -> tuple[Any, dict]:
+        self.wait()
+        t0 = time.perf_counter()
+        out = load_checkpoint(self.directory, template, step=step,
+                              shardings=shardings)
+        self.last_restore_s = time.perf_counter() - t0
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        self.wait()
+        steps = sorted(self.directory.glob("step_*"))
+        return int(steps[-1].name.split("_")[1]) if steps else None
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.wait()
+            self._pending = None
+            self._gc()       # prune only after every rename has landed
+
+    def _gc(self) -> None:
+        steps = sorted(self.directory.glob("step_*"))
+        for old in steps[:-self.keep]:
+            shutil.rmtree(old, ignore_errors=True)

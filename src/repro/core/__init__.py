@@ -1,0 +1,72 @@
+"""The paper's contribution: a TCO model for variable-capacity computing.
+
+Everything here is pure-jnp, jit-compatible and vmap-compatible. The model
+is deliberately closed-form (the paper's Eqs. 1-29): the heavy machinery
+that *acts* on its decisions lives in `repro.runtime`.
+"""
+
+from repro.core.price_model import (
+    PriceStats,
+    price_stats,
+    price_variability,
+    threshold_price,
+    region_means,
+    resample,
+)
+from repro.core.tco import (
+    SystemCosts,
+    energy_cost_always_on,
+    energy_cost_with_shutdowns,
+    cpc_always_on,
+    cpc_with_shutdowns,
+    cpc_ratio,
+    cpc_reduction,
+    psi,
+    shutdowns_viable,
+)
+from repro.core.optimizer import (
+    ShutdownPlan,
+    break_even_fraction,
+    optimal_shutdown,
+    psi_sweep,
+)
+from repro.core.scenarios import (
+    amplify_volatility,
+    scale_fixed_costs,
+)
+from repro.core.policy import (
+    threshold_policy,
+    hysteresis_policy,
+    policy_energy_cost,
+    policy_cpc,
+    shutdown_cost_adjusted_viability,
+)
+
+__all__ = [
+    "PriceStats",
+    "price_stats",
+    "price_variability",
+    "threshold_price",
+    "region_means",
+    "resample",
+    "SystemCosts",
+    "energy_cost_always_on",
+    "energy_cost_with_shutdowns",
+    "cpc_always_on",
+    "cpc_with_shutdowns",
+    "cpc_ratio",
+    "cpc_reduction",
+    "psi",
+    "shutdowns_viable",
+    "ShutdownPlan",
+    "break_even_fraction",
+    "optimal_shutdown",
+    "psi_sweep",
+    "amplify_volatility",
+    "scale_fixed_costs",
+    "threshold_policy",
+    "hysteresis_policy",
+    "policy_energy_cost",
+    "policy_cpc",
+    "shutdown_cost_adjusted_viability",
+]

@@ -1,0 +1,156 @@
+"""Calibrate synthetic market generators against published statistics.
+
+The paper's case studies derive from 2024 price series we cannot access
+offline. Each region in Table II, however, pins down points on the k-x
+curve:
+
+  * at the break-even fraction  x_BE:  k(x_BE) = Psi + 1      (Eq. 19)
+  * at the optimum x_opt, the CPC reduction `red` gives (Eq. 28)
+        k_opt = (Psi+1) * (1 - (1-red)(1-x_opt)) / x_opt
+
+We fit the spike/volatility parameters of `repro.energy.markets` so the
+synthetic series reproduces those (x, k) targets (p_avg is matched exactly
+by scaling — k is scale-invariant). The optimizer is a self-contained
+Nelder-Mead (no scipy in this environment); the objective interpolates
+log k at the target fractions over the empirical PV set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.price_model import price_variability
+from repro.energy.markets import MarketParams, generate_market
+
+
+# ---------------------------------------------------------------------------
+# targets
+# ---------------------------------------------------------------------------
+
+def k_opt_from_table(psi: float, x_opt: float, red: float) -> float:
+    """Invert Eq. (28) at the optimum: the k that yields `red` at x_opt."""
+    return (psi + 1.0) * (1.0 - (1.0 - red) * (1.0 - x_opt)) / x_opt
+
+
+@dataclasses.dataclass(frozen=True)
+class KTargets:
+    """Target points (x_i, k_i) on the empirical k-x curve, with weights."""
+
+    xs: tuple
+    ks: tuple
+    weights: tuple | None = None
+
+
+def interp_k(prices: np.ndarray, xs: Sequence[float]) -> np.ndarray:
+    """k(x) read off the empirical PV set by log-x interpolation."""
+    pv = price_variability(np.asarray(prices))
+    x_grid = np.asarray(pv.x)
+    k_grid = np.asarray(pv.k)
+    return np.exp(np.interp(np.log(np.asarray(xs)),
+                            np.log(x_grid), np.log(k_grid)))
+
+
+def target_loss(prices: np.ndarray, targets: KTargets) -> float:
+    k_hat = interp_k(prices, targets.xs)
+    w = np.asarray(targets.weights) if targets.weights else \
+        np.ones(len(targets.xs))
+    err = np.log(k_hat) - np.log(np.asarray(targets.ks))
+    return float(np.sum(w * err ** 2))
+
+
+# ---------------------------------------------------------------------------
+# Nelder-Mead (self-contained; no scipy available offline)
+# ---------------------------------------------------------------------------
+
+def nelder_mead(f: Callable[[np.ndarray], float], x0: np.ndarray,
+                steps: np.ndarray, max_iter: int = 200,
+                xtol: float = 1e-3) -> tuple[np.ndarray, float]:
+    n = len(x0)
+    simplex = [np.asarray(x0, dtype=np.float64)]
+    for i in range(n):
+        v = np.array(x0, dtype=np.float64)
+        v[i] += steps[i]
+        simplex.append(v)
+    vals = [f(v) for v in simplex]
+
+    for _ in range(max_iter):
+        order = np.argsort(vals)
+        simplex = [simplex[i] for i in order]
+        vals = [vals[i] for i in order]
+        if np.max([np.linalg.norm(s - simplex[0]) for s in simplex[1:]]) < xtol:
+            break
+        centroid = np.mean(simplex[:-1], axis=0)
+        worst = simplex[-1]
+        refl = centroid + (centroid - worst)
+        f_refl = f(refl)
+        if f_refl < vals[0]:
+            expd = centroid + 2.0 * (centroid - worst)
+            f_expd = f(expd)
+            if f_expd < f_refl:
+                simplex[-1], vals[-1] = expd, f_expd
+            else:
+                simplex[-1], vals[-1] = refl, f_refl
+        elif f_refl < vals[-2]:
+            simplex[-1], vals[-1] = refl, f_refl
+        else:
+            contr = centroid + 0.5 * (worst - centroid)
+            f_contr = f(contr)
+            if f_contr < vals[-1]:
+                simplex[-1], vals[-1] = contr, f_contr
+            else:  # shrink
+                for i in range(1, n + 1):
+                    simplex[i] = simplex[0] + 0.5 * (simplex[i] - simplex[0])
+                    vals[i] = f(simplex[i])
+    best = int(np.argmin(vals))
+    return simplex[best], vals[best]
+
+
+# ---------------------------------------------------------------------------
+# market calibration
+# ---------------------------------------------------------------------------
+
+# Parameters exposed to the fit, with (log-space) bounds.
+_FIT_FIELDS = ("spike_enter", "spike_stay", "spike_mu", "spike_sigma",
+               "price_sens", "wind_sigma")
+_LO = np.array([1e-5, 0.05, -1.5, 0.05, 0.2, 0.005])
+_HI = np.array([0.20, 0.97, 3.50, 2.50, 6.0, 0.40])
+
+
+def _theta_to_params(base: MarketParams, theta: np.ndarray) -> MarketParams:
+    vals = _LO + (_HI - _LO) / (1.0 + np.exp(-theta))   # sigmoid box
+    kw = {k: float(v) for k, v in zip(_FIT_FIELDS, vals)}
+    kw["spike_mu"] = float(vals[2])                     # may be negative
+    return base.replace(**kw)
+
+
+def _params_to_theta(params: MarketParams) -> np.ndarray:
+    vals = np.array([getattr(params, k) for k in _FIT_FIELDS])
+    frac = np.clip((vals - _LO) / (_HI - _LO), 1e-4, 1 - 1e-4)
+    return np.log(frac / (1 - frac))
+
+
+def calibrate_market(base: MarketParams, targets: KTargets,
+                     max_iter: int = 120,
+                     seeds: Sequence[int] = (0,)) -> tuple[MarketParams, float]:
+    """Fit spike/volatility parameters so the generated series hits the
+    (x, k) targets. Averages the loss over ``seeds`` for robustness."""
+
+    def objective(theta: np.ndarray) -> float:
+        params = _theta_to_params(base, theta)
+        tot = 0.0
+        for s in seeds:
+            prices = np.asarray(generate_market(
+                params.replace(seed=int(s))).prices)
+            if prices.mean() <= 0:
+                return 1e6
+            tot += target_loss(prices, targets)
+        return tot / len(seeds)
+
+    theta0 = _params_to_theta(base)
+    theta, loss = nelder_mead(objective, theta0,
+                              steps=0.7 * np.ones(len(theta0)),
+                              max_iter=max_iter)
+    return _theta_to_params(base, theta), loss

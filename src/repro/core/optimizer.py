@@ -1,0 +1,83 @@
+"""Shutdown-plan optimisation — paper Eqs. (21)-(29) and the Psi sweep of
+Fig. 5.
+
+Given the empirical PV set of a price series and a system's Psi:
+
+  x_BE   — break-even fraction: largest x with k(x) > Psi + 1 (Fig. 3)
+  x_opt  — argmin_x CPC_WS(x) over the PV set          (Eqs. 21-25)
+  CPC reduction at x_opt                               (Eqs. 26-29)
+
+All searches run over the *full* empirical PV set (one entry per sample),
+exactly as the paper does, so results are data-driven, not parametric.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.price_model import price_variability
+from repro.core.tco import cpc_ratio, cpc_reduction
+
+
+class ShutdownPlan(NamedTuple):
+    """The model's full recommendation for (prices, Psi)."""
+
+    viable: jnp.ndarray        # any x with k(x) > Psi+1 ?
+    x_break_even: jnp.ndarray  # largest beneficial x (0 if none)
+    x_opt: jnp.ndarray         # CPC-minimising shutdown fraction
+    k_opt: jnp.ndarray         # k at x_opt
+    p_thresh: jnp.ndarray      # threshold price at x_opt
+    cpc_reduction: jnp.ndarray # 1 - CPC_WS/CPC_AO at x_opt (>=0)
+    p_avg: jnp.ndarray
+
+
+def break_even_fraction(prices: jnp.ndarray, psi_val) -> jnp.ndarray:
+    """Largest x such that k(x) > Psi + 1 (the point where the k-x line
+    leaves the viable region in Fig. 3). Returns 0.0 when no x qualifies.
+
+    k(x) is non-increasing in x, so this is the boundary of a prefix set.
+    """
+    pv = price_variability(prices)
+    good = pv.k > jnp.asarray(psi_val) + 1.0
+    # k is non-increasing => `good` is a prefix; count of Trues = index of BE.
+    m_be = jnp.sum(good.astype(jnp.int32))
+    return jnp.where(m_be > 0, pv.x[jnp.maximum(m_be - 1, 0)], 0.0)
+
+
+def optimal_shutdown(prices: jnp.ndarray, psi_val) -> ShutdownPlan:
+    """Full plan: x_BE, x_opt = argmin CPC_WS over the PV set, and the CPC
+    reduction at the optimum (clipped at the AO policy: if no x improves
+    CPC, the plan is x_opt = 0 with reduction 0)."""
+    psi_val = jnp.asarray(psi_val, jnp.float32)
+    pv = price_variability(prices)
+    ratio = cpc_ratio(psi_val, pv.k, pv.x)      # CPC_WS/CPC_AO per x (Eq.28)
+    i_opt = jnp.argmin(ratio)
+    best_ratio = ratio[i_opt]
+    improves = best_ratio < 1.0
+    x_be = break_even_fraction(prices, psi_val)
+    return ShutdownPlan(
+        viable=improves,
+        x_break_even=x_be,
+        x_opt=jnp.where(improves, pv.x[i_opt], 0.0),
+        k_opt=jnp.where(improves, pv.k[i_opt], jnp.nan),
+        p_thresh=jnp.where(improves, pv.p_thresh[i_opt], jnp.inf),
+        cpc_reduction=jnp.where(improves, 1.0 - best_ratio, 0.0),
+        p_avg=pv.p_avg[0],
+    )
+
+
+def psi_sweep(prices: jnp.ndarray, psi_values: jnp.ndarray) -> jnp.ndarray:
+    """Maximum theoretical CPC reduction vs Psi (Fig. 5).
+
+    Returns an array of CPC reductions, one per Psi value.
+    """
+    pv = price_variability(prices)
+
+    def best_reduction(psi_val):
+        red = cpc_reduction(psi_val, pv.k, pv.x)
+        return jnp.maximum(jnp.max(red), 0.0)
+
+    return jax.vmap(best_reduction)(jnp.asarray(psi_values))

@@ -1,0 +1,94 @@
+"""Executable shutdown policies over concrete price series.
+
+The paper's closed-form model assumes free, instantaneous shutdowns and a
+single threshold. This module provides the *operational* counterpart used by
+`repro.runtime`: policies map a price series to an uptime mask, and cost
+accounting evaluates any mask — which lets us (beyond the paper, closing the
+§V-A gap) price in shutdown/restart overheads and hysteresis.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tco import SystemCosts
+
+
+def threshold_policy(prices: jnp.ndarray, p_thresh) -> jnp.ndarray:
+    """Uptime mask: run (1.0) while price <= threshold, shut down otherwise.
+
+    This is the paper's WS policy realised on a concrete series.
+    """
+    return (jnp.asarray(prices) <= jnp.asarray(p_thresh)).astype(jnp.float32)
+
+
+def hysteresis_policy(prices: jnp.ndarray, p_on, p_off) -> jnp.ndarray:
+    """Two-threshold policy: shut down when price rises above ``p_off``;
+    resume only when it falls back below ``p_on`` (p_on <= p_off).
+
+    Reduces shutdown churn (and hence restart overhead) versus the single
+    threshold — a beyond-paper operational refinement.
+    """
+    p = jnp.asarray(prices)
+
+    def step(running, pi):
+        running = jnp.where(pi > p_off, 0.0,
+                            jnp.where(pi < p_on, 1.0, running))
+        return running, running
+
+    _, mask = jax.lax.scan(step, jnp.asarray(1.0), p)
+    return mask
+
+
+def policy_energy_cost(sys: SystemCosts, prices: jnp.ndarray,
+                       uptime: jnp.ndarray,
+                       idle_power_frac: float = 0.0) -> jnp.ndarray:
+    """Energy cost of an arbitrary uptime mask.
+
+    ``idle_power_frac`` models residual draw while "off" (paper §V-A notes
+    real shutdowns are not free; suspended nodes still draw power).
+    E = sum_i dt * C * (uptime_i + idle * (1-uptime_i)) * p_i.
+    """
+    p = jnp.asarray(prices)
+    n = p.shape[0]
+    dt = sys.T / n
+    draw = uptime + idle_power_frac * (1.0 - uptime)
+    return jnp.sum(dt * sys.C * draw * p)
+
+
+def policy_cpc(sys: SystemCosts, prices: jnp.ndarray, uptime: jnp.ndarray,
+               idle_power_frac: float = 0.0,
+               restart_energy_mwh: float = 0.0,
+               restart_time_h: float = 0.0) -> jnp.ndarray:
+    """CPC of an arbitrary uptime mask, including restart overheads.
+
+    Each 0->1 transition in the mask costs ``restart_energy_mwh`` (billed at
+    the price of the restart interval) and ``restart_time_h`` of lost uptime.
+    With both zero and a threshold mask this reduces exactly to Eq. (13).
+    """
+    p = jnp.asarray(prices)
+    n = p.shape[0]
+    dt = sys.T / n
+    e_run = policy_energy_cost(sys, prices, uptime, idle_power_frac)
+    starts = jnp.maximum(uptime[1:] - uptime[:-1], 0.0)
+    e_restart = jnp.sum(starts * restart_energy_mwh * p[1:])
+    up_hours = jnp.sum(uptime) * dt - jnp.sum(starts) * restart_time_h
+    return (sys.F + e_run + e_restart) / jnp.maximum(up_hours, 1e-9)
+
+
+def shutdown_cost_adjusted_viability(psi_val, k,
+                                     restart_overhead_frac) -> jnp.ndarray:
+    """Viability with a restart overhead expressed as a fraction of the
+    energy saved per shutdown event. Eq. (19) becomes
+
+        k (1 - overhead) > Psi + 1.
+
+    With overhead = 0 this is exactly the paper's criterion; the paper's
+    statement that its estimate is an *upper bound* corresponds to
+    overhead > 0 shrinking the viable region.
+    """
+    return jnp.asarray(k) * (1.0 - jnp.asarray(restart_overhead_frac)) \
+        > jnp.asarray(psi_val) + 1.0

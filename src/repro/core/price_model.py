@@ -1,0 +1,104 @@
+"""Price model — paper Section III(a), Eqs. (1)-(5) and the PV set Eq. (20).
+
+Given a price series ``p`` sampled at a regular interval over period ``T``
+and a shutdown fraction ``x``, the model splits prices at the (1-x)-quantile
+into a *high* and a *low* region and characterises volatility by
+
+    k(x) = p_high(x) / p_avg            (Eq. 3)
+
+The *price variability* of a series is the set PV = {(k(x), x)} traced over
+all feasible x (Eq. 20). Empirically, with n samples sorted descending,
+x = m/n for m = 1..n-1 and p_high(m) is the mean of the top-m samples, so
+the entire PV set is one sort + one cumulative sum — O(n log n), fully
+vectorised, jit-compatible.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class PriceStats(NamedTuple):
+    """The (k, x) description of a price series at one shutdown fraction.
+
+    Fields mirror Table I of the paper.
+    """
+
+    x: jnp.ndarray        # shutdown fraction in (0, 1)
+    k: jnp.ndarray        # p_high / p_avg                      (Eq. 3)
+    p_avg: jnp.ndarray    # mean price over T
+    p_high: jnp.ndarray   # mean price inside the high region    (Eq. 4)
+    p_low: jnp.ndarray    # mean price inside the low region     (Eq. 5)
+    p_thresh: jnp.ndarray # Q_{1-x}(p)                           (Eq. 1)
+
+
+def _sorted_desc(prices: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sort(jnp.asarray(prices, dtype=jnp.float64
+                                if jnp.asarray(prices).dtype == jnp.float64
+                                else jnp.float32))[::-1]
+
+
+def price_variability(prices: jnp.ndarray) -> PriceStats:
+    """The full empirical PV set (Eq. 20) of a price series.
+
+    Returns a ``PriceStats`` whose fields are arrays of length n-1,
+    one entry per feasible shutdown fraction x = m/n, m = 1..n-1.
+    """
+    p = _sorted_desc(prices)
+    n = p.shape[0]
+    p_avg = jnp.mean(p)
+    m = jnp.arange(1, n)                       # number of "high" samples
+    x = m / n
+    cum = jnp.cumsum(p)[:-1]                   # sum of top-m samples
+    p_high = cum / m                           # mean of high region
+    p_low = (jnp.sum(p) - cum) / (n - m)       # mean of low region
+    k = p_high / p_avg
+    p_thresh = p[m - 1]                        # m-th highest sample = Q_{1-x}
+    return PriceStats(x=x, k=k, p_avg=jnp.broadcast_to(p_avg, x.shape),
+                      p_high=p_high, p_low=p_low, p_thresh=p_thresh)
+
+
+def price_stats(prices: jnp.ndarray, x: float | jnp.ndarray) -> PriceStats:
+    """Model parameters (Eqs. 1-5) of ``prices`` at shutdown fraction ``x``.
+
+    ``x`` may be a scalar or an array (broadcast over fractions).
+    """
+    p = _sorted_desc(prices)
+    n = p.shape[0]
+    x = jnp.asarray(x)
+    p_avg = jnp.mean(p)
+    m = jnp.clip(jnp.round(x * n).astype(jnp.int32), 1, n - 1)
+    cum = jnp.concatenate([jnp.zeros((1,), p.dtype), jnp.cumsum(p)])
+    p_high = cum[m] / m
+    p_low = (cum[n] - cum[m]) / (n - m)
+    x_eff = m / n
+    k = p_high / p_avg
+    p_thresh = p[m - 1]
+    return PriceStats(x=x_eff, k=k,
+                      p_avg=jnp.broadcast_to(p_avg, x_eff.shape),
+                      p_high=p_high, p_low=p_low, p_thresh=p_thresh)
+
+
+def threshold_price(prices: jnp.ndarray, x: float) -> jnp.ndarray:
+    """p_thresh = Q_{1-x}(p_1..n)  (Eq. 1)."""
+    return price_stats(prices, x).p_thresh
+
+
+def region_means(p_avg, k, x):
+    """Closed-form p_high, p_low from (p_avg, k, x)  (Eqs. 4-5)."""
+    p_avg, k, x = jnp.asarray(p_avg), jnp.asarray(k), jnp.asarray(x)
+    p_high = p_avg * k
+    p_low = p_avg * (k * x - 1.0) / (x - 1.0)
+    return p_high, p_low
+
+
+def resample(prices: jnp.ndarray, factor: int) -> jnp.ndarray:
+    """Downsample a price series by block-averaging ``factor`` samples.
+
+    Models coarser sampling intervals (Fig. 3: 1 h -> 1 day -> 1 week);
+    trailing remainder samples are dropped.
+    """
+    n = (prices.shape[0] // factor) * factor
+    return jnp.mean(prices[:n].reshape(-1, factor), axis=1)

@@ -1,0 +1,41 @@
+"""Scenario transforms — paper Section IV-C/IV-D.
+
+`amplify_volatility` is Eq. (30): scale each non-negative price by a factor
+determined by the instantaneous fossil share beta of generation,
+
+    p~_i = p_i                                  if p_i <= 0
+           p_i (1-beta_i)/2 + p_i beta_i 2      otherwise,
+
+which compresses renewable-dominated (cheap) hours and stretches
+fossil-dominated (expensive) hours — the paper's proxy for carbon taxes plus
+ever-cheaper renewables. `scale_fixed_costs` models hardware-price shifts
+(Section IV-C/D: Psi 2.0 -> 1.6 is a 20% fixed-cost cut).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fossil_share(fossil: jnp.ndarray, renewable: jnp.ndarray) -> jnp.ndarray:
+    """beta_i = fossil_i / (fossil_i + renewable_i), safe at zero output."""
+    fossil = jnp.asarray(fossil)
+    renewable = jnp.asarray(renewable)
+    total = fossil + renewable
+    return jnp.where(total > 0, fossil / jnp.maximum(total, 1e-9), 0.5)
+
+
+def amplify_volatility(prices: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (30): fossil-share-driven price stretching."""
+    p = jnp.asarray(prices)
+    beta = jnp.broadcast_to(jnp.asarray(beta), p.shape)
+    stretched = p * (1.0 - beta) / 2.0 + p * beta * 2.0
+    return jnp.where(p <= 0.0, p, stretched)
+
+
+def scale_fixed_costs(psi_val, factor) -> jnp.ndarray:
+    """New Psi after scaling fixed costs by `factor` (energy costs fixed).
+
+    Psi = F / E_AO is linear in F, so Psi' = factor * Psi.
+    """
+    return jnp.asarray(psi_val) * jnp.asarray(factor)

@@ -1,0 +1,97 @@
+"""TCO / CPC accounting — paper Section III(b), Eqs. (6)-(19).
+
+Two fundamental policies over a period T with full-power draw C:
+
+  Always-On        E_AO = T * C * p_avg                       (Eq. 6)
+  With-Shutdowns   E_WS = T * C * p_avg * (1 - k*x)           (Eq. 9)
+
+Cost-per-compute divides TCO by *operational* time:
+
+  CPC_AO = (F + E_AO) / T                                     (Eq. 11)
+  CPC_WS = (F + E_WS) / ((1-x) * T)                           (Eq. 13)
+
+and the paper's central result: shutdowns are beneficial iff
+
+  k > Psi + 1,   Psi = F / E_AO                               (Eq. 19)
+
+independent of x. All quantities are jnp scalars/arrays and broadcast.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class SystemCosts(NamedTuple):
+    """Static description of a compute system's cost structure (Table I)."""
+
+    fixed: jnp.ndarray       # F  [currency] over the period T
+    power: jnp.ndarray       # C  [MW] draw under full operation
+    period: jnp.ndarray      # T  [hours]
+
+    @property
+    def F(self):  # noqa: N802 - paper notation
+        return self.fixed
+
+    @property
+    def C(self):  # noqa: N802
+        return self.power
+
+    @property
+    def T(self):  # noqa: N802
+        return self.period
+
+
+def make_system(fixed: float, power: float, period: float) -> SystemCosts:
+    return SystemCosts(jnp.asarray(fixed, jnp.float32),
+                       jnp.asarray(power, jnp.float32),
+                       jnp.asarray(period, jnp.float32))
+
+
+def energy_cost_always_on(sys: SystemCosts, p_avg) -> jnp.ndarray:
+    """E_AO = T * C * p_avg  (Eq. 6)."""
+    return sys.T * sys.C * jnp.asarray(p_avg)
+
+
+def energy_cost_with_shutdowns(sys: SystemCosts, p_avg, k, x) -> jnp.ndarray:
+    """E_WS = T * C * p_avg * (1 - k x)  (Eq. 9)."""
+    return sys.T * sys.C * jnp.asarray(p_avg) * (1.0 - jnp.asarray(k) * jnp.asarray(x))
+
+
+def cpc_always_on(sys: SystemCosts, p_avg) -> jnp.ndarray:
+    """CPC_AO = (F + E_AO) / T  (Eq. 11)."""
+    return (sys.F + energy_cost_always_on(sys, p_avg)) / sys.T
+
+
+def cpc_with_shutdowns(sys: SystemCosts, p_avg, k, x) -> jnp.ndarray:
+    """CPC_WS = (F + E_WS) / ((1-x) T)  (Eq. 13)."""
+    e_ws = energy_cost_with_shutdowns(sys, p_avg, k, x)
+    return (sys.F + e_ws) / ((1.0 - jnp.asarray(x)) * sys.T)
+
+
+def psi(sys: SystemCosts, p_avg) -> jnp.ndarray:
+    """Cost-distribution coefficient Psi = F / E_AO  (Eq. 18)."""
+    return sys.F / energy_cost_always_on(sys, p_avg)
+
+
+def cpc_ratio(psi_val, k, x) -> jnp.ndarray:
+    """CPC_WS / CPC_AO in the dimensionless form of Eq. (28):
+
+        ratio = (Psi + 1 - k x) / ((Psi + 1) (1 - x))
+
+    Depends on the system only through Psi — used throughout Section IV.
+    """
+    psi_val, k, x = (jnp.asarray(v) for v in (psi_val, k, x))
+    return (psi_val + 1.0 - k * x) / ((psi_val + 1.0) * (1.0 - x))
+
+
+def cpc_reduction(psi_val, k, x) -> jnp.ndarray:
+    """Relative CPC reduction of WS over AO, 1 - CPC_WS/CPC_AO (Eq. 26)."""
+    return 1.0 - cpc_ratio(psi_val, k, x)
+
+
+def shutdowns_viable(psi_val, k) -> jnp.ndarray:
+    """The paper's headline criterion: k > Psi + 1  (Eq. 19)."""
+    return jnp.asarray(k) > jnp.asarray(psi_val) + 1.0

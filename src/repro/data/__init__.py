@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticLM, batch_at, global_batch_sharding,
+                                 host_shard)  # noqa: F401

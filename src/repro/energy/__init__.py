@@ -1,0 +1,23 @@
+"""Energy-market substrate: synthetic spot markets, generation mix,
+price streams, forecasting, and loaders for real market data (SMARD CSV).
+
+The paper's inputs are hourly day-ahead price series (SMARD / AEMO /
+Electricity Maps, 2024). Those are not available offline, so
+`repro.energy.markets` provides a structural generator — diurnal/seasonal
+demand, solar/wind supply, AR residual, regime-switching spikes, negative
+midday prices — whose parameters are *calibrated* per region against the
+paper's published statistics (see `repro.core.calibration`).
+"""
+
+from repro.energy.markets import MarketParams, generate_market, MarketData
+from repro.energy.stream import PriceStream
+from repro.energy.presets import region_params, REGION_PRESETS
+
+__all__ = [
+    "MarketParams",
+    "MarketData",
+    "generate_market",
+    "PriceStream",
+    "region_params",
+    "REGION_PRESETS",
+]

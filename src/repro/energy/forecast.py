@@ -1,0 +1,41 @@
+"""Minimal electricity-price forecasting (EPF) baselines.
+
+The paper defers to the EPF literature [17] for real forecasting; the
+runtime only needs a *sane* expectation of near-term prices to set its
+threshold before day-ahead prices publish. We implement the two standard
+EPF baselines (Lago et al., 2021):
+
+  seasonal-naive  p^(t+h) = p(t + h - 168)   (same hour last week)
+  similar-day AR  seasonal-naive + AR(1)-damped recent residual
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def seasonal_naive(history: np.ndarray, horizon: int,
+                   season: int = 168) -> np.ndarray:
+    """Repeat the same hour from ``season`` samples ago."""
+    history = np.asarray(history)
+    if history.shape[0] < season:
+        season = 24 if history.shape[0] >= 24 else 1
+    idx = np.arange(horizon) - season      # negative: wraps from the end
+    return history[idx % history.shape[0]] if season < horizon \
+        else history[idx]
+
+
+def similar_day_ar(history: np.ndarray, horizon: int,
+                   season: int = 168, damp: float = 0.9) -> np.ndarray:
+    """Seasonal-naive plus exponentially damped last residual."""
+    history = np.asarray(history, dtype=np.float64)
+    base = seasonal_naive(history, horizon, season)
+    season_eff = season if history.shape[0] >= 2 * season else \
+        (24 if history.shape[0] >= 48 else 1)
+    resid = history[-1] - history[-1 - season_eff]
+    correction = resid * damp ** np.arange(1, horizon + 1)
+    return base + correction
+
+
+def mae(pred: np.ndarray, truth: np.ndarray) -> float:
+    return float(np.mean(np.abs(np.asarray(pred) - np.asarray(truth))))

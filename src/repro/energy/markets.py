@@ -1,0 +1,185 @@
+"""Structural synthetic electricity-market generator.
+
+Price formation follows the merit-order intuition the paper leans on
+(Fig. 1): price ~ f(net load) where net load = demand - renewables.
+Components:
+
+  demand      diurnal double-peak + seasonal + weekday/weekend profile
+  solar       clear-sky diurnal bell * seasonal * cloud AR process
+  wind        slow AR(1) process (multi-day autocorrelation)
+  residual    fast AR(1) price noise
+  spikes      two-state Markov regime ("doldrums": low wind + peak demand)
+              with lognormal multiplicative magnitude — the heavy tail that
+              makes k(x) large at small x
+  negatives   renewable-surplus hours can push prices below zero
+
+The generator returns both the price series and the fossil/renewable
+generation volumes, so the Eq. (30) scenario transform has a consistent
+beta_i. Everything is jax.random-driven and reproducible by seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MarketParams:
+    """Parameters of one synthetic regional market (hourly resolution)."""
+
+    n_hours: int = 8760
+    p_avg: float = 80.0          # target mean price [EUR/MWh]; series is
+                                 # rescaled to hit this exactly
+    # demand shape (relative units; mean 1.0)
+    diurnal_amp: float = 0.10    # morning/evening double peak
+    seasonal_amp: float = 0.08   # winter > summer
+    weekend_drop: float = 0.10
+    # supply
+    solar_share: float = 0.25    # midday solar depth relative to demand
+    solar_seasonal: float = 0.5  # summer/winter solar asymmetry
+    cloud_sigma: float = 0.25    # day-scale cloud AR innovations
+    wind_share: float = 0.30
+    wind_rho: float = 0.995      # ~multi-day autocorrelation at 1 h
+    wind_sigma: float = 0.06
+    # price formation
+    price_sens: float = 1.4      # price response to net-load deviation
+                                 # (relative price units per net-load unit)
+    noise_rho: float = 0.7
+    noise_sigma: float = 0.05
+    # spike regime (energy doldrums)
+    spike_enter: float = 0.004   # P(calm -> spike) per hour
+    spike_stay: float = 0.55     # P(spike persists) per hour
+    spike_mu: float = 0.9        # lognormal magnitude of multiplier - 1
+    spike_sigma: float = 0.7
+    spike_cap: float = 40.0      # cap on the spike multiplier (market cap)
+    # negative prices
+    neg_sens: float = 1.2        # how hard renewable surplus pushes down
+    seed: int = 0
+
+    def replace(self, **kw) -> "MarketParams":
+        return dataclasses.replace(self, **kw)
+
+
+class MarketData(NamedTuple):
+    prices: jnp.ndarray     # [n_hours] EUR/MWh
+    demand: jnp.ndarray     # [n_hours] relative units (mean ~1)
+    fossil: jnp.ndarray     # [n_hours] generation volume (relative)
+    renewable: jnp.ndarray  # [n_hours] generation volume (relative)
+
+
+# numeric fields passed into the jitted body as traced scalars, so
+# calibration can sweep parameters without re-tracing.
+_THETA_FIELDS = ("p_avg", "diurnal_amp", "seasonal_amp", "weekend_drop",
+                 "solar_share", "solar_seasonal", "cloud_sigma",
+                 "wind_share", "wind_rho", "wind_sigma", "price_sens",
+                 "noise_rho", "noise_sigma", "spike_enter", "spike_stay",
+                 "spike_mu", "spike_sigma", "spike_cap", "neg_sens")
+
+
+def _ar1(key, n, rho, sigma):
+    innov = sigma * jax.random.normal(key, (n,))
+
+    def step(carry, eps):
+        nxt = rho * carry + jnp.sqrt(1 - rho ** 2) * eps
+        return nxt, nxt
+
+    _, out = jax.lax.scan(step, jnp.asarray(0.0), innov)
+    return out
+
+
+def generate_market(params: MarketParams) -> MarketData:
+    """Generate one year (or ``n_hours``) of hourly market data."""
+    theta = {f: jnp.asarray(getattr(params, f), jnp.float32)
+             for f in _THETA_FIELDS}
+    return _generate_jit(params.n_hours, params.seed, theta)
+
+
+from functools import partial  # noqa: E402
+
+
+@partial(jax.jit, static_argnums=(0,))
+def _generate_jit(n_hours: int, seed: int, theta: dict) -> MarketData:
+    class _P:  # attribute view over theta for readability below
+        pass
+
+    p = _P()
+    for f, v in theta.items():
+        setattr(p, f, v)
+    p.n_hours = n_hours
+
+    key = jax.random.PRNGKey(seed)
+    k_cloud, k_wind, k_noise, k_sp_e, k_sp_m = jax.random.split(key, 5)
+
+    t = jnp.arange(p.n_hours)
+    hour = t % 24
+    day = t // 24
+    doy = day % 365
+
+    # --- demand ---------------------------------------------------------
+    diurnal = (jnp.exp(-0.5 * ((hour - 8.5) / 2.2) ** 2)
+               + 1.15 * jnp.exp(-0.5 * ((hour - 19.0) / 2.6) ** 2))
+    diurnal = diurnal / jnp.mean(diurnal) - 1.0
+    seasonal = jnp.cos(2 * jnp.pi * (doy - 15) / 365.0)  # peak mid-January
+    weekday = day % 7
+    weekend = ((weekday == 5) | (weekday == 6)).astype(jnp.float32)
+    demand = (1.0 + p.diurnal_amp * diurnal
+              + p.seasonal_amp * seasonal
+              - p.weekend_drop * weekend)
+
+    # --- renewables ------------------------------------------------------
+    sun = jnp.maximum(jnp.cos((hour - 13.0) / 24.0 * 2 * jnp.pi), 0.0) ** 1.5
+    sun_season = 1.0 - p.solar_seasonal * jnp.cos(2 * jnp.pi * (doy - 172) / 365.0)
+    cloud = jnp.clip(1.0 + _ar1(k_cloud, p.n_hours, 0.97, p.cloud_sigma), 0.1, 1.6)
+    solar = p.solar_share * 2.8 * sun * sun_season * cloud
+    wind_lvl = _ar1(k_wind, p.n_hours, p.wind_rho, 1.0)   # unit variance
+    wind = p.wind_share * jnp.clip(1.0 + (1.4 / 0.06) * p.wind_sigma
+                                   * wind_lvl, 0.02, 3.0)
+    biomass = 0.08 * jnp.ones_like(solar)
+    renewable_raw = solar + wind + biomass
+
+    # --- price formation --------------------------------------------------
+    net_load = demand - renewable_raw
+    net_dev = net_load - jnp.mean(net_load)
+    noise = _ar1(k_noise, p.n_hours, p.noise_rho, p.noise_sigma)
+    rel = 1.0 + p.price_sens * net_dev + noise
+
+    # negative prices: when renewables exceed demand, push harder down
+    surplus = jnp.maximum(renewable_raw - demand, 0.0)
+    rel = rel - p.neg_sens * surplus
+
+    # spike regime: two-state Markov chain
+    u_enter = jax.random.uniform(k_sp_e, (p.n_hours,))
+    mag = jnp.exp(p.spike_mu + p.spike_sigma
+                  * jax.random.normal(k_sp_m, (p.n_hours,)))
+    mag = jnp.minimum(mag, p.spike_cap)
+
+    def spike_step(state, inp):
+        u, m = inp
+        stay = jnp.where(state > 0.5, u < p.spike_stay, False)
+        enter = jnp.where(state < 0.5, u < p.spike_enter, False)
+        nxt = jnp.where(stay | enter, 1.0, 0.0)
+        return nxt, nxt * m
+
+    _, spike_mult = jax.lax.scan(spike_step, jnp.asarray(0.0),
+                                 (u_enter, mag))
+    # spikes multiply only positive prices (scarcity pricing)
+    rel = jnp.where(rel > 0, rel * (1.0 + spike_mult), rel)
+
+    # scale to the exact target mean (k(x) is scale-invariant)
+    mean_rel = jnp.mean(rel)
+    prices = rel * (p.p_avg / jnp.maximum(mean_rel, 1e-6))
+
+    # generation volumes for Eq. (30): fossil fills residual net load
+    fossil = jnp.maximum(demand - renewable_raw, 0.03 * demand)
+    return MarketData(prices=prices, demand=demand,
+                      fossil=fossil, renewable=renewable_raw)
+
+
+def diurnal_profile(data: MarketData) -> jnp.ndarray:
+    """Average price per hour-of-day (Fig. 1)."""
+    n = (data.prices.shape[0] // 24) * 24
+    return jnp.mean(data.prices[:n].reshape(-1, 24), axis=0)

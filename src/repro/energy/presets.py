@@ -1,0 +1,45 @@
+"""Per-region market presets.
+
+Calibrated parameters live in ``repro/configs/market_presets.json`` (written
+by ``python -m repro.core.fit_presets``, which fits the generator to the
+paper's Table II statistics). If a region has not been calibrated yet, a
+structurally sensible default with the paper's p_avg is returned.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.regions import PAPER_TABLE2
+from repro.energy.markets import MarketParams
+
+_PRESET_PATH = Path(__file__).resolve().parent.parent / "configs" / \
+    "market_presets.json"
+
+
+def _defaults(region: str) -> MarketParams:
+    row = PAPER_TABLE2.get(region)
+    p_avg = row.p_avg if row is not None else 80.0
+    return MarketParams(p_avg=p_avg, seed=abs(hash(region)) % (2 ** 31))
+
+
+def _load_baked() -> dict:
+    if _PRESET_PATH.exists():
+        return json.loads(_PRESET_PATH.read_text())
+    return {}
+
+
+REGION_PRESETS = sorted(PAPER_TABLE2.keys())
+
+
+def region_params(region: str, seed: int | None = None) -> MarketParams:
+    """Calibrated ``MarketParams`` for a Table II region."""
+    baked = _load_baked().get(region)
+    if baked is None:
+        params = _defaults(region)
+    else:
+        params = MarketParams(**baked)
+    if seed is not None:
+        params = params.replace(seed=seed)
+    return params

@@ -1,0 +1,59 @@
+"""Loader for SMARD-style market CSV exports (semicolon-separated, German
+number formatting) and a generic single-column loader.
+
+The paper sources Germany's 2024 day-ahead prices from SMARD [7]. When the
+real export is available, drop it next to your config and point
+``--prices path.csv`` at it; every model entry point consumes the result
+identically to a synthetic series.
+"""
+
+from __future__ import annotations
+
+import csv
+import io
+from pathlib import Path
+
+import numpy as np
+
+
+def _parse_german_float(s: str) -> float:
+    s = s.strip().replace(".", "").replace(",", ".")
+    if s in ("", "-"):
+        return float("nan")
+    return float(s)
+
+
+def load_smard_csv(path: str | Path, column: int = -1) -> np.ndarray:
+    """Load a SMARD 'Marktdaten' CSV export; returns EUR/MWh samples.
+
+    SMARD exports are ';'-separated with a header row; price columns use
+    German decimal commas. ``column`` selects the price column (default:
+    last).
+    """
+    text = Path(path).read_text(encoding="utf-8-sig")
+    rows = list(csv.reader(io.StringIO(text), delimiter=";"))
+    out = []
+    for row in rows[1:]:
+        if not row or len(row) <= abs(column) - (1 if column < 0 else 0):
+            continue
+        try:
+            out.append(_parse_german_float(row[column]))
+        except ValueError:
+            continue
+    arr = np.asarray(out, dtype=np.float64)
+    return arr[~np.isnan(arr)]
+
+
+def load_price_csv(path: str | Path) -> np.ndarray:
+    """Generic loader: one price per line, or comma-separated single column."""
+    text = Path(path).read_text()
+    vals = []
+    for line in text.splitlines():
+        line = line.strip().split(",")[0]
+        if not line:
+            continue
+        try:
+            vals.append(float(line))
+        except ValueError:
+            continue  # header
+    return np.asarray(vals, dtype=np.float64)

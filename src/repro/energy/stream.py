@@ -1,0 +1,58 @@
+"""Price streams: the runtime-facing interface to a market.
+
+A ``PriceStream`` replays a (real or synthetic) hourly series at an
+arbitrary simulated clock rate and exposes the trailing window the
+``EnergyAwareScheduler`` needs to re-estimate the PV set online. It is
+plain Python (host-side control plane) — device code never sees prices.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class PriceStream:
+    """Replays a price series with a trailing-window view.
+
+    Parameters
+    ----------
+    prices : array [n]
+        hourly price samples (EUR/MWh).
+    window : int
+        trailing window length used for online PV estimation.
+    start : int
+        starting index into the series.
+    """
+
+    def __init__(self, prices, window: int = 24 * 28, start: int = 0):
+        self.prices = np.asarray(prices, dtype=np.float64)
+        if self.prices.ndim != 1 or self.prices.shape[0] < 2:
+            raise ValueError("prices must be a 1-D series")
+        self.window = int(window)
+        self._start = int(start)
+        self._hours = 0.0            # fractional hours accumulate exactly
+
+    @property
+    def pos(self) -> int:
+        return self._start + int(self._hours)
+
+    def current(self) -> float:
+        return float(self.prices[self.pos % len(self.prices)])
+
+    def trailing(self) -> np.ndarray:
+        """The trailing ``window`` samples ending at the current hour."""
+        n = len(self.prices)
+        idx = (np.arange(self.pos - self.window + 1, self.pos + 1)) % n
+        return self.prices[idx]
+
+    def advance(self, hours: float = 1.0) -> None:
+        """Advance simulated time; sub-hour ticks accumulate without loss
+        (a 0.02 h serving tick still crosses hour boundaries on time)."""
+        self._hours += float(hours)
+
+    def peek(self, horizon: int) -> np.ndarray:
+        """Day-ahead style lookahead (spot markets publish next-day prices
+        at ~13:00; the scheduler may use up to `horizon` future samples)."""
+        n = len(self.prices)
+        idx = (np.arange(self.pos + 1, self.pos + 1 + horizon)) % n
+        return self.prices[idx]

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` of kernels/).
+
+These are *direct* (non-blocked) implementations — O(S^2) score tensors,
+materialised state sequences — used only by tests and never by the model
+(the model's own XLA path is the separately-implemented blockwise form in
+`repro.models.attention` / `repro.models.ssm`, giving three independent
+implementations that must agree).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  q_offset: int = 0) -> jax.Array:
+    """q: [B,Sq,H,Dh]; k,v: [B,Skv,G,Dh]; GQA by head repetition."""
+    b, sq, h, dh = q.shape
+    skv, g = k.shape[1], k.shape[2]
+    rep = h // g
+    kh = jnp.repeat(k, rep, axis=2)
+    vh = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kh.astype(jnp.float32)) * dh ** -0.5
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vh.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         valid: jax.Array) -> jax.Array:
+    """q: [B,1,H,Dh]; k,v: [B,W,G,Dh]; valid: [B,W] bool."""
+    b, _, h, dh = q.shape
+    g = k.shape[2]
+    rep = h // g
+    kh = jnp.repeat(k, rep, axis=2)
+    vh = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kh.astype(jnp.float32)) * dh ** -0.5
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vh.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array,
+            b: jax.Array, c: jax.Array,
+            h0: Optional[jax.Array] = None
+            ) -> tuple[jax.Array, jax.Array]:
+    """Sequential (unchunked) SSD recurrence — the ground-truth oracle.
+
+    x: [B,S,H,P]; dt: [B,S,H] (post-softplus); a: [H] (negative);
+    b,c: [B,S,G,N]; h0: [B,H,P,N] or None.
+    Returns y: [B,S,H,P] (f32), h_last: [B,H,P,N] (f32).
+
+        h_t = h_{t-1} * exp(dt_t a) + dt_t x_t b_t^T ;  y_t = h_t c_t
+    """
+    bsz, s, nh, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = nh // g
+    bh = jnp.repeat(b, rep, axis=2).astype(jnp.float32)   # [B,S,H,N]
+    ch = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp          # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        decay = jnp.exp(dt_t * a[None, :])                 # [B,H]
+        upd = jnp.einsum("bh,bhp,bhn->bhpn", dt_t, x_t, b_t)
+        h = h * decay[..., None, None] + upd
+        y_t = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y_t
+
+    h_init = jnp.zeros((bsz, nh, p, n), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+    h_last, ys = jax.lax.scan(
+        step, h_init,
+        (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+         bh.swapaxes(0, 1), ch.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), h_last

@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape) cell and both production meshes
+(16x16 single-pod, 2x16x16 multi-pod), this driver
+
+  1. builds the cell's step function with production shardings
+     (`repro.launch.steps`),
+  2. ``jax.jit(...).lower(**ShapeDtypeStruct inputs)`` — no allocation,
+  3. ``.compile()`` — GSPMD partitioning + backend compilation; sharding
+     mismatches, non-divisible layouts and unsupported collectives fail
+     HERE, which is exactly what the dry-run exists to catch,
+  4. records ``compiled.memory_analysis()`` (the fits-in-HBM proof),
+     raw ``cost_analysis()``, and the structural HLO analysis
+     (`repro.launch.hlo_analysis` — loop-aware FLOPs / bytes / collective
+     bytes) into a JSON artifact per cell.
+
+Artifacts land in benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json
+and feed §Roofline (benchmarks/roofline.py) and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b
+  PYTHONPATH=src python -m repro.launch.dryrun --shape train_4k --mesh pod
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import (SHAPES, cell_skip_reason, get_config,
+                                list_archs)
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import describe, make_production_mesh
+from repro.launch.steps import build_step
+from repro.parallel.axes import use_sharding
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "artifacts" / "dryrun"
+
+# TPU v5e
+HBM_PER_CHIP = 16 * 2 ** 30
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             out_dir: Path, overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "mesh_shape": dict(mesh.shape), "kind": shape.kind}
+    t0 = time.time()
+    try:
+        fn, args, rules = build_step(cfg, shape, mesh)
+        with use_sharding(mesh, rules):
+            lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            # donated args alias outputs; peak live set per device:
+            "peak_bytes": int(ma.argument_size_in_bytes
+                              + ma.temp_size_in_bytes
+                              + ma.output_size_in_bytes
+                              - ma.alias_size_in_bytes),
+            "hbm_per_chip": HBM_PER_CHIP,
+        }
+        # XLA CPU float-normalises bf16 compute to f32, so temp buffers for
+        # bf16 models measure ~2x what a TPU run would allocate. Report
+        # both the raw CPU peak and the TPU-adjusted estimate (temp halved
+        # for bf16 models; arguments/outputs use real dtypes either way).
+        temp_adj = (rec["memory"]["temp_bytes"] // 2
+                    if cfg.dtype == "bfloat16"
+                    else rec["memory"]["temp_bytes"])
+        rec["memory"]["peak_bytes_tpu_est"] = int(
+            rec["memory"]["argument_bytes"] + temp_adj
+            + rec["memory"]["output_bytes"]
+            - rec["memory"]["alias_bytes"])
+        rec["fits"] = rec["memory"]["peak_bytes"] <= HBM_PER_CHIP
+        rec["fits_tpu_est"] = \
+            rec["memory"]["peak_bytes_tpu_est"] <= HBM_PER_CHIP
+
+        try:
+            ca = compiled.cost_analysis() or {}
+            rec["cost_analysis_raw"] = {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            }
+        except Exception:                        # pragma: no cover
+            rec["cost_analysis_raw"] = None
+
+        f32_as = 2.0 if cfg.dtype == "bfloat16" else 4.0
+        rep = analyze(compiled.as_text(), n_devices=mesh.size,
+                      f32_as=f32_as)
+        rec["hlo"] = rep.as_dict()
+        rec["hlo"]["f32_counted_as_bytes"] = f32_as
+        rec["ok"] = True
+    except Exception as e:                       # the dry-run's job is to
+        rec["ok"] = False                        # surface these
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{arch}__{shape_name}.json").write_text(
+        json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one architecture id")
+    ap.add_argument("--shape", default=None, help="one shape name")
+    ap.add_argument("--mesh", default="both",
+                    choices=["both", "pod", "multipod"])
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (hillclimbs)")
+    ap.add_argument("--tag", default="",
+                    help="artifact subdirectory suffix (hillclimbs)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = []
+    if args.mesh in ("both", "pod"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("both", "multipod"):
+        meshes.append(("pod2x16x16", make_production_mesh(multi_pod=True)))
+
+    n_fail = 0
+    for mesh_name, mesh in meshes:
+        out_dir = Path(args.out) / (mesh_name + args.tag)
+        print(f"=== mesh {describe(mesh)} -> {out_dir}")
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                skip = cell_skip_reason(cfg, SHAPES[shape_name])
+                if skip:
+                    print(f"  SKIP {arch} x {shape_name}: {skip}")
+                    continue
+                rec = run_cell(arch, shape_name, mesh, mesh_name, out_dir,
+                               overrides or None)
+                if rec["ok"]:
+                    mem = rec["memory"]
+                    print(f"  OK   {arch} x {shape_name}: "
+                          f"lower {rec['lower_s']}s compile "
+                          f"{rec['compile_s']}s  peak/dev "
+                          f"{mem['peak_bytes'] / 2**30:.2f} GiB "
+                          f"(fits={rec['fits']})  flops/dev "
+                          f"{rec['hlo']['flops']:.2e}")
+                else:
+                    n_fail += 1
+                    print(f"  FAIL {arch} x {shape_name}: {rec['error']}")
+    print(f"done; {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

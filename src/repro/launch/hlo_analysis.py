@@ -1,0 +1,436 @@
+"""Structural analysis of compiled (post-SPMD) HLO text.
+
+Why this exists: `compiled.cost_analysis()` visits each instruction once —
+a `lax.scan` body (layers, attention KV chunks, SSD chunks, loss chunks)
+is counted a single time regardless of trip count, which under-reports a
+48-layer model's FLOPs by ~48x. This module re-derives the roofline terms
+*structurally*: it parses the HLO module into computations, walks the call
+graph (fusions, while bodies, conditionals) with multiplicities — a while
+body's multiplicity is its trip count, recovered from the loop-condition
+comparison constant — and accumulates:
+
+  flops             2*M*N*K for dots (+ elementwise/reduce at 1 flop/elem)
+  bytes             per-kernel HBM traffic: operands + results of every
+                    top-level (non-fusion-internal) instruction; dynamic
+                    slices (incl. inside fusions) charge the slice, not the
+                    sliced operand — otherwise a scan over stacked layer
+                    weights would count the whole stack every iteration
+  collectives       per-kind operand bytes and estimated on-wire bytes
+                    (ring terms: all-reduce 2(g-1)/g, all-gather /
+                    reduce-scatter (g-1)/g of payload), with replica-group
+                    sizes parsed per op
+
+All quantities are per-device (the module is the SPMD program one device
+runs). Validated against analytic FLOP counts in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m3": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OPCODE_RE = re.compile(r"([\w\-]+)\((.*)$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls=|body=|condition=|to_apply=)%([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# elementwise-ish ops counted at 1 flop per output element
+_EW_OPS = frozenset("""
+add subtract multiply divide maximum minimum power remainder and or xor not
+negate abs sign exponential exponential-minus-one log log-plus-one sqrt
+rsqrt cbrt tanh sine cosine tan atan2 erf logistic floor ceil round-nearest-afz
+round-nearest-even compare select clamp convert is-finite shift-left
+shift-right-arithmetic shift-right-logical popcnt clz
+""".split())
+
+
+def _shape_bytes(type_str: str, f32_as: float = 4.0) -> float:
+    """Total bytes of a (possibly tuple) HLO type string.
+
+    ``f32_as``: bytes charged per f32 element. The XLA *CPU* backend
+    float-normalises bf16 arithmetic to f32, so activation tensors that
+    would be bf16 on TPU appear as f32 in the compiled module; passing
+    f32_as=2.0 restores TPU-dtype accounting for bf16 models (params that
+    stay bf16 in the module are counted at 2 B/elem either way; genuinely-
+    f32 tensors — loss scalars, SSD states, norm internals — are small).
+    """
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * (f32_as if dt == "f32" else _DTYPE_BYTES[dt])
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _result_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                       # operand list + attributes (raw text)
+    operands: list[str]             # %refs into the same computation
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    is_entry: bool = False
+
+    def by_name(self) -> dict[str, Instr]:
+        return {i.name: i for i in self.instrs}
+
+
+_OPERAND_REF_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _parse_instr_line(line: str) -> Optional[Instr]:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3:]
+    # result type: balanced parens for tuple types (they may contain
+    # /*index=N*/ comments); up to the first space otherwise
+    if rest.startswith("("):
+        depth, end = 0, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        type_str, tail = rest[:end], rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, tail = rest[:sp], rest[sp + 1:].lstrip()
+    m = _OPCODE_RE.match(tail)
+    if not m:
+        return None
+    opcode, args = m.groups()
+    op_part = args.split("), ")[0] if "), " in args else args
+    operands = _OPERAND_REF_RE.findall(op_part)
+    return Instr(name, type_str.strip(), opcode, args, operands)
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{",
+                         line)
+            if m:
+                cur = Computation(m.group(2), [], is_entry=bool(m.group(1)))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        ins = _parse_instr_line(line)
+        if ins is not None:
+            cur.instrs.append(ins)
+    return comps
+
+
+def _trip_count(cond: Computation, comps: dict[str, Computation]) -> int:
+    """Trip count of a while loop: the largest integer constant reachable
+    in its condition computation (jax scans compare the induction variable
+    against the static length)."""
+    best = 1
+    stack, seen = [cond.name], set()
+    while stack:
+        cname = stack.pop()
+        if cname in seen or cname not in comps:
+            continue
+        seen.add(cname)
+        for ins in comps[cname].instrs:
+            if ins.opcode == "constant":
+                cm = re.match(r"(\d+)\)", ins.rest)
+                if cm:
+                    best = max(best, int(cm.group(1)))
+            for c in _CONST_RE.findall(ins.rest):
+                best = max(best, int(c))
+            for ref in _CALL_ATTR_RE.findall(ins.rest):
+                stack.append(ref)
+    return best
+
+
+def _call_multiplicities(comps: dict[str, Computation]) -> dict[str, float]:
+    """Execution count of every computation, walking from ENTRY."""
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:                            # fallback: last computation
+        entry = list(comps.values())[-1]
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry.name] = 1.0
+    # topological-ish: process repeatedly until stable (call graph is a DAG)
+    for _ in range(64):
+        changed = False
+        new = {c: 0.0 for c in comps}
+        new[entry.name] = 1.0
+        for cname, comp in comps.items():
+            m = mult[cname]
+            if m == 0.0:
+                continue
+            for ins in comp.instrs:
+                if ins.opcode == "while":
+                    body = re.search(r"body=%([\w\.\-]+)", ins.rest)
+                    cond = re.search(r"condition=%([\w\.\-]+)", ins.rest)
+                    if body and cond and cond.group(1) in comps:
+                        trips = _trip_count(comps[cond.group(1)], comps)
+                        new[body.group(1)] = new.get(body.group(1), 0.0) \
+                            + m * trips
+                        new[cond.group(1)] = new.get(cond.group(1), 0.0) \
+                            + m * (trips + 1)
+                    continue
+                bm = _BRANCH_RE.search(ins.rest)
+                if bm:
+                    for ref in _OPERAND_REF_RE.findall(bm.group(1)):
+                        new[ref] = new.get(ref, 0.0) + m  # upper bound
+                    continue
+                for ref in _CALL_ATTR_RE.findall(ins.rest):
+                    if ref in comps:
+                        new[ref] = new.get(ref, 0.0) + m
+        if new == mult:
+            break
+        mult = new
+        changed = True
+    return mult
+
+
+def _dot_flops(ins: Instr, table: dict[str, Instr]) -> float:
+    out = 1
+    for d in _result_dims(ins.type_str):
+        out *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    if not m:
+        return 2.0 * out
+    lhs = table.get(ins.operands[0]) if ins.operands else None
+    if lhs is None:
+        return 2.0 * out
+    ldims = _result_dims(lhs.type_str)
+    k = 1
+    if m.group(1):
+        for d in m.group(1).split(","):
+            k *= ldims[int(d)] if int(d) < len(ldims) else 1
+    return 2.0 * out * k
+
+
+_SKIP_BYTES_OPS = frozenset(
+    ("parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+     "after-all", "iota", "while", "conditional", "custom-call"))
+
+
+def _fusion_bytes(ins: Instr, table: dict[str, Instr],
+                  comps: dict[str, Computation],
+                  f32_as: float = 4.0) -> float:
+    """Fusion HBM traffic: result + operands; an operand consumed *only*
+    through dynamic-slice inside the fusion charges the slice size."""
+    total = _shape_bytes(ins.type_str, f32_as)
+    callee = None
+    m = re.search(r"calls=%([\w\.\-]+)", ins.rest)
+    if m and m.group(1) in comps:
+        callee = comps[m.group(1)]
+    sliced_params: dict[int, float] = {}
+    if callee is not None:
+        params: dict[str, int] = {}
+        uses: dict[str, list[Instr]] = {}
+        for cin in callee.instrs:
+            if cin.opcode == "parameter":
+                pm = re.match(r"(\d+)", cin.rest)
+                if pm:
+                    params[cin.name] = int(pm.group(1))
+            for op in cin.operands:
+                uses.setdefault(op, []).append(cin)
+        for pname, pidx in params.items():
+            us = uses.get(pname, [])
+            if us and all(u.opcode == "dynamic-slice" and
+                          u.operands and u.operands[0] == pname
+                          for u in us):
+                sliced_params[pidx] = sum(_shape_bytes(u.type_str, f32_as)
+                                          for u in us)
+    for i, op in enumerate(ins.operands):
+        src = table.get(op)
+        if src is None:
+            continue
+        if i in sliced_params:
+            total += sliced_params[i]
+        else:
+            total += _shape_bytes(src.type_str, f32_as)
+    return total
+
+
+@dataclasses.dataclass
+class HLOReport:
+    flops: float = 0.0                       # per device
+    bytes_accessed: float = 0.0              # per device (HBM estimate)
+    collective_payload: dict = dataclasses.field(default_factory=dict)
+    collective_wire: dict = dataclasses.field(default_factory=dict)
+    collective_count: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_collective_payload(self) -> float:
+        return sum(self.collective_payload.values())
+
+    @property
+    def total_collective_wire(self) -> float:
+        return sum(self.collective_wire.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes_accessed": self.bytes_accessed,
+            "collective_payload_bytes": dict(self.collective_payload),
+            "collective_wire_bytes": dict(self.collective_wire),
+            "collective_counts": dict(self.collective_count),
+            "total_collective_payload": self.total_collective_payload,
+            "total_collective_wire": self.total_collective_wire,
+        }
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,      # applied to the *result*
+    "reduce-scatter": lambda g: (g - 1) / g,  # applied to the operand
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def analyze(text: str, n_devices: int = 1,
+            f32_as: float = 4.0) -> HLOReport:
+    comps = parse_module(text)
+    mult = _call_multiplicities(comps)
+    rep = HLOReport()
+    # computations reachable only as fusion callees contribute flops with
+    # their own multiplicity; bytes are charged at the fusion *call site*.
+    fusion_callees = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                m = re.search(r"calls=%([\w\.\-]+)", ins.rest)
+                if m:
+                    fusion_callees.add(m.group(1))
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        table = comp.by_name()
+        in_fusion = comp.name in fusion_callees
+        for ins in comp.instrs:
+            # ---- flops (everywhere, incl. fusion bodies) ----------------
+            if ins.opcode == "dot":
+                rep.flops += m * _dot_flops(ins, table)
+            elif ins.opcode == "convolution":
+                out = _shape_elems(ins.type_str)
+                rep.flops += m * 2.0 * out      # stub frontends: negligible
+            elif ins.opcode in _EW_OPS:
+                rep.flops += m * _shape_elems(ins.type_str)
+            elif ins.opcode in ("reduce", "reduce-window"):
+                src = table.get(ins.operands[0]) if ins.operands else None
+                rep.flops += m * (_shape_elems(src.type_str) if src else 0)
+            # ---- bytes (top-level instructions only) --------------------
+            if not in_fusion and ins.opcode not in _SKIP_BYTES_OPS:
+                if ins.opcode == "fusion":
+                    rep.bytes_accessed += m * _fusion_bytes(ins, table,
+                                                            comps, f32_as)
+                elif ins.opcode in ("dynamic-slice", "gather"):
+                    rep.bytes_accessed += m * 2 * _shape_bytes(
+                        ins.type_str, f32_as)
+                elif ins.opcode == "dynamic-update-slice":
+                    upd = (table.get(ins.operands[1])
+                           if len(ins.operands) > 1 else None)
+                    rep.bytes_accessed += m * 2 * (
+                        _shape_bytes(upd.type_str, f32_as) if upd else 0.0)
+                else:
+                    total = _shape_bytes(ins.type_str, f32_as)
+                    for op in ins.operands:
+                        src = table.get(op)
+                        if src is not None and src.opcode not in (
+                                "constant",):
+                            total += _shape_bytes(src.type_str, f32_as)
+                    rep.bytes_accessed += m * total
+            # ---- collectives --------------------------------------------
+            if ins.opcode in COLLECTIVE_OPS or (
+                    ins.opcode.endswith("-start")
+                    and ins.opcode[:-6] in COLLECTIVE_OPS):
+                kind = (ins.opcode[:-6] if ins.opcode.endswith("-start")
+                        else ins.opcode)
+                g = _group_size(ins.rest, n_devices)
+                if kind == "all-gather":
+                    payload = _shape_bytes(ins.type_str, f32_as)  # result
+                else:
+                    payload = 0.0
+                    for op in ins.operands:
+                        src = table.get(op)
+                        if src is not None:
+                            payload += _shape_bytes(src.type_str, f32_as)
+                    if payload == 0.0:
+                        payload = _shape_bytes(ins.type_str, f32_as)
+                wire = payload * _WIRE_FACTOR[kind](max(g, 2))
+                rep.collective_payload[kind] = \
+                    rep.collective_payload.get(kind, 0.0) + m * payload
+                rep.collective_wire[kind] = \
+                    rep.collective_wire.get(kind, 0.0) + m * wire
+                rep.collective_count[kind] = \
+                    rep.collective_count.get(kind, 0) + m
+    return rep

@@ -1,0 +1,264 @@
+"""Jitted step functions with production shardings, for every cell kind.
+
+`build_step(cfg, shape, mesh)` returns (jitted_fn, abstract_args, rules):
+
+  train    -> train_step(params, opt_state, batch) -> (params', opt', loss)
+              full step: loss + grad (remat inside) + AdamW update
+  prefill  -> prefill_step(params, batch) -> (logits, caches)
+  decode   -> serve_step(params, tokens, caches, positions)
+              -> (logits, caches')
+
+Rules are chosen per family and shape (DESIGN.md §5):
+
+  * attention families train/prefill with Megatron SP (seq over `model`
+    between blocks); SSM/hybrid keep seq unsharded (the SSD chunk scan is
+    sequential in seq — sharding it would serialise GSPMD);
+  * decode uses batch-only activation sharding with KV caches sharded over
+    `model` (cache positions);
+  * `long_500k` (global_batch=1) cannot shard batch: a dedicated rule set
+    shards cache positions / heads instead.
+
+Argument shardings are *sanitised*: a mesh axis that does not divide the
+dim (e.g. vocab 50280 over model=16, or 40 query heads over 16) is dropped
+for that input leaf — jit requires divisible argument shardings, while
+internal `with_sharding_constraint`s may stay uneven (GSPMD pads).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.configs.inputs import input_specs
+from repro.models.model import (cache_specs, decode_step, init_params,
+                                loss_fn, param_specs, prefill)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.parallel.axes import (DECODE_RULES, LogicalRules,
+                                 SSM_PREFILL_RULES, TRAIN_RULES,
+                                 logical_to_spec)
+
+LONGCTX_RULES: LogicalRules = dict(DECODE_RULES, batch=None)
+# optimizer moments: ZeRO-1 over the pod axis on top of fsdp — moments are
+# touched once per step, so the cross-DCN gather/scatter happens once per
+# step (vs per-layer for weights). Halves per-chip optimizer state on the
+# multi-pod mesh (grok-1-314b's largest state tensor).
+MOMENT_RULES: LogicalRules = dict(TRAIN_RULES, embed_p=("pod", "data"))
+# aligned-cache decode: KV heads shard evenly over `model`, cache
+# positions stay local -> the rolling-slot update is collective-free
+DECODE_HEADS_RULES: LogicalRules = dict(DECODE_RULES, cache_seq=None)
+LONGCTX_HEADS_RULES: LogicalRules = dict(DECODE_HEADS_RULES, batch=None)
+
+
+def rules_for(cfg: ModelConfig, shape: ShapeSpec,
+              tp: int = 16) -> LogicalRules:
+    if shape.kind == "decode":
+        heads_even = (cfg.n_heads and cfg.cache_heads % tp == 0
+                      and cfg.n_heads % cfg.cache_heads == 0)
+        # batch must divide the dp submesh; long_500k has batch 1
+        if shape.global_batch < 32:
+            return LONGCTX_HEADS_RULES if heads_even else LONGCTX_RULES
+        return DECODE_HEADS_RULES if heads_even else DECODE_RULES
+    if cfg.family in ("ssm", "hybrid"):
+        if shape.kind == "train":
+            # seq sharded at block boundaries: the SSD chunk scan gathers
+            # the sequence *inside* the (rematted) block, so gathered
+            # tensors are recomputed, never stored — the 48 layer-boundary
+            # checkpoints stay seq-sharded (16x smaller live set)
+            return TRAIN_RULES
+        return SSM_PREFILL_RULES
+    return TRAIN_RULES
+
+
+def _sanitize(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim."""
+    out = []
+    for i, axes in enumerate(spec):
+        if axes is None:
+            out.append(None)
+            continue
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        keep = []
+        size = shape[i] if i < len(shape) else 1
+        for a in axes_t:
+            if a not in mesh.shape:
+                continue
+            n = mesh.shape[a]
+            if size % n == 0:
+                keep.append(a)
+                size //= n
+        out.append(tuple(keep) if len(keep) > 1
+                   else (keep[0] if keep else None))
+    return P(*out)
+
+
+def shardings_for(tree_specs: Any, tree_abstract: Any, mesh: Mesh,
+                  rules: LogicalRules) -> Any:
+    """Logical-axes pytree -> sanitized NamedSharding pytree."""
+    def f(axes, leaf):
+        spec = logical_to_spec(axes, rules, mesh)
+        spec = _sanitize(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(f, tree_specs, tree_abstract,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and all(isinstance(e, (str, type(None)))
+                                for e in x))
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt_state(cfg: ModelConfig, opt: AdamWConfig) -> Any:
+    aparams = abstract_params(cfg)
+    return jax.eval_shape(lambda: adamw_init(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), aparams), opt))
+
+
+def _batch_shardings(batch_abstract: dict, mesh: Mesh,
+                     rules: LogicalRules) -> dict:
+    def f(leaf):
+        axes = ("batch",) + (None,) * (leaf.ndim - 1)
+        spec = _sanitize(logical_to_spec(axes, rules, mesh), leaf.shape,
+                         mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(f, batch_abstract)
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig):
+    """Full production train step: loss -> grad (remat inside) -> AdamW.
+
+    ``cfg.train_microbatches > 1`` accumulates gradients over microbatch
+    slices of the global batch (f32 accumulator) — activation live-set
+    scales 1/n while data order and loss are unchanged. This is what lets
+    grok-1-314b train on 256 x 16 GiB chips at global batch 256 x 4k.
+    """
+    n_micro = cfg.train_microbatches
+
+    def grad_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, mb, cfg), has_aux=True)(params)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            grads, metrics = grad_of(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_micro, x.shape[0] // n_micro)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            acc_dt = {"float32": jnp.float32,
+                      "bfloat16": jnp.bfloat16}[cfg.grad_accum_dtype]
+
+            def acc_fn(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grad_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  + b.astype(jnp.float32)).astype(acc_dt),
+                    g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, m_acc), None
+
+            zeros_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            zeros_m = jax.eval_shape(lambda: grad_of(params, jax.tree.map(
+                lambda t: t[0], micro))[1])
+            zeros_m = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                   zeros_m)
+            (grads, msum), _ = jax.lax.scan(acc_fn, (zeros_g, zeros_m),
+                                            micro)
+            # stay in acc_dt: AdamW upcasts per-leaf (transient), so a
+            # whole-tree f32 copy here would be the largest live tensor
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) / n_micro).astype(g.dtype),
+                grads)
+            metrics = jax.tree.map(lambda m: m / n_micro, msum)
+        new_params, new_opt, stats = adamw_update(grads, opt_state, params,
+                                                  opt)
+        return new_params, new_opt, {**metrics, **stats}
+    return train_step
+
+
+def build_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, *,
+               opt: Optional[AdamWConfig] = None, donate: bool = True):
+    """Returns (jitted_fn, args_tuple, rules). ``args_tuple`` leaves are
+    ShapeDtypeStructs with .sharding set — ready for .lower(*args)."""
+    rules = rules_for(cfg, shape, tp=mesh.shape.get("model", 1))
+    ins = input_specs(cfg, shape)
+    aparams = abstract_params(cfg)
+    pshard = shardings_for(param_specs(aparams), aparams, mesh, rules)
+
+    def attach(tree, shards):
+        return jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            tree, shards)
+
+    if shape.kind == "train":
+        opt = opt or AdamWConfig(moment_dtype=cfg.moment_dtype)
+        aopt = abstract_opt_state(cfg, opt)
+        # NOTE: pod-sharded moments (MOMENT_RULES, ZeRO-1 over DCN) were
+        # measured and REFUTED as a pure-GSPMD change: the partitioner
+        # replicates the f32 update instead of slicing (§Perf G4). A
+        # hand-rolled shard_map optimizer step would be required.
+        oshard = type(aopt)(
+            step=NamedSharding(mesh, P()),
+            mu=shardings_for(param_specs(aopt.mu), aopt.mu, mesh, rules),
+            nu=shardings_for(param_specs(aopt.nu), aopt.nu, mesh, rules))
+        bshard = _batch_shardings(ins["batch"], mesh, rules)
+        fn = jax.jit(
+            make_train_step(cfg, opt),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, None),
+            donate_argnums=(0, 1) if donate else ())
+        args = (attach(aparams, pshard), attach(aopt, oshard),
+                attach(ins["batch"], bshard))
+        return fn, args, rules
+
+    if shape.kind == "prefill":
+        bshard = _batch_shardings(ins["batch"], mesh, rules)
+        cshard = shardings_for(cache_specs(cfg),
+                               _abstract_caches(cfg, shape), mesh, rules)
+
+        def prefill_step(params, batch):
+            return prefill(params, batch, cfg, seq_sharded=
+                           cfg.family not in ("ssm", "hybrid"))
+
+        fn = jax.jit(prefill_step,
+                     in_shardings=(pshard, bshard),
+                     out_shardings=(None, cshard))
+        args = (attach(aparams, pshard), attach(ins["batch"], bshard))
+        return fn, args, rules
+
+    if shape.kind == "decode":
+        acaches = ins["caches"]
+        cshard = shardings_for(cache_specs(cfg), acaches, mesh, rules)
+        tshard = _batch_shardings(
+            {"t": ins["tokens"], "p": ins["positions"]}, mesh, rules)
+
+        def serve_step(params, tokens, caches, positions):
+            return decode_step(params, tokens, caches, positions, cfg)
+
+        fn = jax.jit(serve_step,
+                     in_shardings=(pshard, tshard["t"], cshard,
+                                   tshard["p"]),
+                     out_shardings=(None, cshard),
+                     donate_argnums=(2,) if donate else ())
+        args = (attach(aparams, pshard), attach(ins["tokens"], tshard["t"]),
+                attach(acaches, cshard),
+                attach(ins["positions"], tshard["p"]))
+        return fn, args, rules
+
+    raise ValueError(shape.kind)
+
+
+def _abstract_caches(cfg: ModelConfig, shape: ShapeSpec):
+    from repro.models.model import init_cache
+    return init_cache(cfg, shape.global_batch, shape.seq_len, abstract=True)

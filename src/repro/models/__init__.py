@@ -1,0 +1,19 @@
+from repro.models.model import (
+    init_params,
+    loss_fn,
+    prefill,
+    decode_step,
+    init_cache,
+    cache_specs,
+    param_specs,
+)
+
+__all__ = [
+    "init_params",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "cache_specs",
+    "param_specs",
+]

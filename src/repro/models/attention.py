@@ -1,0 +1,396 @@
+"""Attention: GQA with RoPE, optional QKV bias, sliding windows, caches.
+
+Full-sequence attention (train / prefill) uses a *blockwise online-softmax*
+formulation — the XLA expression of FlashAttention: query chunks via
+`lax.map`, kv chunks via `lax.scan` carrying (max, denom, acc) in f32. Peak
+memory is O(q_chunk * kv_chunk) per head instead of O(S^2); the Pallas
+kernel in `repro.kernels.flash_attention` implements the same tiling for
+TPU VMEM and is numerically interchangeable (cfg.attn_impl = 'pallas').
+
+GQA layout note (TPU/GSPMD): query heads are ordered grouped
+(h = g * rep + j), so a model-axis shard of q heads maps to a single kv
+group whenever model_parallelism >= n_kv_heads — the Megatron GQA layout
+that keeps attention collective-free under tensor parallelism.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dtype, apply_rope, normal_init
+from repro.parallel.axes import constrain
+
+NEG_INF = -2.0 ** 30  # large-negative instead of -inf: avoids NaNs from
+                      # (-inf) - (-inf) in fully-masked online-softmax rows
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (chunk sizes must tile
+    the sequence exactly; e.g. whisper's enc_seq=1500 with cap 512 -> 500)."""
+    cap = min(cap, n)
+    for c in range(cap, 0, -1):
+        if n % c == 0:
+            return c
+    return n
+
+
+class AttnCache(NamedTuple):
+    """Decode-time KV cache. ``k``/``v``: [B, W, G, Dh] (W = window or
+    max_seq); ``pos_buf``: [B, W] absolute position per slot (-1 = empty),
+    which makes rolling (SWA) and linear caches uniform.
+
+    With ``cfg.kv_cache_dtype == "int8"`` (beyond-paper serving
+    optimisation), k/v hold per-(token, head) absmax-scaled int8 and
+    ``k_scale``/``v_scale`` [B, W, G] f32 carry the scales. Attention
+    never materialises a dequantised cache: the k-scale multiplies the
+    *scores* and the v-scale folds into the softmax weights."""
+
+    k: jax.Array
+    v: jax.Array
+    pos_buf: jax.Array
+    k_scale: Any = None
+    v_scale: Any = None
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Absmax int8 over the trailing (head_dim) axis.
+    x: [..., Dh] -> (int8 [..., Dh], f32 scale [...])."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / safe[..., None]), -127, 127) \
+        .astype(jnp.int8)
+    return q, scale
+
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False,
+                   n_layers_scale: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    h, g, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    pdt = _dtype(cfg.param_dtype)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    depth = n_layers_scale or cfg.n_layers
+    p = {
+        "wq": normal_init(kq, (d, h, dh), 0.02, pdt),
+        "wk": normal_init(kk, (d, g, dh), 0.02, pdt),
+        "wv": normal_init(kv, (d, g, dh), 0.02, pdt),
+        "wo": normal_init(ko, (h, dh, d), 0.02 / (2 * depth) ** 0.5, pdt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h, dh), pdt)
+        p["bk"] = jnp.zeros((g, dh), pdt)
+        p["bv"] = jnp.zeros((g, dh), pdt)
+    return p
+
+
+def _project_qkv(x, x_kv, p, cfg: ModelConfig):
+    cdt = _dtype(cfg.dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dgk->bsgk", x_kv, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dgk->bsgk", x_kv, p["wv"].astype(cdt))
+    if "bq" in p:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# blockwise online-softmax attention (XLA flash)
+# ---------------------------------------------------------------------------
+
+def _tp_align_heads(q, k, v):
+    """Align head counts to the tensor-parallel width (Megatron GQA layout).
+
+    GSPMD shards the head dim of q ([B,S,H,Dh]) and kv ([B,S,G,Dh]) over
+    ``model``. When G < TP or TP does not divide H, the partitioner falls
+    back to "involuntary full rematerialization" (replicating whole
+    tensors inside the attention loops — observed as per-kv-step GiB-scale
+    all-gathers on grok-1). Alignment rules, all mathematically exact:
+
+      * H, G both divisible by TP: untouched.
+      * H divisible, TP divisible by G: replicate kv heads to TP
+        (adjacent duplication keeps the grouped q->kv mapping).
+      * otherwise: MHA-ize (replicate kv to H) and zero-pad both to the
+        next multiple of TP; the caller slices padded q heads off, so
+        dead heads never reach the output projection.
+
+    Returns (q, k, v, h_orig) — caller slices [..., :h_orig, :].
+    """
+    from repro.parallel.axes import axis_size
+    tp = axis_size("model")
+    h, g = q.shape[-2], k.shape[-2]
+    if tp <= 1 or (h % tp == 0 and g % tp == 0):
+        return q, k, v, h
+    if h % tp == 0 and tp % g == 0 and g < tp:
+        rep = tp // g
+        return q, jnp.repeat(k, rep, axis=-2), \
+            jnp.repeat(v, rep, axis=-2), h
+    rep = h // g
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=-2)
+        v = jnp.repeat(v, rep, axis=-2)
+    h_pad = -(-h // tp) * tp
+    if h_pad != h:
+        pad = [(0, 0)] * (q.ndim - 2) + [(0, h_pad - h), (0, 0)]
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    return q, k, v, h
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        cfg: ModelConfig, *, causal: bool,
+                        window: int = 0,
+                        q_offset: int = 0) -> jax.Array:
+    """q: [B, Sq, H, Dh]; k, v: [B, Skv, G, Dh]; returns [B, Sq, H, Dh].
+
+    Grouped-query: q is viewed as [B, Sq, G, R, Dh] (R = H // G) so kv is
+    never materialised at H heads. kv chunks stream through a scan with an
+    f32 (m, l, acc) carry; q chunks via lax.map bound peak memory.
+    """
+    h_orig = q.shape[2]
+    q, k, v, _ = _tp_align_heads(q, k, v)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            bq=cfg.attn_q_chunk, bkv=cfg.attn_kv_chunk)
+        return out[:, :, :h_orig]
+
+    b, sq, h, dh = q.shape
+    skv, g = k.shape[1], k.shape[2]
+    r = h // g
+    qc = _largest_divisor(sq, cfg.attn_q_chunk)
+    kc = _largest_divisor(skv, cfg.attn_kv_chunk)
+    n_qc, n_kc = sq // qc, skv // kc
+
+    scale = dh ** -0.5
+    qg = q.reshape(b, sq, g, r, dh)
+    kv_pos = jnp.arange(skv)
+
+    def q_block(idx):
+        qi = jax.lax.dynamic_slice_in_dim(qg, idx * qc, qc, axis=1)
+        q_pos = q_offset + idx * qc + jnp.arange(qc)
+
+        def kv_step(carry, inputs):
+            m_prev, l_prev, acc = carry
+            kj, vj, pj = inputs                     # [b,kc,g,dh], pos [kc]
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= pj[None, :] <= q_pos[:, None]
+            if window:
+                mask &= pj[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + jnp.sum(p_, axis=-1)
+            pv = jnp.einsum("bgrqk,bkgd->bgrqd", p_.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        ks = k.reshape(b, n_kc, kc, g, dh).swapaxes(0, 1)
+        vs = v.reshape(b, n_kc, kc, g, dh).swapaxes(0, 1)
+        ps = kv_pos.reshape(n_kc, kc)
+        init = (jnp.full((b, g, r, qc), NEG_INF, jnp.float32),
+                jnp.zeros((b, g, r, qc), jnp.float32),
+                jnp.zeros((b, g, r, qc, dh), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (ks, vs, ps))
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        return out                                   # [b,g,r,qc,dh]
+
+    if n_qc == 1:
+        out = q_block(jnp.asarray(0))                   # [b,g,r,sq,dh]
+    else:
+        outs = jax.lax.map(q_block, jnp.arange(n_qc))   # [n_qc,b,g,r,qc,dh]
+        out = jnp.moveaxis(outs, 0, 3).reshape(b, g, r, sq, dh)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh)
+    return out.astype(q.dtype)[:, :, :h_orig]
+
+
+# ---------------------------------------------------------------------------
+# full attention layer (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def attention_layer(x: jax.Array, p: dict, cfg: ModelConfig, *,
+                    causal: bool = True,
+                    use_rope: bool = True,
+                    x_kv: Optional[jax.Array] = None,
+                    cache: Optional[AttnCache] = None,
+                    positions: Optional[jax.Array] = None,
+                    cross_kv: Optional[tuple] = None,
+                    window: Optional[int] = None,
+                    return_kv: bool = False,
+                    ) -> tuple[jax.Array, Optional[AttnCache]]:
+    """One attention layer.
+
+    Modes:
+      * full-sequence (cache=None): train / prefill; x: [B,S,D].
+      * decode (cache given): x: [B,1,D], positions: [B] absolute position
+        of the new token; returns the updated cache.
+      * cross attention: pass ``cross_kv=(k,v)`` precomputed from the
+        encoder (no cache update, no rope).
+    """
+    cdt = _dtype(cfg.dtype)
+    window = cfg.swa_window if window is None else window
+    b = x.shape[0]
+    h, g, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+        q = constrain(q, "batch", None, "heads", None)
+        if "bq" in p:
+            q = q + p["bq"].astype(cdt)
+        if x.shape[1] == 1:   # decode: q len 1, full enc kv, no mask
+            out = _decode_attention(q, k.astype(cdt), v.astype(cdt),
+                                    None, cfg)
+        else:
+            out = blockwise_attention(q, k, v, cfg, causal=False)
+        o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+        return o, None
+
+    x_kv = x if x_kv is None else x_kv
+    q, k, v = _project_qkv(x, x_kv, p, cfg)
+    # only pin head shardings that divide evenly; uneven head counts are
+    # aligned inside blockwise_attention (_tp_align_heads)
+    from repro.parallel.axes import axis_size
+    tp = axis_size("model")
+    if h % max(tp, 1) == 0:
+        q = constrain(q, "batch", None, "heads", None)
+    if g % max(tp, 1) == 0:
+        k = constrain(k, "batch", None, "kv_heads", None)
+        v = constrain(v, "batch", None, "kv_heads", None)
+
+    if cache is None:
+        s = x.shape[1]
+        pos = jnp.arange(s) if positions is None else positions
+        if use_rope:
+            q = apply_rope(q, jnp.broadcast_to(pos, (b, s)), cfg.rope_theta)
+            k = apply_rope(k, jnp.broadcast_to(pos, (b, s)), cfg.rope_theta)
+        out = blockwise_attention(q, k, v, cfg, causal=causal, window=window)
+        o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+        if return_kv:
+            # collected K/V feed the decode cache: shard them like the
+            # cache (positions over `model`) — at 32k prefill the stacked
+            # [L,B,S,G,Dh] collection is otherwise the largest live tensor
+            k = constrain(k, "batch", "cache_seq", None, None)
+            v = constrain(v, "batch", "cache_seq", None, None)
+            return o, (k, v)
+        return o, None
+
+    # ---- decode path -----------------------------------------------------
+    assert x.shape[1] == 1
+    pos = positions                                     # [B] int32
+    if use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    if cache.k.shape[2] != k.shape[2]:   # aligned cache: replicate kv heads
+        rep_c = cache.k.shape[2] // k.shape[2]
+        k = jnp.repeat(k, rep_c, axis=2)
+        v = jnp.repeat(v, rep_c, axis=2)
+    w = cache.k.shape[1]
+    slot = (pos % w).astype(jnp.int32)                  # rolling for SWA;
+    # for linear caches w == max_seq so slot == pos.
+
+    def upd(buf, new, sl):
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, sl, axis=0)
+
+    quant = cache.k_scale is not None
+    if quant:
+        kq, ks = quantize_kv(k)                          # [B,1,G,Dh],[B,1,G]
+        vq, vs = quantize_kv(v)
+        new_k = jax.vmap(upd)(cache.k, kq, slot)
+        new_v = jax.vmap(upd)(cache.v, vq, slot)
+        new_ks = jax.vmap(upd)(cache.k_scale, ks, slot)
+        new_vs = jax.vmap(upd)(cache.v_scale, vs, slot)
+    else:
+        new_k = jax.vmap(upd)(cache.k, k.astype(cache.k.dtype), slot)
+        new_v = jax.vmap(upd)(cache.v, v.astype(cache.v.dtype), slot)
+        new_ks = new_vs = None
+    new_pb = jax.vmap(
+        lambda pb, sl, pp: jax.lax.dynamic_update_slice_in_dim(
+            pb, pp[None], sl, axis=0))(cache.pos_buf, slot, pos)
+    new_cache = AttnCache(new_k, new_v, new_pb, k_scale=new_ks,
+                          v_scale=new_vs)
+
+    valid = (new_pb <= pos[:, None])
+    if window:
+        valid &= new_pb > (pos[:, None] - window)
+    valid &= new_pb >= 0
+    if quant:
+        out = _decode_attention(q, new_k, new_v, valid, cfg,
+                                k_scale=new_ks, v_scale=new_vs)
+    else:
+        out = _decode_attention(q, new_k.astype(cdt), new_v.astype(cdt),
+                                valid, cfg)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+    return o, new_cache
+
+
+def _decode_attention(q, k, v, valid, cfg: Optional[ModelConfig],
+                      k_scale=None, v_scale=None):
+    """q: [B,1,H,Dh]; k,v: [B,W,G,Dh]; valid: [B,W] bool or None.
+
+    With ``k_scale``/``v_scale`` ([B,W,G] f32), k/v are absmax int8: the
+    k-scale multiplies the scores and the v-scale folds into the softmax
+    weights — the dequantised cache is never materialised."""
+    if cfg is not None and cfg.attn_impl == "pallas" and k_scale is None:
+        from repro.kernels import ops as kops
+        if valid is None:
+            valid = jnp.ones(k.shape[:2], bool)
+        return kops.decode_attention(q, k, v, valid,
+                                     bkv=cfg.attn_kv_chunk)
+    b, _, h, dh = q.shape
+    g = k.shape[2]
+    r = h // g
+    qg = q.reshape(b, g, r, dh)
+    kk = k.astype(jnp.float32) if k_scale is not None else k
+    s = jnp.einsum("bgrd,bkgd->bgrk", qg.astype(kk.dtype), kk,
+                   preferred_element_type=jnp.float32) * dh ** -0.5
+    if k_scale is not None:
+        s = s * k_scale.transpose(0, 2, 1)[:, :, None, :]   # [B,G,1,W]
+    if valid is not None:
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p_ = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        p_ = p_ * v_scale.transpose(0, 2, 1)[:, :, None, :]
+        out = jnp.einsum("bgrk,bkgd->bgrd", p_, v.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bgrk,bkgd->bgrd", p_.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                    *, window: Optional[int] = None,
+                    abstract: bool = False) -> AttnCache:
+    w = window if window is not None else \
+        (cfg.swa_window if cfg.swa_window else max_seq)
+    w = min(w, max_seq)
+    g, dh = cfg.cache_heads, cfg.resolved_head_dim
+    kv_dt = _dtype(cfg.kv_cache_dtype)
+    quant = cfg.kv_cache_dtype == "int8"
+    shp = (batch, w, g, dh)
+    sshp = (batch, w, g)
+    if abstract:
+        sds = jax.ShapeDtypeStruct
+        return AttnCache(
+            sds(shp, kv_dt), sds(shp, kv_dt), sds((batch, w), jnp.int32),
+            k_scale=sds(sshp, jnp.float32) if quant else None,
+            v_scale=sds(sshp, jnp.float32) if quant else None)
+    return AttnCache(
+        jnp.zeros(shp, kv_dt), jnp.zeros(shp, kv_dt),
+        jnp.full((batch, w), -1, jnp.int32),
+        k_scale=jnp.zeros(sshp, jnp.float32) if quant else None,
+        v_scale=jnp.zeros(sshp, jnp.float32) if quant else None)

@@ -1,0 +1,115 @@
+"""Shared layer primitives: norms, MLPs, rotary embeddings, initializers.
+
+All parameters are plain dict pytrees; all functions are pure. Norm math
+runs in float32 regardless of activation dtype (standard LM practice).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.axes import constrain
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16, "int8": jnp.int8}[name]
+
+
+def normal_init(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_rms_norm(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq].
+
+    Split-half convention (Llama / Qwen / NeoX). Math in f32.
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)          # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [...,seq,half]
+    cos = jnp.cos(angles)[..., None, :]                # [..., seq, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, gated: bool = True) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    pdt = _dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = 0.02
+    scale_out = 0.02 / (2 * cfg.n_layers) ** 0.5
+    p = {"w1": normal_init(k1, (d, f), scale_in, pdt),
+         "w2": normal_init(k2, (f, d), scale_out, pdt)}
+    if gated:
+        p["w3"] = normal_init(k3, (d, f), scale_in, pdt)
+    return p
+
+
+def mlp(x: jax.Array, p: dict, cfg: ModelConfig,
+        act: str = "silu") -> jax.Array:
+    """SwiGLU when `w3` present, else plain act MLP (whisper: gelu)."""
+    cdt = _dtype(cfg.dtype)
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(cdt))
+    h = constrain(h, "batch", None, "ffn")
+    a = jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)
+    if "w3" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w3"].astype(cdt))
+        a = a * g
+    out = jnp.einsum("bsf,fd->bsd", a, p["w2"].astype(cdt))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embeddings(key, cfg: ModelConfig) -> dict:
+    pdt = _dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": normal_init(k1, (cfg.vocab, cfg.d_model), 0.02, pdt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = normal_init(k2, (cfg.d_model, cfg.vocab), 0.02, pdt)
+    return p
+
+
+def embed(tokens: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    cdt = _dtype(cfg.dtype)
+    return jnp.take(p["tok"].astype(cdt), tokens, axis=0)
+
+
+def unembed(h: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    cdt = _dtype(cfg.dtype)
+    w = p["tok"].astype(cdt).T if cfg.tie_embeddings \
+        else p["unembed"].astype(cdt)
+    logits = jnp.einsum("bsd,dv->bsv", h, w)
+    logits = constrain(logits, "batch", None, "vocab")
+    return logits.astype(_dtype(cfg.logit_dtype))

@@ -1,0 +1,371 @@
+"""Public model API: one set of entry points for all six families.
+
+  init_params   parameter pytree for any assigned architecture
+  loss_fn       training loss (next-token CE + MoE aux), remat/scan inside
+  prefill       full-sequence forward that returns (last-pos logits, caches)
+  decode_step   single-token step with caches (the ``serve_step`` the
+                decode_* / long_* dry-run shapes lower)
+  init_cache    per-family cache pytree (``abstract=True`` gives
+                ShapeDtypeStructs for the dry-run — no allocation)
+  cache_specs   logical sharding axes for every cache leaf
+  param_specs   logical sharding axes for every parameter leaf
+
+Parameters and caches carry a leading stacked layer axis consumed by
+``lax.scan`` (see transformer.py). Sharding is expressed purely through
+logical axis names; `repro.parallel.axes` maps them onto the active mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import AttnCache, init_attn_cache
+from repro.models.layers import _dtype, embed, rms_norm, unembed
+from repro.models.ssm import SSMCache, init_ssm_cache
+from repro.models.transformer import (decoder_forward, encdec_decoder_forward,
+                                      encoder_forward, init_model_params)
+from repro.parallel.axes import constrain
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    return init_model_params(key, cfg)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def _token_nll(h: jax.Array, labels: jax.Array, params: dict,
+               cfg: ModelConfig) -> jax.Array:
+    """Per-token negative log-likelihood. h: [B,S,D] (final-normed).
+
+    With ``cfg.loss_chunk`` set, computes CE one sequence chunk at a time so
+    the [B,S,V] logits tensor is never materialised (peak activation memory
+    drops by ~B*S*V*4 bytes; a §Perf memory-term optimisation).
+    """
+
+    def ce(hc, lc):
+        logits = unembed(hc, params["embed"], cfg).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, lc[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        return lse - gold                                   # [B, s]
+
+    b, s, d = h.shape
+    chunk = cfg.loss_chunk
+    if chunk and s > chunk and s % chunk == 0:
+        nc = s // chunk
+        hs = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+        ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+        nll = jax.lax.map(lambda t: ce(*t), (hs, ls))       # [nc, B, chunk]
+        return jnp.moveaxis(nll, 0, 1).reshape(b, s)
+    return ce(h, labels)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig, *,
+            seq_sharded: bool = True) -> tuple[jax.Array, dict]:
+    """Next-token cross-entropy (+ MoE load-balance aux).
+
+    batch: tokens [B,S] int32, labels [B,S] int32, optional loss_mask
+    [B,S] f32, plus 'frames' (audio) / 'patches' (vlm) frontend stand-ins.
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    mask = batch.get("loss_mask")
+    h = embed(tokens, params["embed"], cfg)
+
+    if cfg.family == "audio":
+        enc = encoder_forward(params, batch["frames"].astype(h.dtype), cfg)
+        h = constrain(h, "batch", "seq", None)
+        h, aux, _ = encdec_decoder_forward(params, h, cfg, enc_out=enc,
+                                           seq_sharded=seq_sharded)
+    else:
+        if cfg.frontend == "vision":
+            vt = cfg.vis_tokens
+            patches = batch["patches"].astype(h.dtype)
+            h = jnp.concatenate([patches, h[:, vt:]], axis=1)
+            pmask = (jnp.arange(h.shape[1]) >= vt).astype(jnp.float32)[None]
+            mask = pmask if mask is None else mask * pmask
+        h = constrain(h, "batch", "seq", None)
+        h, aux, _ = decoder_forward(params, h, cfg, seq_sharded=seq_sharded)
+
+    h = rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    nll = _token_nll(h, labels, params, cfg)
+    if mask is None:
+        ce_loss = jnp.mean(nll)
+        denom = jnp.asarray(nll.size, jnp.float32)
+    else:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce_loss = jnp.sum(nll * mask) / denom
+    loss = ce_loss + cfg.moe_aux_coef * aux
+    return loss, {"loss": loss, "ce": ce_loss, "moe_aux": aux,
+                  "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _cache_from_kv(k: jax.Array, v: jax.Array, w: int,
+                   cfg: ModelConfig) -> AttnCache:
+    """Build the decode cache from collected K/V [..., S, G, Dh].
+
+    Linear caches (w >= s) are a pad — never a scatter, which would
+    materialise an unsharded zero buffer the size of the whole cache
+    (17 GiB/device for a 64-layer 32k prefill). Rolling (sliding-window,
+    w < s) caches scatter only the last ``w`` positions.
+    """
+    s = k.shape[-3]
+    kvdt = _dtype(cfg.kv_cache_dtype)
+    quant = cfg.kv_cache_dtype == "int8"
+    if cfg.cache_heads != k.shape[-2]:   # aligned cache (Megatron layout)
+        rep = cfg.cache_heads // k.shape[-2]
+        k = jnp.repeat(k, rep, axis=-2)
+        v = jnp.repeat(v, rep, axis=-2)
+    if quant:
+        from repro.models.attention import quantize_kv
+        k, ks = quantize_kv(k)
+        v, vs = quantize_kv(v)
+    lead = k.shape[:-3]
+    nlead = len(lead)
+
+    def spec(*tail):
+        return ("layers", "batch")[2 - nlead:] + tail
+
+    if w >= s:
+        widths = [(0, 0)] * nlead + [(0, w - s), (0, 0), (0, 0)]
+        kc = jnp.pad(k.astype(kvdt), widths)
+        vc = jnp.pad(v.astype(kvdt), widths)
+        pos = jnp.pad(jnp.arange(s), (0, w - s), constant_values=-1)
+        pos_buf = jnp.broadcast_to(pos, lead + (w,))
+        kc = constrain(kc, *spec("cache_seq", "kv_heads", None))
+        vc = constrain(vc, *spec("cache_seq", "kv_heads", None))
+        if quant:
+            sw = widths[:-1]
+            return AttnCache(kc, vc, pos_buf,
+                             k_scale=jnp.pad(ks, sw),
+                             v_scale=jnp.pad(vs, sw))
+        return AttnCache(kc, vc, pos_buf)
+
+    srcpos = jnp.arange(s - w, s)
+    slots = srcpos % w
+    kc = jnp.zeros(lead + (w,) + k.shape[-2:], kvdt)
+    vc = jnp.zeros(lead + (w,) + v.shape[-2:], kvdt)
+    kc = kc.at[..., slots, :, :].set(k[..., s - w:, :, :].astype(kvdt))
+    vc = vc.at[..., slots, :, :].set(v[..., s - w:, :, :].astype(kvdt))
+    pos_buf = jnp.broadcast_to(
+        jnp.zeros((w,), jnp.int32).at[slots].set(srcpos), lead + (w,))
+    if quant:
+        ksb = jnp.zeros(lead + (w,) + k.shape[-2:-1], jnp.float32)
+        vsb = jnp.zeros(lead + (w,) + v.shape[-2:-1], jnp.float32)
+        ksb = ksb.at[..., slots, :].set(ks[..., s - w:, :])
+        vsb = vsb.at[..., slots, :].set(vs[..., s - w:, :])
+        return AttnCache(kc, vc, pos_buf, k_scale=ksb, v_scale=vsb)
+    return AttnCache(kc, vc, pos_buf)
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, *,
+            max_seq: Optional[int] = None,
+            seq_sharded: bool = False) -> tuple[jax.Array, dict]:
+    """Full-sequence forward returning (last-position logits [B,V], caches).
+
+    ``max_seq`` sets the decode cache capacity (default: prompt length —
+    pass prompt + generation budget for serving).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    h = embed(tokens, params["embed"], cfg)
+    fam = cfg.family
+
+    if fam == "audio":
+        enc = encoder_forward(params, batch["frames"].astype(h.dtype), cfg)
+        h = constrain(h, "batch", "seq", None)
+        h, _, col = encdec_decoder_forward(params, h, cfg, enc_out=enc,
+                                           seq_sharded=seq_sharded,
+                                           collect=True)
+        self_c = _cache_from_kv(col["self"][0], col["self"][1],
+                                max_seq, cfg)
+        caches = {"self": self_c,
+                  "cross_k": col["cross_k"].astype(_dtype(cfg.dtype)),
+                  "cross_v": col["cross_v"].astype(_dtype(cfg.dtype))}
+    else:
+        if cfg.frontend == "vision":
+            vt = cfg.vis_tokens
+            h = jnp.concatenate(
+                [batch["patches"].astype(h.dtype), h[:, vt:]], axis=1)
+        h = constrain(h, "batch", "seq", None)
+        h, _, col = decoder_forward(params, h, cfg, seq_sharded=seq_sharded,
+                                    collect=True)
+        if fam in ("dense", "vlm", "moe"):
+            w = min(cfg.swa_window or max_seq, max_seq)
+            k, v = col["attn"]
+            caches = {"attn": _cache_from_kv(k, v, w, cfg)}
+        elif fam == "ssm":
+            caches = {"ssm": col["ssm"]}
+        elif fam == "hybrid":
+            k, v = col["attn"]
+            caches = {"ssm": col["ssm"],
+                      "attn": _cache_from_kv(k, v, max_seq, cfg)}
+        else:
+            raise ValueError(fam)
+
+    h_last = rms_norm(h[:, -1:], params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(h_last, params["embed"], cfg)[:, 0]
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params: dict, tokens: jax.Array, caches: dict,
+                positions: jax.Array, cfg: ModelConfig
+                ) -> tuple[jax.Array, dict]:
+    """One decoding step. tokens: [B,1]; positions: [B] absolute position
+    of the new token. Returns (logits [B,V], updated caches)."""
+    h = embed(tokens, params["embed"], cfg)
+    if cfg.family == "audio":
+        h, _, new_caches = encdec_decoder_forward(
+            params, h, cfg, caches=caches, positions=positions,
+            seq_sharded=False)
+    else:
+        h, _, new_caches = decoder_forward(
+            params, h, cfg, caches=caches, positions=positions,
+            seq_sharded=False)
+    h = rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(h, params["embed"], cfg)[:, 0]
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# cache construction + sharding specs
+# ---------------------------------------------------------------------------
+
+def _stack(tree, n: int, abstract: bool):
+    def f(leaf):
+        if abstract or isinstance(leaf, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct((n,) + leaf.shape, leaf.dtype)
+        return jnp.broadcast_to(leaf[None], (n,) + leaf.shape)
+    return jax.tree.map(f, tree)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+               abstract: bool = False) -> dict:
+    """Decode-cache pytree (leading stacked layer axis, scan-ready)."""
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        layer = init_attn_cache(cfg, batch, max_seq, abstract=abstract)
+        return {"attn": _stack(layer, cfg.n_layers, abstract)}
+    if fam == "ssm":
+        layer = init_ssm_cache(cfg, batch, abstract=abstract)
+        return {"ssm": _stack(layer, cfg.n_layers, abstract)}
+    if fam == "hybrid":
+        n_apps = cfg.n_layers // cfg.hybrid_attn_every
+        ssm_layer = init_ssm_cache(cfg, batch, abstract=abstract)
+        attn_layer = init_attn_cache(cfg, batch, max_seq, window=max_seq,
+                                     abstract=abstract)
+        return {"ssm": _stack(ssm_layer, cfg.n_layers, abstract),
+                "attn": _stack(attn_layer, n_apps, abstract)}
+    if fam == "audio":
+        self_layer = init_attn_cache(cfg, batch, max_seq, abstract=abstract)
+        g, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        cdt = _dtype(cfg.dtype)
+        cross_shape = (cfg.n_layers, batch, cfg.enc_seq, g, dh)
+        if abstract:
+            cross = jax.ShapeDtypeStruct(cross_shape, cdt)
+            return {"self": _stack(self_layer, cfg.n_layers, abstract),
+                    "cross_k": cross, "cross_v": cross}
+        return {"self": _stack(self_layer, cfg.n_layers, abstract),
+                "cross_k": jnp.zeros(cross_shape, cdt),
+                "cross_v": jnp.zeros(cross_shape, cdt)}
+    raise ValueError(fam)
+
+
+_ATTN_CACHE_AXES = AttnCache(
+    k=("layers", "batch", "cache_seq", "kv_heads", None),
+    v=("layers", "batch", "cache_seq", "kv_heads", None),
+    pos_buf=("layers", "batch", "cache_seq"),
+)
+_ATTN_CACHE_AXES_Q = _ATTN_CACHE_AXES._replace(
+    k_scale=("layers", "batch", "cache_seq", "kv_heads"),
+    v_scale=("layers", "batch", "cache_seq", "kv_heads"),
+)
+_SSM_CACHE_AXES = SSMCache(
+    conv=("layers", "batch", None, "ffn"),
+    state=("layers", "batch", "heads", None, None),
+)
+
+
+def cache_specs(cfg: ModelConfig) -> dict:
+    """Logical sharding axes for every leaf of ``init_cache``'s pytree."""
+    fam = cfg.family
+    attn_axes = (_ATTN_CACHE_AXES_Q if cfg.kv_cache_dtype == "int8"
+                 else _ATTN_CACHE_AXES)
+    if fam in ("dense", "vlm", "moe"):
+        return {"attn": attn_axes}
+    if fam == "ssm":
+        return {"ssm": _SSM_CACHE_AXES}
+    if fam == "hybrid":
+        return {"ssm": _SSM_CACHE_AXES, "attn": attn_axes}
+    if fam == "audio":
+        cross = ("layers", "batch", None, "kv_heads", None)
+        return {"self": attn_axes, "cross_k": cross, "cross_v": cross}
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding specs
+# ---------------------------------------------------------------------------
+
+# Base logical axes per parameter name (without the stacked layer axis).
+_PARAM_AXES = {
+    "tok": ("vocab", "embed_p"),
+    "unembed": ("embed_p", "vocab"),
+    "wq": ("embed_p", "heads", None),
+    "wk": ("embed_p", "kv_heads", None),
+    "wv": ("embed_p", "kv_heads", None),
+    "wo": ("heads", None, "embed_p"),
+    "bq": ("heads", None),
+    "bk": ("kv_heads", None),
+    "bv": ("kv_heads", None),
+    "w1": ("embed_p", "ffn"),
+    "w3": ("embed_p", "ffn"),
+    "w2": ("ffn", "embed_p"),
+    "router": (None, None),
+    "in_proj": ("embed_p", "ffn"),
+    "conv_w": (None, "ffn"),
+    "conv_b": ("ffn",),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+    "gated_norm": ("ffn",),
+    "out_proj": ("ffn", "embed_p"),
+    "scale": (None,),
+}
+
+
+def _leaf_axes(name: str, ndim: int) -> tuple:
+    base = _PARAM_AXES[name]
+    if ndim == len(base):
+        return base
+    if ndim == len(base) + 1:                  # stacked over layers
+        return ("layers",) + base
+    if ndim == len(base) + 2 and name in ("w1", "w2", "w3"):
+        return ("layers", "experts") + base    # stacked MoE experts
+    raise ValueError(f"param {name!r} with ndim {ndim}")
+
+
+def param_specs(params: Any) -> Any:
+    """Logical sharding axes for every parameter leaf (path-name driven)."""
+    def f(path, leaf):
+        name = path[-1].key
+        return _leaf_axes(name, leaf.ndim)
+    return jax.tree_util.tree_map_with_path(f, params)

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN (Mixtral / Grok-1 style: top-2 of 8, SwiGLU).
+
+Dispatch is the *sort-based capacity* scheme: assignments are sorted by
+expert, ranked within expert, and scattered into an [E, cap, D] buffer that
+feeds dense per-expert GEMMs — MXU-friendly and dropless up to the capacity
+factor (overflow tokens fall back to the residual stream, GShard-style).
+
+Distribution: the dispatch is *token-local*. Under the production mesh the
+surrounding `shard_map` hands every device its own tokens (batch over
+(pod, data); sequence gathered from the SP shards over `model`), the full
+router, and the expert shards [E, D_shard(fsdp), F_shard(tp)]; the fsdp
+shard is all-gathered at use and the F contraction reduce-scattered back to
+sequence shards — the Megatron SP<->TP transition. No all-to-all is needed
+because experts are weight-sharded, not token-sharded (EP over `model` is
+the recorded hillclimb alternative; see EXPERIMENTS.md §Perf).
+
+Gradients flow through the combine weights (standard top-k STE-free
+routing); a Switch-style load-balancing auxiliary loss is returned.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dtype, normal_init
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    pdt = _dtype(cfg.param_dtype)
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": normal_init(kr, (d, e), 0.02, jnp.float32),
+        "w1": normal_init(k1, (e, d, f), 0.02, pdt),
+        "w3": normal_init(k3, (e, d, f), 0.02, pdt),
+        "w2": normal_init(k2, (e, f, d),
+                          0.02 / (2 * cfg.n_layers) ** 0.5, pdt),
+    }
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    cap = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to a multiple of 8
+
+
+class DispatchMeta:
+    """Sorted-assignment metadata linking tokens <-> expert buffer slots."""
+
+    def __init__(self, eid_s, tok_s, wgt_s, rank_c, keep, t, cap):
+        self.eid_s, self.tok_s, self.wgt_s = eid_s, tok_s, wgt_s
+        self.rank_c, self.keep, self.t, self.cap = rank_c, keep, t, cap
+
+
+def route_and_dispatch(x2d: jax.Array, router: jax.Array, cfg: ModelConfig
+                       ) -> tuple[jax.Array, DispatchMeta, jax.Array]:
+    """Route tokens and scatter them into [E, cap, D] expert buffers.
+
+    Returns (buf, meta, aux_loss). Dropped (over-capacity) assignments
+    scatter out of bounds and contribute zero on combine (GShard-style
+    residual fallback).
+    """
+    t, d = x2d.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cdt = _dtype(cfg.dtype)
+    cap = _capacity(t, cfg)
+
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)              # [T, E]
+    top_p, top_i = jax.lax.top_k(probs, k)               # [T, k]
+    weights = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # Switch-style load-balance auxiliary: E * sum_e f_e * P_e
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(dispatch_frac * jnp.mean(probs, axis=0))
+
+    eid = top_i.reshape(-1)                              # [T*k]
+    tok = jnp.repeat(jnp.arange(t), k)                   # [T*k]
+    wgt = weights.reshape(-1)
+    order = jnp.argsort(eid, stable=True)
+    eid_s, tok_s, wgt_s = eid[order], tok[order], wgt[order]
+    counts = jnp.bincount(eid, length=e)                 # [E]
+    starts = jnp.cumsum(counts) - counts                 # exclusive
+    rank = jnp.arange(t * k) - starts[eid_s]             # pos within expert
+    keep = rank < cap
+
+    # scatter tokens into [E, cap, D]; dropped rows scatter out of bounds
+    rank_c = jnp.where(keep, rank, cap)                  # drop via OOB
+    buf = jnp.zeros((e, cap, d), cdt)
+    buf = buf.at[eid_s, rank_c].set(x2d[tok_s].astype(cdt), mode="drop")
+    return buf, DispatchMeta(eid_s, tok_s, wgt_s, rank_c, keep, t, cap), aux
+
+
+def expert_gemms(buf: jax.Array, w1, w3, w2, cfg: ModelConfig) -> jax.Array:
+    """Dense per-expert SwiGLU. buf: [E', cap', D]; w*: [E', D, F'] /
+    [E', F', D] (E'/F' may be EP-transformed). Returns [E', cap', D]."""
+    cdt = _dtype(cfg.dtype)
+    h1 = jnp.einsum("ecd,edf->ecf", buf, w1.astype(cdt))
+    h3 = jnp.einsum("ecd,edf->ecf", buf, w3.astype(cdt))
+    h = jax.nn.silu(h1) * h3
+    return jnp.einsum("ecf,efd->ecd", h, w2.astype(cdt))
+
+
+def combine(out_buf: jax.Array, meta: DispatchMeta, d: int,
+            cfg: ModelConfig) -> jax.Array:
+    """Gather expert outputs back to token order, weighted. -> [T, D]."""
+    cdt = _dtype(cfg.dtype)
+    contrib = out_buf[meta.eid_s, jnp.minimum(meta.rank_c, meta.cap - 1)]
+    contrib = contrib * (meta.wgt_s * meta.keep).astype(cdt)[:, None]
+    return jnp.zeros((meta.t, d), cdt).at[meta.tok_s].add(contrib)
+
+
+def moe_ffn_local(x2d: jax.Array, p: dict, cfg: ModelConfig
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Token-local MoE. x2d: [T, D] -> ([T, D], aux_loss scalar)."""
+    t, d = x2d.shape
+    buf, meta, aux = route_and_dispatch(x2d, p["router"], cfg)
+    out_buf = expert_gemms(buf, p["w1"], p["w3"], p["w2"], cfg)
+    return combine(out_buf, meta, d, cfg), aux

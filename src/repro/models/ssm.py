@@ -1,0 +1,307 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks of length ``ssm_chunk``; within a chunk the recurrence is the masked
+quadratic (attention-like) form — an MXU-friendly matmul — and across chunks
+a `lax.scan` carries the [H, P, N] state. Decode is the plain linear
+recurrence on a [B, H, P, N] state plus a [B, K-1, conv_dim] conv state.
+
+`repro.kernels.ssd_scan` provides the Pallas TPU kernel for the intra-chunk
+stage; this module is the pure-jnp reference path (cfg.attn_impl drives the
+swap at the block level).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dtype, normal_init, rms_norm
+from repro.parallel.axes import constrain
+
+N_GROUPS = 1  # B/C projection groups (Mamba2-1.3b uses 1)
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # [B, K-1, conv_dim] last conv inputs
+    state: jax.Array  # [B, H, P, N] recurrent state (f32)
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.d_inner
+    nh = cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_dim = d_in + 2 * N_GROUPS * n
+    return d_in, nh, p, n, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, nh, _, n, conv_dim = _dims(cfg)
+    pdt = _dtype(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj order: [z (d_in), x (d_in), B (g*n), C (g*n), dt (nh)]
+    d_proj = 2 * d_in + 2 * N_GROUPS * n + nh
+    return {
+        "in_proj": normal_init(k1, (d, d_proj), 0.02, pdt),
+        "conv_w": normal_init(k2, (cfg.ssm_conv, conv_dim), 0.2, pdt),
+        "conv_b": jnp.zeros((conv_dim,), pdt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": (jnp.log(jnp.exp(
+            jnp.exp(jax.random.uniform(k3, (nh,), jnp.float32)
+                    * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3)))
+            - 1.0 + 1e-9)).astype(jnp.float32),  # inverse-softplus init
+        "gated_norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": normal_init(
+            k4, (d_in, d), 0.02 / (2 * cfg.n_layers) ** 0.5, pdt),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    d_in, nh, _, n, _ = _dims(cfg)
+    gn = N_GROUPS * n
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in:2 * d_in]
+    b = zxbcdt[..., 2 * d_in:2 * d_in + gn]
+    c = zxbcdt[..., 2 * d_in + gn:2 * d_in + 2 * gn]
+    dt = zxbcdt[..., 2 * d_in + 2 * gn:]
+    return z, x, b, c, dt
+
+
+def _segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} a[..., k].
+
+    Lower-triangular log-decay matrix for the intra-chunk quadratic form.
+    """
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_coef, b, c, chunk: int,
+                h0: Optional[jax.Array] = None, *, impl: str = "xla"):
+    """Chunked SSD scan (pure jnp; ``impl='pallas'`` dispatches to the
+    `repro.kernels.ssd_scan` TPU kernel with identical semantics).
+
+    x: [B,S,H,P] (pre-multiplied by nothing; dt applied inside)
+    dt: [B,S,H] (post-softplus), a_coef: [H] (negative)
+    b, c: [B,S,G,N] (G groups broadcast over heads)
+    Returns y: [B,S,H,P], final_state: [B,H,P,N] (f32).
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.ssd_scan(x, dt, a_coef, b, c, chunk, h0)
+    bsz, s, nh, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        # zero-pad to a chunk multiple: dt=0 gives decay exp(0)=1 and a
+        # zero state contribution, so padded positions are exact no-ops
+        zp = lambda t: jnp.pad(t, [(0, 0), (0, pad)]   # noqa: E731
+                               + [(0, 0)] * (t.ndim - 2))
+        y, h_last = ssd_chunked(zp(x), zp(dt), a_coef, zp(b), zp(c),
+                                chunk, h0, impl=impl)
+        return y[:, :s], h_last
+    nc = s // chunk
+    rep = nh // g
+
+    # pin shardings: x/dt over heads; B/C *replicated* — without this,
+    # GSPMD propagates a model-axis sharding onto the state dim N, turning
+    # every einsum that contracts N into per-chunk partial-sum collectives
+    # (§Perf H3.3)
+    x = constrain(x, "batch", None, "heads", None)
+    dt = constrain(dt, "batch", None, "heads")
+    b = constrain(b, "batch", None, None, None)
+    c = constrain(c, "batch", None, None, None)
+
+    # fold dt into x and into the decay exponents
+    xdt = (x.astype(jnp.float32) * dt[..., None])     # [B,S,H,P]
+    da = dt * a_coef[None, None, :]                   # [B,S,H] (negative)
+
+    def r(t, shape):  # chunk reshape [B,S,...] -> [B,nc,chunk,...]
+        return t.reshape((bsz, nc, chunk) + shape)
+
+    xc = r(xdt, (nh, p))
+    dac = r(da, (nh,)).transpose(0, 1, 3, 2)          # [B,nc,H,chunk]
+    bc = r(b.astype(jnp.float32), (g, n))
+    cc = r(c.astype(jnp.float32), (g, n))
+    bc_h = jnp.repeat(bc, rep, axis=3) if g != nh else bc
+    cc_h = jnp.repeat(cc, rep, axis=3) if g != nh else cc
+
+    da_cum = jnp.cumsum(dac, axis=-1)                 # [B,nc,H,chunk]
+    # 1. intra-chunk (quadratic / "attention" form)
+    lmat = jnp.exp(_segsum(dac))                      # [B,nc,H,chunk,chunk]
+    scores = jnp.einsum("bclhn,bcshn->bchls", cc_h, bc_h) * lmat
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores, xc)
+
+    # 2. per-chunk output states
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)  # [B,nc,H,chunk]
+    states = jnp.einsum("bcshn,bchs,bcshp->bchpn", bc_h, decay_states, xc)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[..., -1])             # [B,nc,H]
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp                                  # [B,H,P,N], [B,H]
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h_init = jnp.zeros((bsz, nh, p, n), jnp.float32) if h0 is None else h0
+    h_last, h_prevs = jax.lax.scan(
+        scan_fn, h_init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                   # [B,nc,H,P,N]
+
+    # 4. contribution of the carried-in state to each position
+    state_decay = jnp.exp(da_cum)                      # [B,nc,H,chunk]
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp", cc_h, h_prevs, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, nh, p)
+    return y, h_last
+
+
+def _causal_conv(xbc, w, bias):
+    """Depthwise causal conv1d. xbc: [B,S,C]; w: [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + bias[None, None, :]
+
+
+def ssm_block(x: jax.Array, p: dict, cfg: ModelConfig, *,
+              cache: Optional[SSMCache] = None,
+              ) -> tuple[jax.Array, Optional[SSMCache]]:
+    """Full Mamba2 block: in_proj -> conv -> SSD -> gated norm -> out_proj.
+
+    Full-sequence when cache is None; single-token decode otherwise.
+    """
+    cdt = _dtype(cfg.dtype)
+    d_in, nh, hp, n, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cdt))
+    zxbcdt = constrain(zxbcdt, "batch", None, None)
+    z, xin, b, c, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc = jnp.concatenate([xin, b, c], axis=-1)        # conv over x|B|C
+    a_coef = -jnp.exp(p["A_log"])                      # [H] negative
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+
+    if cache is None:
+        # depthwise conv splits exactly: run the (model-shardable) x part
+        # and the small B/C part separately, so the [B,S,d_inner]
+        # intermediates are TP-sharded instead of replicated (16x less
+        # live memory per device; §Perf H3)
+        conv_w = p["conv_w"].astype(cdt)
+        conv_b = p["conv_b"].astype(cdt)
+        xin = constrain(xin, "batch", None, "ffn")
+        xs = jax.nn.silu(_causal_conv(xin, conv_w[:, :d_in],
+                                      conv_b[:d_in]))
+        xs = constrain(xs, "batch", None, "ffn")
+        bc = jnp.concatenate([b, c], axis=-1)
+        bc_out = jax.nn.silu(_causal_conv(bc, conv_w[:, d_in:],
+                                          conv_b[d_in:]))
+        bs = bc_out[..., :N_GROUPS * n]
+        cs = bc_out[..., N_GROUPS * n:]
+        bsz, s = x.shape[0], x.shape[1]
+        xh = xs.reshape(bsz, s, nh, hp)
+        xh = constrain(xh, "batch", None, "heads", None)
+        bg = bs.reshape(bsz, s, N_GROUPS, n)
+        cg = cs.reshape(bsz, s, N_GROUPS, n)
+        y, h_last = ssd_chunked(xh, dt, a_coef, bg, cg, cfg.ssm_chunk,
+                                impl=('pallas' if cfg.attn_impl == 'pallas'
+                                      else 'xla'))
+        y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+        y = y.reshape(bsz, s, d_in).astype(cdt)
+        y = rms_norm(y * jax.nn.silu(z), p["gated_norm"], cfg.norm_eps)
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cdt))
+        # (serving prefill that also needs the decode cache uses
+        # `ssm_prefill_with_cache` below)
+        return out, None
+
+    # ---- decode ----------------------------------------------------------
+    new_conv = jnp.concatenate([cache.conv, xbc.astype(cache.conv.dtype)],
+                               axis=1)[:, 1:]          # [B,K-1,C]
+    k = cfg.ssm_conv
+    full = jnp.concatenate([cache.conv.astype(cdt), xbc], axis=1)  # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", full, p["conv_w"].astype(cdt)) \
+        + p["conv_b"].astype(cdt)
+    conv_out = jax.nn.silu(conv_out)[:, None, :]       # [B,1,C]
+    xs = conv_out[..., :d_in]
+    bs = conv_out[..., d_in:d_in + N_GROUPS * n]
+    cs = conv_out[..., d_in + N_GROUPS * n:]
+    bsz = x.shape[0]
+    xh = xs.reshape(bsz, nh, hp).astype(jnp.float32)
+    bg = jnp.repeat(bs.reshape(bsz, N_GROUPS, n), nh // N_GROUPS, axis=1)
+    cg = jnp.repeat(cs.reshape(bsz, N_GROUPS, n), nh // N_GROUPS, axis=1)
+    dt1 = dt[:, 0]                                     # [B,H]
+    decay = jnp.exp(dt1 * a_coef[None, :])             # [B,H]
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt1, xh, bg.astype(jnp.float32))
+    h_new = cache.state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, cg.astype(jnp.float32))
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(cdt)
+    y = rms_norm(y * jax.nn.silu(z), p["gated_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cdt))
+    return out, SSMCache(new_conv, h_new)
+
+
+def _tail_conv_state(xbc, cfg):
+    return xbc[:, -(cfg.ssm_conv - 1):, :]
+
+
+def ssm_prefill_with_cache(x, p, cfg: ModelConfig):
+    """Full-sequence forward that also returns the decode cache (used by
+    serving prefill). Mirrors ssm_block's full-sequence path."""
+    cdt = _dtype(cfg.dtype)
+    d_in, nh, hp, n, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(cdt))
+    z, xin, b, c, dt_raw = _split_proj(zxbcdt, cfg)
+    # decode conv state: only the last K-1 positions of x|B|C
+    tail = cfg.ssm_conv - 1
+    xbc_tail = jnp.concatenate([xin[:, -tail:], b[:, -tail:],
+                                c[:, -tail:]], axis=-1)
+    a_coef = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    conv_w = p["conv_w"].astype(cdt)
+    conv_b = p["conv_b"].astype(cdt)
+    xin = constrain(xin, "batch", None, "ffn")
+    xs = jax.nn.silu(_causal_conv(xin, conv_w[:, :d_in], conv_b[:d_in]))
+    xs = constrain(xs, "batch", None, "ffn")
+    bc_out = jax.nn.silu(_causal_conv(jnp.concatenate([b, c], axis=-1),
+                                      conv_w[:, d_in:], conv_b[d_in:]))
+    bs = bc_out[..., :N_GROUPS * n]
+    cs = bc_out[..., N_GROUPS * n:]
+    bsz, s = x.shape[0], x.shape[1]
+    xh = xs.reshape(bsz, s, nh, hp)
+    bg = bs.reshape(bsz, s, N_GROUPS, n)
+    cg = cs.reshape(bsz, s, N_GROUPS, n)
+    y, h_last = ssd_chunked(xh, dt, a_coef, bg, cg, cfg.ssm_chunk,
+                                impl=('pallas' if cfg.attn_impl == 'pallas'
+                                      else 'xla'))
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(bsz, s, d_in).astype(cdt)
+    y = rms_norm(y * jax.nn.silu(z), p["gated_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(cdt))
+    cache = SSMCache(xbc_tail.astype(cdt), h_last)
+    return out, cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int,
+                   *, abstract: bool = False) -> SSMCache:
+    _, nh, hp, n, conv_dim = _dims(cfg)
+    cdt = _dtype(cfg.dtype)
+    conv_shape = (batch, cfg.ssm_conv - 1, conv_dim)
+    state_shape = (batch, nh, hp, n)
+    if abstract:
+        sds = jax.ShapeDtypeStruct
+        return SSMCache(sds(conv_shape, cdt), sds(state_shape, jnp.float32))
+    return SSMCache(jnp.zeros(conv_shape, cdt),
+                    jnp.zeros(state_shape, jnp.float32))

@@ -1,0 +1,15 @@
+"""Optimizer substrate: AdamW, schedules, clipping, gradient compression."""
+
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_init,
+                               adamw_update, clip_by_global_norm,
+                               global_norm)
+from repro.optim.schedule import constant, warmup_cosine
+from repro.optim.compress import (compressed_pmean, init_error_feedback,
+                                  quantize_int8, dequantize)
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+    "clip_by_global_norm", "global_norm", "constant", "warmup_cosine",
+    "compressed_pmean", "init_error_feedback", "quantize_int8",
+    "dequantize",
+]

@@ -1,0 +1,100 @@
+"""AdamW, self-implemented on parameter pytrees.
+
+Moments are kept in ``cfg.moment_dtype`` (f32 default; bf16 for the >=100B
+configs so grok-1-314b fits 16 GiB/chip — DESIGN.md §5) and sharded
+identically to their parameters. Update math runs in f32 regardless.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0          # global-norm clip; 0 disables
+    moment_dtype: str = "float32"
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array                 # i32 scalar
+    mu: Any                         # first moments  (pytree like params)
+    nu: Any                         # second moments (pytree like params)
+
+
+def _mdt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def adamw_init(params: Any, opt: AdamWConfig) -> AdamWState:
+    mdt = _mdt(opt.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)  # noqa: E731
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any,
+                 opt: AdamWConfig, lr: Optional[jax.Array] = None
+                 ) -> tuple[Any, AdamWState, dict]:
+    """One AdamW step. ``lr`` overrides ``opt.lr`` (schedules).
+
+    Large (layer-stacked) leaves are updated through a ``lax.map`` over
+    the leading axis, so the f32 temporaries of the update math live for
+    one layer slice at a time instead of the whole stack — without this,
+    the optimizer's transient f32 copies (g32/m32/v32/delta per leaf) are
+    the single largest memory term of a 314B-parameter train step.
+    """
+    lr = opt.lr if lr is None else lr
+    if opt.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, opt.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    c1 = 1.0 - opt.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - opt.b2 ** step.astype(jnp.float32)
+    mdt = _mdt(opt.moment_dtype)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = opt.b1 * m.astype(jnp.float32) + (1 - opt.b1) * g32
+        v32 = opt.b2 * v.astype(jnp.float32) + (1 - opt.b2) * g32 * g32
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + opt.eps)
+        if opt.weight_decay:
+            delta = delta + opt.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat = jax.tree.map(upd, params, grads, state.mu, state.nu,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    stats = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, AdamWState(step, new_mu, new_nu), stats

@@ -1,0 +1,69 @@
+"""Int8 gradient compression with error feedback.
+
+Targets the *cross-pod* gradient reduction: the pod axis rides the slow
+DCN/inter-pod links, so halving on-wire bytes (bf16 -> int8 + one f32
+scale per tensor) directly shrinks the collective roofline term of the
+multi-pod mesh. Error feedback (Seide et al., 2014; Karimireddy et al.,
+2019) carries the quantisation residual into the next step, keeping
+convergence unbiased in practice.
+
+Wire scheme: each pod quantises its gradient to int8 with a per-tensor
+scale, all-gathers the int8 payload + scales over the ``pod`` axis (small:
+2..few pods) and de-quantise-sums locally. Intra-pod reductions stay in
+bf16/f32 via GSPMD — only the slow link is compressed.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, err: jax.Array
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback int8 quantisation.
+
+    Returns (q int8, scale f32 scalar, new_err f32 like x).
+    """
+    xf = x.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(xf)) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / safe), -127, 127).astype(jnp.int8)
+    new_err = xf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_pmean_leaf(g: jax.Array, err: jax.Array, axis_name: str
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Mean-reduce one gradient leaf over ``axis_name`` on an int8 wire.
+
+    Must run inside ``shard_map``/``pmap`` with ``axis_name`` bound.
+    """
+    q, scale, new_err = quantize_int8(g, err)
+    qs = jax.lax.all_gather(q, axis_name)              # [P, ...] int8 wire
+    ss = jax.lax.all_gather(scale, axis_name)          # [P] f32
+    n = qs.shape[0]
+    total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=1)
+    return (total / n).astype(g.dtype), new_err
+
+
+def compressed_pmean(grads: Any, err: Any, axis_name: str
+                     ) -> tuple[Any, Any]:
+    """Tree-wide int8 error-feedback mean over ``axis_name``."""
+    out = jax.tree.map(
+        lambda g, e: compressed_pmean_leaf(g, e, axis_name), grads, err)
+    mean = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return mean, new_err

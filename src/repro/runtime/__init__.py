@@ -1,0 +1,4 @@
+from repro.runtime.accounting import CostMeter  # noqa: F401
+from repro.runtime.scheduler import (EnergyAwareScheduler,
+                                     SchedulerConfig)  # noqa: F401
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,89 @@
+"""Elastic capacity: resize the data-parallel world at runtime.
+
+The paper discusses variable capacity as binary (all-on / all-off) and
+notes partial shutdown as future refinement (§V-C). At framework level,
+partial capacity = shrinking the DP axis of the mesh: a 2x16x16 job can
+drop to 1x16x16 (half power) by checkpointing, releasing one pod, and
+restoring onto the smaller mesh. This module provides the mesh arithmetic
+and the restore-side placement:
+
+  * capacity level L in (0, 1]: keep round(L * dp_total) DP slices; the
+    model axis is never resized (TP re-sharding would change per-op
+    layouts; DP resize only changes the *batch* sharding and gradient
+    all-reduce span — checkpointed params are DP-replicated / fsdp-sharded
+    and re-place cleanly);
+  * the *global batch is preserved* by raising the per-replica microbatch
+    count (gradient accumulation) — data order and loss curves are
+    unchanged by a capacity change, only step wall-time;
+  * `capacity_schedule` maps a price series + partition plans to per-hour
+    levels (the heterogeneous-partitions route of §V-C).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.parallel.axes import LogicalRules, logical_to_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityLevel:
+    level: float            # fraction of DP capacity in use
+    dp_size: int            # resulting data-parallel world size
+    microbatches: int       # accumulation factor preserving global batch
+
+
+def resize_mesh(devices: np.ndarray, level: float, *,
+                model_parallel: int,
+                axis_names: tuple = ("data", "model")) -> Optional[Mesh]:
+    """Build a mesh over the first ``round(level * n_dp)`` DP slices.
+
+    ``devices``: flat array of available devices (as from jax.devices()).
+    Returns None if fewer than one DP slice survives.
+    """
+    n = len(devices)
+    dp_total = n // model_parallel
+    dp_keep = max(int(round(level * dp_total)), 1)
+    kept = np.asarray(devices[:dp_keep * model_parallel]).reshape(
+        dp_keep, model_parallel)
+    return Mesh(kept, axis_names)
+
+
+def capacity_plan(level: float, dp_total: int,
+                  base_microbatches: int = 1) -> CapacityLevel:
+    """Constant-global-batch accumulation plan for a capacity level."""
+    dp_keep = max(int(round(level * dp_total)), 1)
+    scale = dp_total / dp_keep
+    return CapacityLevel(level=dp_keep / dp_total, dp_size=dp_keep,
+                         microbatches=int(np.ceil(base_microbatches
+                                                  * scale)))
+
+
+def reshard_tree(tree, mesh: Mesh, logical_specs, rules: LogicalRules):
+    """Place a (restored) pytree onto ``mesh`` under logical specs — the
+    elastic-restore path. Works across mesh *sizes* because every leaf is
+    host-materialised by the checkpoint loader first."""
+    def place(leaf, axes):
+        spec = logical_to_spec(axes, rules)
+        return jax.device_put(leaf, jax.sharding.NamedSharding(mesh, spec))
+    return jax.tree.map(place, tree, logical_specs)
+
+
+def capacity_schedule(prices: np.ndarray, partition_plans: dict,
+                      power_by_partition: dict) -> np.ndarray:
+    """Fractional capacity per hour from per-partition shutdown plans
+    (paper §V-C realised): at each hour, a partition is off iff the price
+    exceeds *its* threshold; capacity = online power / total power."""
+    prices = np.asarray(prices)
+    total = sum(power_by_partition.values())
+    cap = np.zeros_like(prices, dtype=np.float64)
+    for name, plan in partition_plans.items():
+        thr = plan["p_thresh"] if plan["viable"] else np.inf
+        on = (prices <= thr).astype(np.float64)
+        cap += on * power_by_partition[name]
+    return cap / total

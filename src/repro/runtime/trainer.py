@@ -1,0 +1,285 @@
+"""Energy-aware trainer: the machinery the paper's decision model drives.
+
+The trainer couples three clocks:
+
+  * the *step* clock — real JAX `train_step` executions (jit, donated
+    state, microbatch accumulation, optional int8 gradient compression);
+  * the *simulated wall* clock — each step (or idle tick) advances
+    ``hours_per_step`` of market time against the price stream;
+  * the *cost* clock — `CostMeter` integrates fixed + energy spend.
+
+Each tick, the `EnergyAwareScheduler` decides RUN / SHUTDOWN / RESUME.
+A SHUTDOWN checkpoints (measured, not assumed — the save latency plus
+restore latency and restart energy feed the scheduler's overhead-adjusted
+viability gate) and suspends compute; a RESUME restores parameters from
+the checkpoint, bit-identically, and training continues at the step where
+it stopped (the data pipeline is stateless-by-step, so the token stream is
+unaffected by the detour).
+
+Fault tolerance uses the *same* path: an injected (or real) failure
+discards live state and restores the last checkpoint — lost steps are
+re-run and separately accounted. Straggler mitigation is a per-step
+deadline: simulated host step-times are sampled per tick, and hosts
+slower than ``straggler_deadline`` x median have their microbatch dropped
+(gradient renormalised) instead of stalling the step — the accounting
+reports both the time saved and the tokens lost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models.model import init_params, loss_fn
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_init,
+                               adamw_update)
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.accounting import CostMeter
+from repro.runtime.scheduler import Action, EnergyAwareScheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    steps: int = 200
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    hours_per_step: float = 1.0        # simulated market-hours per step
+    microbatches: int = 1              # gradient accumulation
+    grad_compress: bool = False        # int8 error-feedback DP all-reduce
+    # simulated cluster characteristics (cost model inputs)
+    power_mw: float = 1.0
+    fixed_cost_per_hour: float = 160.0
+    idle_power_frac: float = 0.0
+    restart_energy_mwh: float = 0.25   # energy to restart the fleet
+    restart_time_h: float = 0.1        # wall time lost per resume
+    # fault injection & stragglers (both off by default)
+    fault_prob_per_step: float = 0.0
+    straggler_sigma: float = 0.0       # lognormal sigma of host step time
+    straggler_deadline: float = 1.5    # x median; slower microbatch dropped
+    n_hosts: int = 8
+    seed: int = 0
+
+
+class Trainer:
+    """Drives (model, optimizer, data) under an energy-aware schedule."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 scheduler: Optional[EnergyAwareScheduler] = None,
+                 opt: Optional[AdamWConfig] = None,
+                 data: Optional[SyntheticLM] = None,
+                 batch_size: int = 8, seq_len: int = 128):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.scheduler = scheduler
+        self.opt = opt or AdamWConfig(moment_dtype=cfg.moment_dtype)
+        self.data = data or SyntheticLM(vocab=cfg.vocab, seq_len=seq_len,
+                                        global_batch=batch_size,
+                                        seed=tcfg.seed)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir)
+        self.meter = CostMeter(power_mw=tcfg.power_mw,
+                               fixed_cost_per_hour=tcfg.fixed_cost_per_hour,
+                               idle_power_frac=tcfg.idle_power_frac)
+        self.rng = np.random.default_rng(tcfg.seed)
+
+        key = jax.random.PRNGKey(tcfg.seed)
+        self.params = init_params(key, cfg)
+        self.opt_state = adamw_init(self.params, self.opt)
+        from repro.optim.compress import init_error_feedback
+        self.err = (init_error_feedback(self.params)
+                    if tcfg.grad_compress else
+                    jax.tree.map(lambda p: jnp.zeros((), jnp.float32),
+                                 self.params))
+        self.step = 0
+        self.running = True
+        self.history: list[dict] = []
+        self.lost_steps = 0
+        self.dropped_microbatches = 0
+        warm = max(tcfg.steps // 20, 1)
+        self._lr = lambda step: warmup_cosine(step, self.opt.lr, warm,
+                                              tcfg.steps)
+        self._train_step = self._build_train_step()
+
+    # ------------------------------------------------------------------
+    def _build_train_step(self) -> Callable:
+        cfg, opt, n_micro = self.cfg, self.opt, self.tcfg.microbatches
+        compress = self.tcfg.grad_compress
+
+        def one_grad(params, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+            return grads, metrics
+
+        def train_step(params, opt_state: AdamWState, err, batch, lr,
+                       micro_keep):
+            """micro_keep: [n_micro] 0/1 — straggler-dropped microbatches
+            contribute zero gradient; the mean renormalises over kept.
+            ``err``: int8-compression error-feedback state (pytree like
+            params; unused when compression is off)."""
+            if n_micro == 1:
+                grads, metrics = one_grad(params, batch)
+            else:
+                def split(x):
+                    return x.reshape((n_micro, x.shape[0] // n_micro)
+                                     + x.shape[1:])
+                micro = jax.tree.map(split, batch)
+
+                def acc_fn(acc, inp):
+                    mb, keep = inp
+                    g, m = one_grad(params, mb)
+                    g = jax.tree.map(lambda a, b: a + keep * b, acc[0], g)
+                    return (g, jax.tree.map(lambda a, b: a + keep * b,
+                                            acc[1], m)), None
+
+                zeros_g = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                zeros_m = {"loss": 0., "ce": 0., "moe_aux": 0., "tokens": 0.}
+                (grads, msum), _ = jax.lax.scan(
+                    acc_fn, (zeros_g, zeros_m), (micro, micro_keep))
+                denom = jnp.maximum(jnp.sum(micro_keep), 1.0)
+                grads = jax.tree.map(lambda g: g / denom, grads)
+                metrics = jax.tree.map(lambda m: m / denom, msum)
+            if compress:
+                # single-host path: the quantisation (and its error
+                # feedback) is real; the pod all-gather is the identity.
+                # Multi-host uses compress.compressed_pmean under shard_map.
+                from repro.optim.compress import dequantize, quantize_int8
+
+                def qdq(g, e):
+                    q, scale, new_e = quantize_int8(g, e)
+                    return dequantize(q, scale).astype(g.dtype), new_e
+
+                pairs = jax.tree.map(qdq, grads, err)
+                grads = jax.tree.map(lambda t: t[0], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+                err = jax.tree.map(lambda t: t[1], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+            new_params, new_opt, stats = adamw_update(
+                grads, opt_state, params, opt, lr=lr)
+            return new_params, new_opt, err, {**metrics, **stats}
+
+        return jax.jit(train_step, donate_argnums=(0, 1, 2))
+
+    # ------------------------------------------------------------------
+    def _simulate_step_hosts(self) -> tuple[float, np.ndarray]:
+        """Sample per-host step-time multipliers; return (step-time factor,
+        keep mask over microbatches) under the straggler policy."""
+        t = self.tcfg
+        if t.straggler_sigma <= 0 or t.microbatches == 1:
+            return 1.0, np.ones((t.microbatches,), np.float32)
+        mult = self.rng.lognormal(0.0, t.straggler_sigma, t.n_hosts)
+        med = float(np.median(mult))
+        deadline = t.straggler_deadline * med
+        # microbatches map round-robin onto hosts
+        host_of = np.arange(t.microbatches) % t.n_hosts
+        keep = (mult[host_of] <= deadline).astype(np.float32)
+        if keep.sum() == 0:
+            keep[:] = 1.0
+        eff = min(float(np.max(np.where(mult <= deadline, mult, 0.0))),
+                  deadline)
+        self.dropped_microbatches += int((1 - keep).sum())
+        return max(eff, med), keep
+
+    def _checkpoint(self, blocking: bool = False):
+        self.ckpt.save(self.step,
+                       {"params": self.params, "opt": self.opt_state,
+                        "err": self.err},
+                       metadata={"step": self.step}, blocking=blocking)
+
+    def _restore(self):
+        (tree, meta) = self.ckpt.restore(
+            {"params": self.params, "opt": self.opt_state,
+             "err": self.err})
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.err = tree["err"]
+        restored = int(meta["step"])
+        self.lost_steps += max(self.step - restored, 0)
+        self.step = restored
+
+    # ------------------------------------------------------------------
+    def run(self, log_every: int = 50,
+            on_step: Optional[Callable[[dict], None]] = None) -> dict:
+        t = self.tcfg
+        self._checkpoint(blocking=True)          # step-0 baseline
+        wall0 = time.perf_counter()
+        while self.step < t.steps:
+            price = (self.scheduler.stream.current()
+                     if self.scheduler else 0.0)
+            action = (self.scheduler.step(t.hours_per_step)
+                      if self.scheduler else Action.RUN)
+
+            if action in (Action.SHUTDOWN,):
+                self._checkpoint(blocking=True)
+                self.meter.shutdown_event()
+                self.meter.tick(t.hours_per_step, price, running=False)
+                self.running = False
+                continue
+            if action is Action.STAY_DOWN:
+                self.meter.tick(t.hours_per_step, price, running=False)
+                continue
+            if action is Action.RESUME:
+                self._restore()
+                self.meter.restart_event(price, t.restart_energy_mwh,
+                                         t.restart_time_h)
+                self.running = True
+                # the resume tick itself delivers compute below
+
+            # fault injection (independent of the schedule)
+            if (t.fault_prob_per_step > 0
+                    and self.rng.random() < t.fault_prob_per_step):
+                self._restore()
+                self.meter.restart_event(price, t.restart_energy_mwh,
+                                         t.restart_time_h)
+
+            slowdown, keep = self._simulate_step_hosts()
+            batch = self.data.batch_at(self.step)
+            lr = self._lr(self.step)
+            self.params, self.opt_state, self.err, metrics = \
+                self._train_step(self.params, self.opt_state, self.err,
+                                 batch, lr, jnp.asarray(keep))
+            self.meter.tick(t.hours_per_step * slowdown, price,
+                            running=True)
+            self.step += 1
+
+            if self.step % t.ckpt_every == 0:
+                self._checkpoint()
+            rec = {"step": self.step, "loss": float(metrics["loss"]),
+                   "price": price, "cpc": self.meter.cpc,
+                   "running": True}
+            self.history.append(rec)
+            if on_step is not None:
+                on_step(rec)
+            if log_every and self.step % log_every == 0:
+                print(f"step {self.step:5d} loss {rec['loss']:.4f} "
+                      f"price {price:7.2f} cpc {self.meter.cpc:9.2f} "
+                      f"x={self.meter.realized_x:.3%}")
+
+        self.ckpt.wait()
+        out = self.meter.summary()
+        out.update({
+            "final_loss": self.history[-1]["loss"] if self.history else None,
+            "lost_steps": self.lost_steps,
+            "dropped_microbatches": self.dropped_microbatches,
+            "wall_s": time.perf_counter() - wall0,
+            "ckpt_save_s": self.ckpt.last_save_s,
+            "ckpt_restore_s": self.ckpt.last_restore_s,
+        })
+        return out
+
+    # ------------------------------------------------------------------
+    def measured_restart_overhead_frac(self) -> float:
+        """Measured shutdown overhead as a fraction of one suspend-hour's
+        energy saving — feeds SchedulerConfig.restart_overhead_frac."""
+        t = self.tcfg
+        save_h = self.ckpt.last_save_s / 3600.0
+        restore_h = self.ckpt.last_restore_s / 3600.0
+        overhead_mwh = (t.restart_energy_mwh
+                        + t.power_mw * (save_h + restore_h + t.restart_time_h))
+        return overhead_mwh / max(t.power_mw * 1.0, 1e-9)

@@ -1,0 +1,2 @@
+from repro.serving.engine import (Request, ServeConfig,
+                                  ServingEngine)  # noqa: F401

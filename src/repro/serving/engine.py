@@ -1,0 +1,176 @@
+"""Price-aware batched serving engine.
+
+Continuous batching over a fixed pool of decode slots: arriving requests
+are prefetched (prefill) into free slots; every engine tick runs one
+batched `decode_step` for all active slots. The KV cache pool is allocated
+once at ``max_seq`` and slots are recycled — the standard
+(vLLM-style, TPU-simplified) slot engine, with the cache living as one
+stacked pytree so the decode step is a single jit.
+
+Variable capacity for serving (the paper's technique on the inference
+side): the *admission width* follows the energy price. At high prices the
+engine stops admitting new requests (optionally shrinking to a
+``min_slots`` floor for SLO floors, per the paper's §V-B note that
+operators may keep a subset up for availability) and drains; at low prices
+it runs the full width. The cost meter attributes energy to served tokens,
+yielding EUR/1k-tokens — CPC with "compute" = tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, init_cache, prefill
+from repro.runtime.accounting import CostMeter
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # [prompt_len] int32
+    max_new: int
+    arrived_h: float = 0.0
+    # filled by the engine
+    started_h: Optional[float] = None
+    done_h: Optional[float] = None
+    output: Optional[list] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 8                  # decode batch width
+    min_slots: int = 0              # SLO floor kept during high prices
+    max_seq: int = 256
+    hours_per_tick: float = 0.02    # simulated market-time per decode tick
+    power_mw: float = 0.5
+    fixed_cost_per_hour: float = 80.0
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig,
+                 scheduler=None):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.scheduler = scheduler   # EnergyAwareScheduler or None
+        self.meter = CostMeter(power_mw=scfg.power_mw,
+                               fixed_cost_per_hour=scfg.fixed_cost_per_hour)
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}       # slot -> request
+        self.remaining: dict[int, int] = {}
+        self.clock_h = 0.0
+        self.tokens_served = 0
+        self.completed: list[Request] = []
+
+        b, s = scfg.slots, scfg.max_seq
+        self.caches = init_cache(cfg, b, s)
+        self.positions = jnp.zeros((b,), jnp.int32)
+        self.tokens = jnp.zeros((b, 1), jnp.int32)
+        self.live = np.zeros((b,), bool)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: decode_step(p, t, c, pos, cfg))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.arrived_h = self.clock_h
+        self.queue.append(req)
+
+    def _admission_width(self) -> int:
+        """Price-gated number of usable slots."""
+        if self.scheduler is None:
+            return self.scfg.slots
+        price = self.scheduler.stream.current()
+        if price > self.scheduler.p_thresh:
+            return self.scfg.min_slots
+        return self.scfg.slots
+
+    def _fill_slots(self) -> None:
+        width = self._admission_width()
+        for slot in range(self.scfg.slots):
+            if self.live[slot] or slot >= width or not self.queue:
+                continue
+            req = self.queue.popleft()
+            req.started_h = self.clock_h
+            plen = len(req.prompt)
+            batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+            logits, caches1 = prefill(self.params, batch, self.cfg,
+                                      max_seq=self.scfg.max_seq)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)  # greedy
+            # copy the single-sequence cache into slot `slot`
+            self.caches = jax.tree.map(
+                lambda pool, one: _slot_set(pool, one, slot),
+                self.caches, caches1)
+            self.positions = self.positions.at[slot].set(plen)
+            self.tokens = self.tokens.at[slot, 0].set(nxt[0])
+            self.live[slot] = True
+            self.active[slot] = req
+            self.remaining[slot] = req.max_new - 1
+            req.output = [int(nxt[0])]
+            self.tokens_served += 1
+
+    def tick(self) -> None:
+        """One engine tick: admissions + one batched decode step."""
+        price = (self.scheduler.stream.current()
+                 if self.scheduler else 0.0)
+        if self.scheduler is not None:
+            self.scheduler.step(self.scfg.hours_per_tick)
+        self._fill_slots()
+        any_live = bool(self.live.any())
+        if any_live:
+            logits, self.caches = self._decode(
+                self.params, self.tokens, self.caches, self.positions)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)       # [B]
+            self.tokens = nxt[:, None]
+            self.positions = self.positions + self.live.astype(np.int32)
+            for slot in list(self.active):
+                if not self.live[slot]:
+                    continue
+                req = self.active[slot]
+                req.output.append(int(nxt[slot]))
+                self.tokens_served += 1
+                self.remaining[slot] -= 1
+                full = int(self.positions[slot]) >= self.scfg.max_seq - 1
+                if self.remaining[slot] <= 0 or full:
+                    req.done_h = self.clock_h
+                    self.completed.append(req)
+                    del self.active[slot], self.remaining[slot]
+                    self.live[slot] = False
+        self.meter.tick(self.scfg.hours_per_tick, price, running=any_live,
+                        load=float(self.live.mean()) if any_live else 0.0)
+        self.clock_h += self.scfg.hours_per_tick
+
+    def run(self, ticks: int) -> dict:
+        for _ in range(ticks):
+            self.tick()
+        done = self.completed
+        waits = [r.started_h - r.arrived_h for r in done
+                 if r.started_h is not None]
+        out = self.meter.summary()
+        out.update({
+            "tokens_served": self.tokens_served,
+            "completed": len(done),
+            "queued": len(self.queue),
+            "mean_queue_h": float(np.mean(waits)) if waits else 0.0,
+            "eur_per_1k_tokens": (self.meter.tco
+                                  / max(self.tokens_served, 1) * 1000.0),
+        })
+        return out
+
+
+def _slot_set(pool: jax.Array, one: jax.Array, slot: int) -> jax.Array:
+    """Write a batch-1 cache leaf into slot ``slot`` of the pooled leaf.
+    Cache leaves have batch as the first non-layer axis: pooled [L, B, ...]
+    or [B, ...]; `one` matches with B=1."""
+    if pool.ndim == one.ndim and pool.shape[0] != one.shape[0]:
+        # [B, ...] leaf
+        return jax.lax.dynamic_update_slice_in_dim(
+            pool, one.astype(pool.dtype), slot, axis=0)
+    return jax.lax.dynamic_update_slice_in_dim(
+        pool, one.astype(pool.dtype), slot, axis=1)

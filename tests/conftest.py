@@ -1,0 +1,7 @@
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: subprocess/multi-device tests (deselect with "
+        "-m 'not slow')")

@@ -1,0 +1,105 @@
+"""Elastic capacity + operational policy tests (paper §V-C machinery)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import (hysteresis_policy, policy_cpc,
+                               shutdown_cost_adjusted_viability,
+                               threshold_policy)
+from repro.core.tco import cpc_with_shutdowns, make_system
+from repro.core.price_model import price_stats
+from repro.runtime.elastic import (capacity_plan, capacity_schedule,
+                                   reshard_tree, resize_mesh)
+
+
+# ---------------------------------------------------------------------------
+# elastic capacity
+# ---------------------------------------------------------------------------
+
+def test_capacity_plan_preserves_global_batch():
+    plan = capacity_plan(level=0.5, dp_total=16, base_microbatches=2)
+    assert plan.dp_size == 8
+    # half the replicas -> twice the accumulation
+    assert plan.microbatches == 4
+    assert plan.level == pytest.approx(0.5)
+
+
+def test_capacity_plan_floors_at_one_replica():
+    plan = capacity_plan(level=0.01, dp_total=8)
+    assert plan.dp_size == 1
+    assert plan.microbatches == 8
+
+
+def test_resize_mesh_single_device():
+    devices = np.asarray(jax.devices())
+    mesh = resize_mesh(devices, level=1.0, model_parallel=1)
+    assert mesh.size == 1
+    assert tuple(mesh.shape.keys()) == ("data", "model")
+
+
+def test_reshard_tree_places_on_mesh():
+    from jax.sharding import Mesh
+    from repro.parallel.axes import SINGLE_DEVICE_RULES
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    tree = {"w": jnp.arange(8.0).reshape(2, 4)}
+    out = reshard_tree(tree, mesh, {"w": ("batch", None)},
+                       SINGLE_DEVICE_RULES)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_capacity_schedule_blends_partitions():
+    prices = np.asarray([10.0, 10.0, 100.0, 1000.0])
+    plans = {
+        "a": {"viable": True, "p_thresh": 50.0},    # off at 100, 1000
+        "b": {"viable": True, "p_thresh": 500.0},   # off at 1000
+        "c": {"viable": False, "p_thresh": np.inf}, # never off
+    }
+    power = {"a": 1.0, "b": 1.0, "c": 2.0}
+    cap = capacity_schedule(prices, plans, power)
+    np.testing.assert_allclose(cap, [1.0, 1.0, 0.75, 0.5])
+
+
+# ---------------------------------------------------------------------------
+# operational policies (beyond-paper §V-A/V-C refinements)
+# ---------------------------------------------------------------------------
+
+def test_hysteresis_reduces_churn():
+    prices = np.asarray([50, 120, 90, 120, 90, 120, 50], np.float32)
+    single = np.asarray(threshold_policy(prices, 100.0))
+    hyst = np.asarray(hysteresis_policy(prices, p_on=80.0, p_off=100.0))
+    churn = lambda m: int(np.abs(np.diff(m)).sum())  # noqa: E731
+    assert churn(hyst) < churn(single)
+    # hysteresis never runs while a single threshold would shut down
+    assert np.all(hyst <= single + 1e-9)
+
+
+def test_policy_cpc_reduces_to_eq13_without_overheads():
+    rng = np.random.default_rng(0)
+    prices = np.abs(rng.normal(80, 40, 1000)).astype(np.float32)
+    sysd = make_system(fixed=50_000.0, power=1.0, period=1000.0)
+    st = price_stats(prices, 0.05)
+    mask = threshold_policy(prices, float(st.p_thresh))
+    got = float(policy_cpc(sysd, prices, mask))
+    want = float(cpc_with_shutdowns(sysd, st.p_avg, st.k, st.x))
+    assert got == pytest.approx(want, rel=2e-3)
+
+
+def test_restart_overheads_increase_cpc():
+    rng = np.random.default_rng(1)
+    prices = np.abs(rng.normal(80, 40, 500)).astype(np.float32)
+    sysd = make_system(fixed=10_000.0, power=1.0, period=500.0)
+    mask = threshold_policy(prices, 150.0)
+    free = float(policy_cpc(sysd, prices, mask))
+    costly = float(policy_cpc(sysd, prices, mask,
+                              restart_energy_mwh=0.5, restart_time_h=0.5))
+    assert costly > free
+
+
+def test_overhead_adjusted_viability_shrinks_region():
+    # viable at zero overhead, not viable once overhead eats the spike
+    assert bool(shutdown_cost_adjusted_viability(2.0, 4.0, 0.0))
+    assert not bool(shutdown_cost_adjusted_viability(2.0, 4.0, 0.5))

@@ -1,0 +1,152 @@
+"""Pallas kernel sweeps: every kernel vs its pure-jnp oracle (interpret
+mode on CPU), across shapes, dtypes, GQA ratios, masks and continuations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.ssm import ssd_chunked
+
+rng = np.random.default_rng(0)
+
+
+def t(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+FLASH_CASES = [
+    # B, Sq, Skv, H, G, D, causal, window, q_offset
+    (2, 128, 128, 4, 2, 64, True, 0, 0),
+    (1, 100, 100, 8, 2, 64, True, 0, 0),      # non-block-multiple seq
+    (2, 64, 256, 4, 4, 32, False, 0, 0),      # cross-attention style
+    (1, 128, 128, 4, 1, 64, True, 32, 0),     # sliding window, MQA
+    (1, 16, 144, 4, 2, 64, True, 0, 128),     # chunked prefill offset
+    (1, 128, 128, 4, 2, 64, True, 100, 0),    # window > block
+    (2, 96, 96, 6, 3, 128, True, 0, 0),       # head_dim 128
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_ref(case):
+    b, sq, skv, h, g, d, causal, win, qo = case
+    q, k, v = t(b, sq, h, d), t(b, skv, g, d), t(b, skv, g, d)
+    out = ops.flash_attention(q, k, v, causal=causal, window=win,
+                              q_offset=qo, bq=32, bkv=32)
+    want = ref.attention_ref(q, k, v, causal=causal, window=win,
+                             q_offset=qo)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q, k, v = (t(1, 64, 4, 64, dtype=jnp.bfloat16) for _ in range(3))
+    out = ops.flash_attention(q, k, v, causal=True, bq=32, bkv=32)
+    want = ref.attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), atol=2e-2, rtol=2e-2)
+
+
+def test_flash_matches_model_blockwise():
+    """Three-way agreement: pallas kernel == model's XLA blockwise path."""
+    from repro.configs.base import get_config
+    from repro.configs.inputs import reduced_config
+    from repro.models.attention import blockwise_attention
+    cfg = reduced_config(get_config("qwen1.5-0.5b")).replace(
+        attn_q_chunk=16, attn_kv_chunk=32)
+    q, k, v = t(2, 64, 4, 16), t(2, 64, 4, 16), t(2, 64, 4, 16)
+    xla = blockwise_attention(q, k, v, cfg, causal=True)
+    pal = blockwise_attention(q, k, v, cfg.replace(attn_impl="pallas"),
+                              causal=True)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(pal),
+                               atol=2e-5, rtol=2e-5)
+
+
+DECODE_CASES = [
+    (2, 8, 2, 64, 100),
+    (1, 4, 4, 32, 256),
+    (3, 16, 2, 128, 77),
+    (1, 4, 1, 64, 513),       # MQA, non-multiple cache
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_matches_ref(case):
+    b, h, g, d, w = case
+    q, k, v = t(b, 1, h, d), t(b, w, g, d), t(b, w, g, d)
+    valid = jnp.asarray(rng.random((b, w)) > 0.3)
+    valid = valid.at[:, 0].set(True)          # never fully masked
+    out = ops.decode_attention(q, k, v, valid, bkv=32)
+    want = ref.decode_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+SSD_CASES = [
+    # B, S, H, P, G, N, chunk
+    (2, 64, 4, 16, 1, 32, 16),
+    (1, 128, 8, 32, 2, 16, 32),
+    (2, 96, 4, 64, 1, 128, 48),
+    (1, 64, 2, 8, 1, 8, 64),      # single chunk
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_matches_sequential_oracle(case):
+    b, s, h, p, g, n, l = case
+    x = t(b, s, h, p)
+    dt = jnp.abs(t(b, s, h)) * 0.1
+    a = -jnp.abs(t(h)) - 0.1
+    bb, cc = t(b, s, g, n, scale=0.3), t(b, s, g, n, scale=0.3)
+    y1, h1 = ops.ssd_scan(x, dt, a, bb, cc, l)
+    y2, h2 = ref.ssd_ref(x, dt, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("case", SSD_CASES[:2])
+def test_ssd_scan_matches_model_chunked(case):
+    """Kernel == the model's independently-written chunked jnp path."""
+    b, s, h, p, g, n, l = case
+    x = t(b, s, h, p)
+    dt = jnp.abs(t(b, s, h)) * 0.1
+    a = -jnp.abs(t(h)) - 0.1
+    bb, cc = t(b, s, g, n, scale=0.3), t(b, s, g, n, scale=0.3)
+    y1, h1 = ops.ssd_scan(x, dt, a, bb, cc, l)
+    y2, h2 = ssd_chunked(x, dt, a, bb, cc, l)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_h0_continuation():
+    """Two half-sequence scans chained via h0 == one full scan — the
+    property serving prefill-continuation relies on."""
+    b, s, h, p, g, n, l = 2, 64, 4, 16, 1, 32, 16
+    x = t(b, s, h, p)
+    dt = jnp.abs(t(b, s, h)) * 0.1
+    a = -jnp.abs(t(h)) - 0.1
+    bb, cc = t(b, s, g, n, scale=0.3), t(b, s, g, n, scale=0.3)
+    yf, hf = ops.ssd_scan(x, dt, a, bb, cc, l)
+    y1, h1 = ops.ssd_scan(x[:, :32], dt[:, :32], a, bb[:, :32],
+                          cc[:, :32], l)
+    y2, h2 = ops.ssd_scan(x[:, 32:], dt[:, 32:], a, bb[:, 32:],
+                          cc[:, 32:], l, h0=h1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(yf), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(hf),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_flash_fully_masked_rows_are_finite():
+    """Rows whose window excludes every key must not produce NaNs."""
+    q, k, v = t(1, 32, 2, 16), t(1, 32, 2, 16), t(1, 32, 2, 16)
+    # q_offset far beyond kv length + tiny window: all rows fully masked
+    out = ops.flash_attention(q, k, v, causal=True, window=4,
+                              q_offset=1000, bq=16, bkv=16)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,97 @@
+"""Synthetic market generator + calibration tests."""
+
+import numpy as np
+import pytest
+
+from repro.core.optimizer import optimal_shutdown
+from repro.core.regions import PAPER_TABLE2, compute_region_row
+from repro.energy.forecast import mae, seasonal_naive
+from repro.energy.markets import MarketParams, diurnal_profile, \
+    generate_market
+from repro.energy.presets import REGION_PRESETS, region_params
+from repro.energy.smard import load_price_csv
+from repro.energy.stream import PriceStream
+
+
+def test_generator_hits_target_mean():
+    md = generate_market(MarketParams(p_avg=77.84, n_hours=8760, seed=1))
+    assert float(np.mean(md.prices)) == pytest.approx(77.84, rel=1e-3)
+
+
+def test_generator_reproducible_by_seed():
+    a = generate_market(MarketParams(seed=5))
+    b = generate_market(MarketParams(seed=5))
+    np.testing.assert_array_equal(np.asarray(a.prices),
+                                  np.asarray(b.prices))
+    c = generate_market(MarketParams(seed=6))
+    assert not np.array_equal(np.asarray(a.prices), np.asarray(c.prices))
+
+
+def test_generator_has_negative_and_spike_hours():
+    md = generate_market(MarketParams(n_hours=8760, seed=2))
+    p = np.asarray(md.prices)
+    assert (p < 0).sum() > 10             # negative-price hours exist
+    assert p.max() > 4 * p.mean()         # spikes exist
+
+
+def test_generation_volumes_positive():
+    md = generate_market(MarketParams(n_hours=1000, seed=3))
+    assert np.all(np.asarray(md.fossil) > 0)
+    assert np.all(np.asarray(md.renewable) > 0)
+
+
+def test_diurnal_profile_midday_dip():
+    """Fig. 1: solar depresses midday prices vs the evening peak."""
+    md = generate_market(MarketParams(n_hours=8760, seed=4))
+    prof = np.asarray(diurnal_profile(md))
+    assert prof[19] > prof[13]            # evening peak > solar midday
+
+
+def test_calibrated_regions_reproduce_paper_break_even():
+    """Calibrated presets must land near Table II's break-even fractions
+    (the quantity the viability decision depends on)."""
+    for region in ("germany", "south_australia", "france"):
+        row_paper = PAPER_TABLE2[region]
+        md = generate_market(region_params(region))
+        row = compute_region_row(region, np.asarray(md.prices),
+                                 psi=row_paper.psi)
+        assert row.x_be_pct == pytest.approx(row_paper.x_be_pct,
+                                             rel=0.35), region
+
+
+def test_all_regions_have_presets():
+    for region in REGION_PRESETS:
+        md = generate_market(region_params(region))
+        assert np.isfinite(np.asarray(md.prices)).all()
+
+
+def test_price_stream_trailing_and_peek():
+    prices = np.arange(100.0)
+    s = PriceStream(prices, window=10, start=20)
+    assert s.current() == 20.0
+    np.testing.assert_array_equal(s.trailing(), np.arange(11.0, 21.0))
+    np.testing.assert_array_equal(s.peek(3), np.asarray([21.0, 22., 23.]))
+    s.advance(5)
+    assert s.current() == 25.0
+
+
+def test_smard_csv_roundtrip(tmp_path):
+    from repro.energy.smard import load_smard_csv
+    csv = tmp_path / "p.csv"
+    csv.write_text("Datum;Preis [EUR/MWh]\n01.01.2024 00:00;50,5\n"
+                   "01.01.2024 01:00;-3,2\n01.01.2024 02:00;1.200,0\n")
+    p = load_smard_csv(str(csv))
+    np.testing.assert_allclose(p, [50.5, -3.2, 1200.0])
+
+
+def test_generic_price_csv(tmp_path):
+    csv = tmp_path / "p.csv"
+    csv.write_text("price\n50.5\n-3.2\n120.0\n")
+    np.testing.assert_allclose(load_price_csv(str(csv)),
+                               [50.5, -3.2, 120.0])
+
+
+def test_forecast_seasonal_naive():
+    prices = np.tile(np.arange(24.0), 30)      # perfectly periodic
+    pred = seasonal_naive(prices[:-24], horizon=24)
+    assert mae(pred, prices[-24:]) == pytest.approx(0.0, abs=1e-9)

@@ -1,0 +1,202 @@
+"""Runtime tests: scheduler policy, cost accounting vs the closed-form
+model, bit-identical pause/resume, fault recovery, straggler accounting."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.configs.inputs import reduced_config
+from repro.core.optimizer import optimal_shutdown
+from repro.core.policy import policy_cpc, threshold_policy
+from repro.core.tco import cpc_with_shutdowns, make_system, psi
+from repro.energy.markets import MarketParams, generate_market
+from repro.energy.stream import PriceStream
+from repro.runtime.accounting import CostMeter
+from repro.runtime.scheduler import (Action, EnergyAwareScheduler,
+                                     Partition, SchedulerConfig,
+                                     partition_plans)
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def market():
+    return generate_market(MarketParams(n_hours=3000, seed=7))
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def test_oracle_threshold_matches_model(market):
+    prices = np.asarray(market.prices)
+    sched = EnergyAwareScheduler(PriceStream(prices),
+                                 SchedulerConfig(psi=2.0, mode="oracle"))
+    plan = optimal_shutdown(prices, 2.0)
+    assert sched.viable == bool(plan.viable)
+    assert sched.p_thresh == pytest.approx(float(plan.p_thresh), rel=1e-5)
+
+
+def test_scheduler_runs_below_threshold_and_stops_above(market):
+    prices = np.asarray(market.prices)
+    sched = EnergyAwareScheduler(PriceStream(prices),
+                                 SchedulerConfig(psi=2.0, mode="oracle",
+                                                 hysteresis=1.0))
+    mask = []
+    for _ in range(2000):
+        a = sched.step()
+        mask.append(a in (Action.RUN, Action.RESUME))
+    mask = np.asarray(mask)
+    want = prices[:2000] <= sched.p_thresh
+    # with hysteresis=1.0 the online policy equals the threshold policy
+    assert (mask == want).mean() > 0.99
+
+
+def test_rolling_mode_adapts(market):
+    prices = np.asarray(market.prices)
+    sched = EnergyAwareScheduler(
+        PriceStream(prices, window=24 * 14),
+        SchedulerConfig(psi=2.0, mode="rolling", refit_hours=24))
+    for _ in range(24 * 30):
+        sched.step()
+    assert np.isfinite(sched.p_thresh)
+
+
+def test_overhead_gate_disables_marginal_plans(market):
+    prices = np.asarray(market.prices)
+    base = EnergyAwareScheduler(PriceStream(prices),
+                                SchedulerConfig(psi=2.0))
+    k_opt = float(optimal_shutdown(prices, 2.0).k_opt)
+    # an overhead big enough to push k(1-o) below Psi+1 must disable it
+    overhead = 1.0 - (3.0 / k_opt) + 0.01
+    gated = EnergyAwareScheduler(
+        PriceStream(prices),
+        SchedulerConfig(psi=2.0, restart_overhead_frac=overhead))
+    assert base.viable and not gated.viable
+
+
+def test_partition_plans_lower_psi_more_viable(market):
+    prices = np.asarray(market.prices)
+    parts = [Partition("efficient", power_mw=0.5, fixed_cost_per_hour=200),
+             Partition("power_hog", power_mw=2.0, fixed_cost_per_hour=200)]
+    plans = partition_plans(parts, prices)
+    assert plans["power_hog"]["psi"] < plans["efficient"]["psi"]
+    assert plans["power_hog"]["cpc_reduction"] >= \
+        plans["efficient"]["cpc_reduction"]
+
+
+# ---------------------------------------------------------------------------
+# accounting vs closed form
+# ---------------------------------------------------------------------------
+
+def test_costmeter_matches_closed_form_threshold_policy(market):
+    """Integrating hour-by-hour with a threshold mask must reproduce
+    CPC_WS from Eq. (13) (zero restart costs, x from the mask)."""
+    prices = np.asarray(market.prices)[:2000]
+    sysd = make_system(fixed=160.0 * 2000, power=1.0, period=2000.0)
+    plan = optimal_shutdown(prices, float(psi(sysd, prices.mean())))
+    thr = float(plan.p_thresh)
+
+    meter = CostMeter(power_mw=1.0, fixed_cost_per_hour=160.0)
+    for p in prices:
+        meter.tick(1.0, float(p), running=p <= thr)
+    mask = threshold_policy(prices, thr)
+    want = float(policy_cpc(sysd, prices, mask))
+    assert meter.cpc == pytest.approx(want, rel=1e-4)
+    # and both agree with the dimensionless closed form
+    x = 1.0 - float(mask.mean())
+    from repro.core.price_model import price_stats
+    st = price_stats(prices, x)
+    closed = float(cpc_with_shutdowns(sysd, st.p_avg, st.k, st.x))
+    assert meter.cpc == pytest.approx(closed, rel=2e-3)
+
+
+def test_costmeter_restart_costs_reduce_savings():
+    prices = [50.0] * 50 + [500.0] * 5 + [50.0] * 45
+    free = CostMeter(power_mw=1.0, fixed_cost_per_hour=100.0)
+    costly = CostMeter(power_mw=1.0, fixed_cost_per_hour=100.0)
+    for p in prices:
+        run = p < 400
+        free.tick(1.0, p, running=run)
+        costly.tick(1.0, p, running=run)
+    costly.restart_event(price=50.0, energy_mwh=2.0, lost_hours=1.0)
+    assert costly.cpc > free.cpc
+
+
+# ---------------------------------------------------------------------------
+# trainer: pause/resume, faults, stragglers
+# ---------------------------------------------------------------------------
+
+def _mk_trainer(tmp_path, steps=12, scheduler=None, batch_size=2, **kw):
+    cfg = reduced_config(get_config("qwen1.5-0.5b"))
+    t = Trainer(cfg,
+                TrainerConfig(steps=steps, ckpt_dir=str(tmp_path),
+                              ckpt_every=4, **kw),
+                scheduler=scheduler, batch_size=batch_size, seq_len=16)
+    return t
+
+
+def test_pause_resume_bit_identical(tmp_path, market):
+    """A run interrupted by shutdowns must land on exactly the same
+    parameters as an uninterrupted run (stateless data + checkpointing)."""
+    base = _mk_trainer(tmp_path / "a", steps=10)
+    base.run(log_every=0)
+
+    # scheduler that forces a shutdown after every 3rd step
+    class Forcing:
+        def __init__(self):
+            self.i = 0
+            self.stream = PriceStream(np.asarray(market.prices))
+            self.p_thresh = np.inf
+        def step(self, hours=1.0):
+            self.i += 1
+            self.stream.advance(hours)
+            if self.i % 7 == 4:
+                return Action.SHUTDOWN
+            if self.i % 7 == 5:
+                return Action.STAY_DOWN
+            if self.i % 7 == 6:
+                return Action.RESUME
+            return Action.RUN
+
+    intr = _mk_trainer(tmp_path / "b", steps=10, scheduler=Forcing())
+    intr.run(log_every=0)
+    for a, b in zip(jax.tree.leaves(base.params),
+                    jax.tree.leaves(intr.params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_fault_injection_recovers_and_accounts(tmp_path):
+    t = _mk_trainer(tmp_path, steps=10, fault_prob_per_step=0.4, seed=3)
+    out = t.run(log_every=0)
+    assert t.step == 10                      # reached the target anyway
+    assert out["lost_steps"] > 0             # and paid for it
+    assert np.isfinite(out["final_loss"])
+
+
+def test_straggler_mitigation_drops_and_renormalises(tmp_path):
+    t = _mk_trainer(tmp_path, steps=6, straggler_sigma=1.0,
+                    microbatches=4, n_hosts=4, seed=5, batch_size=4)
+    out = t.run(log_every=0)
+    assert out["dropped_microbatches"] > 0
+    assert np.isfinite(out["final_loss"])
+
+
+def test_energy_aware_run_reduces_energy_cost(tmp_path, market):
+    prices = np.asarray(market.prices)
+    sched = EnergyAwareScheduler(PriceStream(prices),
+                                 SchedulerConfig(psi=0.5))  # very viable
+    t = _mk_trainer(tmp_path / "ws", steps=30, scheduler=sched)
+    out_ws = t.run(log_every=0)
+    assert out_ws["restarts"] >= 0
+    # realised x should be near the plan when the series is long enough
+    assert 0.0 <= out_ws["x_realized"] < 0.6
+
+
+def test_grad_compress_trains(tmp_path):
+    t = _mk_trainer(tmp_path, steps=6, grad_compress=True)
+    out = t.run(log_every=0)
+    assert np.isfinite(out["final_loss"])

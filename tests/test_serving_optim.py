@@ -1,0 +1,190 @@
+"""Serving engine + optimizer component tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.configs.inputs import reduced_config
+from repro.models.model import init_params
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, global_norm)
+from repro.optim.compress import dequantize, quantize_int8
+from repro.optim.schedule import warmup_cosine
+from repro.serving.engine import Request, ServeConfig, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced_config(get_config("qwen1.5-0.5b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0, max_new=6):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab - 1,
+                                        size=8).astype(np.int32),
+                    max_new=max_new) for i in range(n)]
+
+
+def test_engine_completes_all_requests(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(params, cfg, ServeConfig(slots=4, max_seq=32))
+    for r in _requests(cfg, 10):
+        eng.submit(r)
+    out = eng.run(ticks=40)
+    assert out["completed"] == 10
+    assert out["tokens_served"] == 10 * 6
+    assert all(len(r.output) == 6 for r in eng.completed)
+
+
+def test_engine_greedy_matches_model(small_model):
+    """Slot decoding must equal a straight prefill+decode_step loop."""
+    from repro.models.model import decode_step, prefill
+    cfg, params = small_model
+    req = _requests(cfg, 1, seed=3, max_new=4)[0]
+    eng = ServingEngine(params, cfg, ServeConfig(slots=2, max_seq=32))
+    eng.submit(req)
+    eng.run(ticks=10)
+    got = eng.completed[0].output
+
+    batch = {"tokens": jnp.asarray(req.prompt[None], jnp.int32)}
+    logits, caches = prefill(params, batch, cfg, max_seq=32)
+    want = [int(jnp.argmax(logits, -1)[0])]
+    pos = len(req.prompt)
+    for _ in range(3):
+        logits, caches = decode_step(
+            params, jnp.asarray([[want[-1]]], jnp.int32), caches,
+            jnp.asarray([pos], jnp.int32), cfg)
+        want.append(int(jnp.argmax(logits, -1)[0]))
+        pos += 1
+    assert got == want
+
+
+def test_price_gate_blocks_admission(small_model):
+    cfg, params = small_model
+
+    class StubSched:
+        p_thresh = 100.0
+        class stream:                      # noqa: N801 - stub namespace
+            @staticmethod
+            def current():
+                return 500.0               # always above threshold
+        def step(self, hours):
+            return None
+
+    eng = ServingEngine(params, cfg,
+                        ServeConfig(slots=4, min_slots=0, max_seq=32),
+                        scheduler=StubSched())
+    for r in _requests(cfg, 4):
+        eng.submit(r)
+    out = eng.run(ticks=10)
+    assert out["completed"] == 0 and out["queued"] == 4
+
+
+def test_min_slots_keeps_service_during_high_price(small_model):
+    cfg, params = small_model
+
+    class StubSched:
+        p_thresh = 100.0
+        class stream:                      # noqa: N801
+            @staticmethod
+            def current():
+                return 500.0
+        def step(self, hours):
+            return None
+
+    eng = ServingEngine(params, cfg,
+                        ServeConfig(slots=4, min_slots=2, max_seq=32),
+                        scheduler=StubSched())
+    for r in _requests(cfg, 4):
+        eng.submit(r)
+    out = eng.run(ticks=30)
+    assert out["completed"] == 4           # trickles through 2 slots
+
+
+def test_ssm_engine_serves(small_model):
+    cfg = reduced_config(get_config("mamba2-1.3b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, ServeConfig(slots=2, max_seq=32))
+    for r in _requests(cfg, 3, max_new=4):
+        eng.submit(r)
+    out = eng.run(ticks=20)
+    assert out["completed"] == 3
+
+
+# ---------------------------------------------------------------------------
+# optimizer pieces
+# ---------------------------------------------------------------------------
+
+def test_adamw_first_step_matches_manual():
+    opt = AdamWConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8,
+                      weight_decay=0.0, clip_norm=0.0)
+    params = {"w": jnp.asarray([1.0, -2.0])}
+    grads = {"w": jnp.asarray([0.5, 0.5])}
+    state = adamw_init(params, opt)
+    new_p, new_s, _ = adamw_update(grads, state, params, opt)
+    # bias-corrected first step: mhat = g, vhat = g^2 -> delta ~ sign(g)
+    want = params["w"] - 0.1 * grads["w"] / (jnp.abs(grads["w"]) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), np.asarray(want),
+                               rtol=1e-4)
+    assert int(new_s.step) == 1
+
+
+def test_weight_decay_pulls_toward_zero():
+    opt = AdamWConfig(lr=0.1, weight_decay=0.5, clip_norm=0.0)
+    params = {"w": jnp.asarray([10.0])}
+    grads = {"w": jnp.asarray([0.0])}
+    state = adamw_init(params, opt)
+    new_p, _, _ = adamw_update(grads, state, params, opt)
+    assert float(new_p["w"][0]) < 10.0
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_shape():
+    lr0 = float(warmup_cosine(0, 1.0, 10, 100))
+    lr_w = float(warmup_cosine(10, 1.0, 10, 100))
+    lr_end = float(warmup_cosine(100, 1.0, 10, 100))
+    assert lr0 == pytest.approx(0.0)
+    assert lr_w == pytest.approx(1.0)
+    assert lr_end == pytest.approx(0.1, rel=1e-3)
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=4, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_quantize_int8_error_bound(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    q, scale, err = quantize_int8(x, jnp.zeros_like(x))
+    deq = dequantize(q, scale)
+    # quantisation error bounded by scale/2 elementwise (+ residual carried)
+    assert float(jnp.max(jnp.abs(x - deq))) <= float(scale) * 0.5 + 1e-6
+    np.testing.assert_allclose(np.asarray(x - deq), np.asarray(err),
+                               atol=1e-6)
+
+
+def test_error_feedback_converges_in_mean():
+    """Repeated quantisation of the same gradient with error feedback must
+    deliver the true mean value over time (unbiasedness in practice)."""
+    g = jnp.asarray([0.003, -0.002, 0.001], jnp.float32)
+    err = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(200):
+        q, s, err = quantize_int8(g, err)
+        acc = acc + dequantize(q, s)
+    np.testing.assert_allclose(np.asarray(acc / 200), np.asarray(g),
+                               rtol=0.02, atol=1e-5)
