@@ -10,7 +10,7 @@ import argparse
 import time
 import traceback
 
-from benchmarks import bench_runtime, paper_figures
+from benchmarks import bench_fleet, bench_runtime, paper_figures
 from benchmarks.common import ARTIFACTS
 
 
@@ -23,6 +23,7 @@ def main() -> int:
 
     suites = dict(paper_figures.ALL)
     if not args.skip_runtime:
+        suites.update(bench_fleet.ALL)
         suites.update(bench_runtime.ALL)
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}
@@ -88,6 +89,10 @@ def _headline(name: str, out: dict) -> str:
                 "EUR/MWh")
     if name == "fig2_price_regions":
         return f"p_thresh(x=1.15%) = {out['p_thresh']:.1f} EUR/MWh"
+    if name == "bench_fleet":
+        return (f"{out['rows']} rows: {out['rows_per_s_vectorized']:.0f} "
+                f"rows/s vectorized vs {out['rows_per_s_python_loop']:.1f} "
+                f"per-row loop (x{out['speedup']:.0f})")
     if name == "step_time":
         return ", ".join(f"{k}: {v['s_per_step']:.2f}s"
                          for k, v in out.items())

@@ -62,19 +62,26 @@ def policy_energy_cost(sys: SystemCosts, prices: jnp.ndarray,
 def policy_cpc(sys: SystemCosts, prices: jnp.ndarray, uptime: jnp.ndarray,
                idle_power_frac: float = 0.0,
                restart_energy_mwh: float = 0.0,
-               restart_time_h: float = 0.0) -> jnp.ndarray:
+               restart_time_h: float = 0.0,
+               initial_uptime: float = 1.0) -> jnp.ndarray:
     """CPC of an arbitrary uptime mask, including restart overheads.
 
     Each 0->1 transition in the mask costs ``restart_energy_mwh`` (billed at
     the price of the restart interval) and ``restart_time_h`` of lost uptime.
-    With both zero and a threshold mask this reduces exactly to Eq. (13).
+    ``initial_uptime`` is the state *before* the series begins (1.0 — the
+    machine was running — matches `hysteresis_policy`'s initial carry); a
+    series that begins in the off state (``initial_uptime=0.0``) therefore
+    counts its boot at index 0 as a restart instead of silently dropping it.
+    With zero overheads and a threshold mask this reduces exactly to Eq. (13).
     """
     p = jnp.asarray(prices)
     n = p.shape[0]
     dt = sys.T / n
     e_run = policy_energy_cost(sys, prices, uptime, idle_power_frac)
-    starts = jnp.maximum(uptime[1:] - uptime[:-1], 0.0)
-    e_restart = jnp.sum(starts * restart_energy_mwh * p[1:])
+    prev = jnp.concatenate(
+        [jnp.asarray(initial_uptime, uptime.dtype)[None], uptime[:-1]])
+    starts = jnp.maximum(uptime - prev, 0.0)
+    e_restart = jnp.sum(starts * restart_energy_mwh * p)
     up_hours = jnp.sum(uptime) * dt - jnp.sum(starts) * restart_time_h
     return (sys.F + e_run + e_restart) / jnp.maximum(up_hours, 1e-9)
 

@@ -1,0 +1,18 @@
+"""Fleet-scale vectorized backtesting: thousands of (market x system x
+policy) scenario simulations in one jitted pass.
+
+  grid    — ScenarioGrid builder: N markets x M systems x K policies
+            stacked into B = N*M*K scenario rows
+  engine  — single-jit `backtest(grid) -> FleetReport` (vmap over rows,
+            fused scan over hours; Pallas fleet_scan on TPU)
+  report  — per-row CPC/TCO plus fleet summaries: best policy per market,
+            regret vs the closed-form oracle, cross-site dispatch totals
+"""
+
+from repro.fleet.engine import backtest
+from repro.fleet.grid import (PolicySpec, ScenarioGrid, build_grid,
+                              elastic_policy)
+from repro.fleet.report import FleetReport, FleetSummary, summarize
+
+__all__ = ["PolicySpec", "ScenarioGrid", "build_grid", "elastic_policy",
+           "backtest", "FleetReport", "FleetSummary", "summarize"]

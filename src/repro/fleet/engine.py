@@ -1,0 +1,86 @@
+"""Single-jit fleet backtest: every scenario row, every hour, one call.
+
+The engine replaces the per-trace Python loops of `examples/*.py` with one
+jitted pass: per-row prices are gathered from the [N, T] market block, the
+stateful hysteresis/partial-capacity scan runs batched over all B rows
+(Pallas `fleet_scan` on TPU, the pure-JAX `fleet_scan_ref` recurrence
+elsewhere), and cost accounting — restart overheads, idle draw, lost
+restart time included — is a handful of fused [B] vector ops. A 1024-row x
+8760-hour grid is a single dispatch.
+
+Row semantics match `repro.core.policy.policy_cpc` (B=1 with
+``off_level=0`` reproduces it to float round-off). Boundary convention:
+the row state machine resumes on ``p <= p_on``, so a degenerate
+``p_on == p_off`` row is *exactly* `threshold_policy` (whose thresholds
+are price samples, making p == p_off common); a proper hysteresis row
+differs from `hysteresis_policy` (strict ``p < p_on``) only at samples
+exactly equal to p_on — a non-sample value in practice. Monte-Carlo
+market ensembles give confidence bands on the Eq. (19) viability
+question for free along the market axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.fleet.grid import ScenarioGrid
+from repro.fleet.report import FleetReport
+from repro.kernels.fleet_scan import fleet_scan
+from repro.kernels.ref import fleet_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_b",
+                                             "block_t"))
+def _backtest_jit(prices, market_idx, system_idx, policy_idx,
+                  fixed, power, period, p_on, p_off, off_level, idle_frac,
+                  restart_energy_mwh, restart_time_h, *,
+                  use_pallas: bool, block_b: int, block_t: int
+                  ) -> FleetReport:
+    t = prices.shape[1]
+    p_rows = prices[market_idx]                       # [B, T] gather
+
+    if use_pallas:
+        scan = fleet_scan(p_rows, p_on, p_off, off_level, idle_frac,
+                          block_b=block_b, block_t=block_t)
+    else:
+        scan = fleet_scan_ref(p_rows, p_on, p_off, off_level, idle_frac)
+
+    dt = period / t                                   # [B] hours per sample
+    price_sum = jnp.sum(prices, axis=1)[market_idx]   # [B] sum_t p_t
+    e_ao = dt * power * price_sum                     # E_AO (Eq. 6)
+    e_run = dt * power * scan.draw_price_sum
+    e_restart = restart_energy_mwh * scan.restart_price_sum
+    up_hours = dt * scan.up_units - restart_time_h * scan.n_starts
+    tco = fixed + e_run + e_restart
+    cpc = tco / jnp.maximum(up_hours, 1e-9)
+    cpc_ao = (fixed + e_ao) / period                  # Eq. (11)
+    return FleetReport(
+        cpc=cpc, cpc_ao=cpc_ao, cpc_reduction=1.0 - cpc / cpc_ao,
+        tco=tco, energy_cost=e_run, restart_cost=e_restart,
+        up_hours=up_hours, n_starts=scan.n_starts,
+        x_realized=1.0 - scan.up_units / t,
+        market_idx=market_idx, system_idx=system_idx,
+        policy_idx=policy_idx)
+
+
+def backtest(grid: ScenarioGrid, *, use_pallas: Optional[bool] = None,
+             block_b: int = 128, block_t: int = 512) -> FleetReport:
+    """Backtest every scenario row of ``grid`` in one jitted call.
+
+    ``use_pallas=None`` auto-selects: the Pallas kernel on TPU, the
+    vectorized pure-JAX recurrence elsewhere (the Pallas interpreter is a
+    debugging tool, not a fast path). Both paths are checked against each
+    other in `tests/test_fleet.py`.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    return _backtest_jit(
+        grid.prices, grid.market_idx, grid.system_idx, grid.policy_idx,
+        grid.fixed, grid.power, grid.period, grid.p_on, grid.p_off,
+        grid.off_level, grid.idle_frac, grid.restart_energy_mwh,
+        grid.restart_time_h, use_pallas=bool(use_pallas),
+        block_b=block_b, block_t=block_t)

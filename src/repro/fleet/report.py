@@ -1,0 +1,120 @@
+"""Fleet aggregation: per-row results -> fleet-level decisions.
+
+`FleetReport` is the raw per-row output of the engine. `summarize` folds
+it back onto the (market, system, policy) cube — keyed by the report's own
+index columns, so it is invariant to any row permutation — and answers the
+operator questions: which policy wins at each site, how far each policy is
+from the closed-form oracle (`repro.core.optimizer.optimal_shutdown`'s
+reduction, Eqs. 21-29), and what the whole fleet dispatches in total.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.price_model import price_variability
+from repro.core.tco import cpc_reduction
+
+
+class FleetReport(NamedTuple):
+    """Per-scenario-row backtest results (all arrays of shape [B])."""
+
+    cpc: jnp.ndarray            # realized cost-per-compute under the policy
+    cpc_ao: jnp.ndarray         # always-on baseline CPC (Eq. 11)
+    cpc_reduction: jnp.ndarray  # 1 - cpc / cpc_ao
+    tco: jnp.ndarray            # F + energy + restart cost over the period
+    energy_cost: jnp.ndarray    # running + idle draw energy cost
+    restart_cost: jnp.ndarray   # energy cost of restarts
+    up_hours: jnp.ndarray       # operational hours (restart time deducted)
+    n_starts: jnp.ndarray       # off->on transitions
+    x_realized: jnp.ndarray     # realized average shutdown fraction
+    market_idx: jnp.ndarray    # [B] int32
+    system_idx: jnp.ndarray    # [B] int32
+    policy_idx: jnp.ndarray    # [B] int32
+
+
+class FleetSummary(NamedTuple):
+    """Fleet-level aggregates on the (N markets, M systems, K policies)
+    cube. Cube cells never covered by a report row are NaN."""
+
+    reduction: np.ndarray          # [N, M, K] CPC reduction per cell
+    best_policy: np.ndarray        # [N, M] int argmax_k reduction
+    best_reduction: np.ndarray     # [N, M]
+    oracle_reduction: np.ndarray   # [N, M] closed-form optimum (Eqs. 21-29)
+    regret: np.ndarray             # [N, M, K] oracle - realized
+    energy_by_policy: np.ndarray   # [K] energy+restart cost across sites
+    up_hours_by_policy: np.ndarray # [K] compute-hours across sites
+    total_cost: float              # sum of TCO over the fleet
+    total_up_hours: float
+
+
+def oracle_reduction_grid(prices: jnp.ndarray,
+                          psi_nm: jnp.ndarray) -> jnp.ndarray:
+    """Best theoretical CPC reduction per (market, system): the Eq. (26)
+    maximum over each market's full PV set — `optimal_shutdown`'s
+    ``cpc_reduction``, vectorized over the whole [N, M] grid."""
+
+    def per_market(p, psi_m):
+        pv = price_variability(p)
+
+        def per_psi(s):
+            return jnp.maximum(jnp.max(cpc_reduction(s, pv.k, pv.x)), 0.0)
+
+        return jax.vmap(per_psi)(psi_m)
+
+    return jax.vmap(per_market)(jnp.asarray(prices), jnp.asarray(psi_nm))
+
+
+def summarize(grid, report: FleetReport) -> FleetSummary:
+    """Aggregate a `FleetReport` over the scenario cube of ``grid``
+    (a `repro.fleet.grid.ScenarioGrid`). Row order never matters: cells
+    are addressed by the report's index columns."""
+    n, m, k = grid.n_markets, grid.n_systems, grid.n_policies
+    mi = np.asarray(report.market_idx)
+    si = np.asarray(report.system_idx)
+    pi = np.asarray(report.policy_idx)
+
+    def cube(values):
+        c = np.full((n, m, k), np.nan, np.float64)
+        c[mi, si, pi] = np.asarray(values, np.float64)
+        return c
+
+    red = cube(report.cpc_reduction)
+    cost = cube(report.energy_cost) + cube(report.restart_cost)
+    hours = cube(report.up_hours)
+
+    # (market, system) cells with no rows at all stay NaN / -1 instead of
+    # tripping nanargmax's all-NaN error
+    covered = ~np.all(np.isnan(red), axis=-1)
+    best_policy = np.full((n, m), -1, np.int64)
+    best_reduction = np.full((n, m), np.nan)
+    if covered.any():
+        best_policy[covered] = np.nanargmax(red[covered], axis=-1)
+        best_reduction[covered] = np.nanmax(red[covered], axis=-1)
+
+    # Psi per (market, system) from the per-row cost structure (Eq. 18)
+    p_avg = np.asarray(grid.prices).mean(axis=1)
+    psi_rows = (np.asarray(grid.fixed)
+                / (np.asarray(grid.period) * np.asarray(grid.power)
+                   * p_avg[np.asarray(grid.market_idx)]))
+    psi_nm = np.full((n, m), np.nan)
+    psi_nm[np.asarray(grid.market_idx), np.asarray(grid.system_idx)] = \
+        psi_rows
+    oracle = np.asarray(oracle_reduction_grid(grid.prices,
+                                              jnp.asarray(psi_nm)))
+
+    return FleetSummary(
+        reduction=red,
+        best_policy=best_policy,
+        best_reduction=best_reduction,
+        oracle_reduction=oracle,
+        regret=oracle[:, :, None] - red,
+        energy_by_policy=np.nansum(cost, axis=(0, 1)),
+        up_hours_by_policy=np.nansum(hours, axis=(0, 1)),
+        total_cost=float(np.nansum(cube(report.tco))),
+        total_up_hours=float(np.nansum(hours)),
+    )

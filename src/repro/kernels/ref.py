@@ -9,12 +9,68 @@ implementations that must agree).
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 NEG_INF = -2.0 ** 30
+
+
+class FleetScanOut(NamedTuple):
+    """Per-row sufficient statistics of a batched policy backtest.
+
+    All cost quantities downstream (CPC, TCO, reduction) are affine in
+    these four sums, so the scan never materialises the [B, T] mask.
+    """
+
+    draw_price_sum: jax.Array   # sum_t draw_t * p_t            [B]
+    up_units: jax.Array         # sum_t capacity_t               [B]
+    n_starts: jax.Array         # number of off->on transitions  [B]
+    restart_price_sum: jax.Array  # sum_t start_t * p_t          [B]
+
+
+def fleet_scan_ref(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
+                   off_level: jax.Array, idle_frac: jax.Array
+                   ) -> FleetScanOut:
+    """Sequential oracle for the batched hysteresis/threshold scan.
+
+    prices: [B, T]; p_on/p_off/off_level/idle_frac: [B] per-row policy
+    parameters (p_on <= p_off; p_on == p_off is a plain threshold).
+
+    State machine per row (initial state: on, matching
+    `repro.core.policy.hysteresis_policy`'s initial carry):
+
+        on_t = 0 if p_t > p_off, 1 if p_t <= p_on, else on_{t-1}
+
+    With p_on == p_off the hold-band is empty and this is *exactly*
+    `repro.core.policy.threshold_policy` (run while p <= threshold); note
+    `hysteresis_policy` resumes on strict p < p_on instead, so the two
+    differ only at samples exactly equal to p_on.
+    Capacity while "off" is ``off_level`` (partial shutdown, paper §V-C);
+    residual draw while off is ``idle_frac`` of the *shut-down* capacity.
+    """
+    p = jnp.asarray(prices, jnp.float32)
+    b = p.shape[0]
+    p_on, p_off, off_level, idle_frac = (
+        jnp.broadcast_to(jnp.asarray(v, jnp.float32), (b,))
+        for v in (p_on, p_off, off_level, idle_frac))
+
+    def step(carry, p_t):
+        on_prev, acc = carry
+        on = jnp.where(p_t > p_off, 0.0,
+                       jnp.where(p_t <= p_on, 1.0, on_prev))
+        start = jnp.maximum(on - on_prev, 0.0)
+        cap = off_level + (1.0 - off_level) * on
+        draw = cap + idle_frac * (1.0 - cap)
+        acc = (acc[0] + draw * p_t, acc[1] + cap,
+               acc[2] + start, acc[3] + start * p_t)
+        return (on, acc), None
+
+    zeros = jnp.zeros((b,), jnp.float32)
+    init = (jnp.ones((b,), jnp.float32), (zeros, zeros, zeros, zeros))
+    (_, acc), _ = jax.lax.scan(step, init, p.T)
+    return FleetScanOut(*acc)
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,

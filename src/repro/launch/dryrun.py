@@ -37,7 +37,7 @@ import jax
 
 from repro.configs.base import (SHAPES, cell_skip_reason, get_config,
                                 list_archs)
-from repro.launch.hlo_analysis import analyze
+from repro.launch.hlo_analysis import analyze, raw_cost_analysis
 from repro.launch.mesh import describe, make_production_mesh
 from repro.launch.steps import build_step
 from repro.parallel.axes import use_sharding
@@ -96,7 +96,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
             rec["memory"]["peak_bytes_tpu_est"] <= HBM_PER_CHIP
 
         try:
-            ca = compiled.cost_analysis() or {}
+            ca = raw_cost_analysis(compiled)
             rec["cost_analysis_raw"] = {
                 "flops": float(ca.get("flops", 0.0)),
                 "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

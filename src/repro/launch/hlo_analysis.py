@@ -60,6 +60,15 @@ shift-right-arithmetic shift-right-logical popcnt clz
 """.split())
 
 
+def raw_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalised across jax versions (older
+    releases return a per-device list, newer ones a plain dict)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _shape_bytes(type_str: str, f32_as: float = 4.0) -> float:
     """Total bytes of a (possibly tuple) HLO type string.
 

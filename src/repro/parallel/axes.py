@@ -27,6 +27,13 @@ from typing import Mapping, Optional, Sequence
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                    # jax >= 0.6: public, check_vma kw
+    shard_map = jax.shard_map
+    SHARD_MAP_NOCHECK = {"check_vma": False}
+except AttributeError:                  # older jax: experimental, check_rep
+    from jax.experimental.shard_map import shard_map
+    SHARD_MAP_NOCHECK = {"check_rep": False}
+
 LogicalRules = Mapping[str, Optional[Sequence[str] | str]]
 
 # fsdp: weights' embed dim sharded over data (ZeRO-3 style gather at use)

@@ -82,6 +82,9 @@ def capacity_schedule(prices: np.ndarray, partition_plans: dict,
     prices = np.asarray(prices)
     total = sum(power_by_partition.values())
     cap = np.zeros_like(prices, dtype=np.float64)
+    if total <= 0.0:
+        # no partitions (or zero installed power): nothing can be online
+        return cap
     for name, plan in partition_plans.items():
         thr = plan["p_thresh"] if plan["viable"] else np.inf
         on = (prices <= thr).astype(np.float64)

@@ -1,0 +1,41 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+The tier-1 environment does not ship ``hypothesis``; hard-importing it made
+three whole modules fail *collection*, taking their plain pytest cases down
+with them. Importing ``given``/``settings``/``assume``/``st`` from here keeps
+every non-property test runnable everywhere: with hypothesis installed the
+real objects are re-exported, without it the ``@given`` decorator turns the
+test into a skip and the strategy namespace accepts (and ignores) any
+strategy-building expression evaluated at module import time.
+"""
+
+import pytest
+
+try:
+    from hypothesis import assume, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any strategy construction chain (st.lists(...).map(...))."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def assume(condition):
+        return True
+
+
+__all__ = ["HAVE_HYPOTHESIS", "assume", "given", "settings", "st"]

@@ -5,7 +5,7 @@ over arbitrary price series."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import assume, given, settings, strategies as st
+from _hypothesis_compat import assume, given, settings, st
 
 from repro.core import optimizer as copt
 from repro.core import price_model as pm

@@ -67,6 +67,35 @@ def test_capacity_schedule_blends_partitions():
 # operational policies (beyond-paper §V-A/V-C refinements)
 # ---------------------------------------------------------------------------
 
+def test_capacity_schedule_empty_partitions_is_all_zero():
+    """No partitions (or zero installed power) => zero capacity, not a
+    ZeroDivisionError."""
+    prices = np.asarray([10.0, 100.0, 1000.0])
+    np.testing.assert_array_equal(capacity_schedule(prices, {}, {}),
+                                  np.zeros(3))
+    np.testing.assert_array_equal(
+        capacity_schedule(prices, {"a": {"viable": False,
+                                         "p_thresh": np.inf}},
+                          {"a": 0.0}),
+        np.zeros(3))
+
+
+def test_policy_cpc_counts_boot_restart_when_starting_off():
+    """A series that begins in the off state bills its boot (index 0) as a
+    restart once initial_uptime says the machine was down before t=0."""
+    prices = np.asarray([100.0, 50.0, 50.0, 50.0], np.float32)
+    sysd = make_system(fixed=1000.0, power=1.0, period=4.0)
+    mask = jnp.asarray([1.0, 1.0, 1.0, 1.0])
+    base = float(policy_cpc(sysd, prices, mask, restart_energy_mwh=2.0,
+                            restart_time_h=0.5))
+    booted = float(policy_cpc(sysd, prices, mask, restart_energy_mwh=2.0,
+                              restart_time_h=0.5, initial_uptime=0.0))
+    # boot restart: +2 MWh at p[0]=100 in cost, -0.5 h of uptime
+    e_run = float(np.sum(prices))
+    assert base == pytest.approx((1000.0 + e_run) / 4.0)
+    assert booted == pytest.approx((1000.0 + e_run + 200.0) / 3.5)
+
+
 def test_hysteresis_reduces_churn():
     prices = np.asarray([50, 120, 90, 120, 90, 120, 50], np.float32)
     single = np.asarray(threshold_policy(prices, 100.0))

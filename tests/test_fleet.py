@@ -1,0 +1,197 @@
+"""Fleet backtesting subsystem tests: B=1 equivalence with the
+single-trace paths, Pallas kernel vs reference scan, and
+permutation-invariant aggregation."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.optimizer import optimal_shutdown
+from repro.core.policy import hysteresis_policy, policy_cpc, threshold_policy
+from repro.core.tco import make_system
+from repro.energy.markets import MarketParams
+from repro.fleet import (PolicySpec, backtest, build_grid, elastic_policy,
+                         summarize)
+from repro.kernels.fleet_scan import fleet_scan
+from repro.kernels.ref import fleet_scan_ref
+
+rng = np.random.default_rng(7)
+
+T = 1200
+SYS = make_system(fixed=60_000.0, power=1.0, period=float(T))
+
+
+def _grid(policies, n_markets=1, systems=(SYS,)):
+    markets = [MarketParams(n_hours=T, seed=s) for s in range(n_markets)]
+    return build_grid(markets, list(systems), policies)
+
+
+# ---------------------------------------------------------------------------
+# (a) B=1 rows match the existing single-trace paths
+# ---------------------------------------------------------------------------
+
+def test_b1_threshold_matches_policy_cpc():
+    grid = _grid([PolicySpec("x3", x=0.03)])
+    rep = backtest(grid, use_pallas=False)
+    prices = np.asarray(grid.prices[0])
+    mask = threshold_policy(prices, float(grid.p_off[0]))
+    want = float(policy_cpc(SYS, prices, mask))
+    assert float(rep.cpc[0]) == pytest.approx(want, rel=1e-5)
+    # realized shutdown fraction equals the mask's off fraction
+    assert float(rep.x_realized[0]) == pytest.approx(
+        1.0 - float(np.mean(np.asarray(mask))), abs=1e-6)
+
+
+def test_b1_hysteresis_with_overheads_matches_policy_cpc():
+    spec = PolicySpec("h", x=0.05, hysteresis=0.9, idle_frac=0.07,
+                      restart_energy_mwh=0.4, restart_time_h=0.5)
+    grid = _grid([spec])
+    rep = backtest(grid, use_pallas=False)
+    prices = np.asarray(grid.prices[0])
+    mask = hysteresis_policy(prices, p_on=float(grid.p_on[0]),
+                             p_off=float(grid.p_off[0]))
+    want = float(policy_cpc(SYS, prices, mask, idle_power_frac=0.07,
+                            restart_energy_mwh=0.4, restart_time_h=0.5))
+    assert float(rep.cpc[0]) == pytest.approx(want, rel=1e-5)
+
+
+def test_b1_always_on_matches_cpc_ao_and_oracle():
+    grid = _grid([PolicySpec("ao")])
+    rep = backtest(grid, use_pallas=False)
+    # an always-on row realizes the AO baseline: zero reduction
+    assert float(rep.cpc[0]) == pytest.approx(float(rep.cpc_ao[0]),
+                                              rel=1e-6)
+    assert float(rep.cpc_reduction[0]) == pytest.approx(0.0, abs=1e-6)
+    # the summary's oracle column is optimal_shutdown's reduction
+    summ = summarize(grid, rep)
+    prices = np.asarray(grid.prices[0])
+    psi = float(SYS.F) / (float(SYS.T) * float(SYS.C) * prices.mean())
+    plan = optimal_shutdown(prices, psi)
+    assert summ.oracle_reduction[0, 0] == pytest.approx(
+        float(plan.cpc_reduction), rel=1e-5)
+
+
+def test_oracle_threshold_row_attains_oracle_reduction():
+    """A threshold policy at the oracle's own x_opt realizes (to within
+    restart-free accounting noise) the closed-form optimum — regret ~ 0."""
+    probe = _grid([PolicySpec("ao")])
+    prices = np.asarray(probe.prices[0])
+    psi = float(SYS.F) / (float(SYS.T) * float(SYS.C) * prices.mean())
+    plan = optimal_shutdown(prices, psi)
+    grid = _grid([PolicySpec("opt", x=float(plan.x_opt))])
+    summ = summarize(grid, backtest(grid, use_pallas=False))
+    assert abs(summ.regret[0, 0, 0]) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# (b) Pallas kernel vs reference scan (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+FLEET_SCAN_CASES = [
+    # B, T  (exercising block padding in both axes)
+    (1, 64),
+    (5, 333),
+    (128, 512),
+    (130, 1000),
+]
+
+
+@pytest.mark.parametrize("case", FLEET_SCAN_CASES)
+def test_fleet_scan_matches_ref(case):
+    b, t = case
+    p = jnp.asarray(rng.normal(80, 40, (b, t)), jnp.float32)
+    p_off = jnp.asarray(rng.uniform(40, 160, b), jnp.float32)
+    p_on = p_off * jnp.asarray(rng.uniform(0.7, 1.0, b), jnp.float32)
+    lvl = jnp.asarray(rng.uniform(0.0, 0.6, b), jnp.float32)
+    idle = jnp.asarray(rng.uniform(0.0, 0.3, b), jnp.float32)
+    got = fleet_scan(p, p_on, p_off, lvl, idle)
+    want = fleet_scan_ref(p, p_on, p_off, lvl, idle)
+    for name in want._fields:
+        np.testing.assert_allclose(
+            np.asarray(getattr(got, name)), np.asarray(getattr(want, name)),
+            rtol=2e-5, atol=1e-3, err_msg=f"{b}x{t} {name}")
+
+
+def test_fleet_scan_exact_start_count():
+    """Start counting is integral — the kernel and reference must agree
+    exactly, including the initial-on convention (no start at t=0)."""
+    p = jnp.asarray([[50.0, 200.0, 200.0, 50.0, 200.0, 50.0, 50.0]])
+    out = fleet_scan(p, jnp.asarray([100.0]), jnp.asarray([100.0]),
+                     jnp.asarray([0.0]), jnp.asarray([0.0]))
+    assert float(out.n_starts[0]) == 2.0
+    assert float(out.up_units[0]) == 4.0
+
+
+def test_backtest_pallas_path_matches_ref_path():
+    grid = _grid([PolicySpec("ao"), PolicySpec("x3", x=0.03),
+                  elastic_policy("half", level=0.5, dp_total=8, x=0.05)],
+                 n_markets=2,
+                 systems=(SYS, make_system(150_000.0, 1.0, float(T))))
+    ref = backtest(grid, use_pallas=False)
+    pal = backtest(grid, use_pallas=True)
+    for f in ("cpc", "cpc_ao", "cpc_reduction", "tco", "up_hours",
+              "n_starts"):
+        np.testing.assert_allclose(np.asarray(getattr(ref, f)),
+                                   np.asarray(getattr(pal, f)),
+                                   rtol=1e-5, atol=1e-5, err_msg=f)
+
+
+# ---------------------------------------------------------------------------
+# (c) report aggregation is permutation-invariant over rows
+# ---------------------------------------------------------------------------
+
+def test_summary_is_row_permutation_invariant():
+    grid = _grid([PolicySpec("ao"), PolicySpec("x2", x=0.02),
+                  PolicySpec("x5", x=0.05, hysteresis=0.9)],
+                 n_markets=2,
+                 systems=(SYS, make_system(150_000.0, 1.0, float(T))))
+    rep = backtest(grid, use_pallas=False)
+    base = summarize(grid, rep)
+
+    order = rng.permutation(grid.n_rows)
+    grid_p = grid.take_rows(order)
+    rep_p = backtest(grid_p, use_pallas=False)
+    perm = summarize(grid_p, rep_p)
+
+    for field in base._fields:
+        np.testing.assert_allclose(np.asarray(getattr(base, field)),
+                                   np.asarray(getattr(perm, field)),
+                                   rtol=1e-6, atol=1e-6, err_msg=field)
+
+
+def test_grid_shapes_and_indexing():
+    grid = _grid([PolicySpec("ao"), PolicySpec("x2", x=0.02)],
+                 n_markets=3, systems=(SYS, SYS))
+    assert grid.n_rows == 3 * 2 * 2
+    assert grid.n_markets == 3 and grid.n_systems == 2
+    assert grid.n_policies == 2
+    # x-policies resolve per market: thresholds must differ across markets
+    offs = np.asarray(grid.p_off).reshape(3, 2, 2)[:, 0, 1]
+    assert len(np.unique(offs)) == 3
+    # always-on rows have an infinite threshold
+    assert np.all(np.isinf(np.asarray(grid.p_off).reshape(3, 2, 2)[:, :, 0]))
+
+
+def test_policy_spec_validation():
+    with pytest.raises(ValueError):
+        PolicySpec("bad", x=0.1, p_off=100.0)
+    with pytest.raises(ValueError):
+        PolicySpec("bad", x=0.1, off_level=1.0)
+    with pytest.raises(ValueError):
+        # inverted band (p_on > p_off) would make kernel and reference
+        # scan disagree — must be rejected at spec time
+        PolicySpec("bad", x=0.1, hysteresis=1.2)
+    with pytest.raises(ValueError):
+        build_grid(np.zeros((2, 10), np.float32), [], [PolicySpec("ao")])
+
+
+def test_summary_tolerates_partial_cube():
+    """Uncovered (market, system) cells stay NaN / -1 instead of crashing
+    nanargmax."""
+    grid = _grid([PolicySpec("ao"), PolicySpec("x2", x=0.02)],
+                 n_markets=2, systems=(SYS, SYS))
+    sub = grid.take_rows(np.arange(grid.n_policies))   # market 0, sys 0 only
+    summ = summarize(sub, backtest(sub, use_pallas=False))
+    assert summ.best_policy[0, 0] >= 0
+    assert summ.best_policy[1, 1] == -1
+    assert np.isnan(summ.best_reduction[1, 1])

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import (_shape_bytes, analyze,
-                                       parse_module)
+                                       parse_module, raw_cost_analysis)
 
 
 def test_shape_bytes():
@@ -37,7 +37,7 @@ def test_scan_flops_are_loop_aware():
     # parser must be within 5% of analytic (elementwise ops add a little)
     assert analytic <= rep.flops <= analytic * 1.10
     # ...while raw cost_analysis counts the body once (the bug we fix)
-    raw = compiled.cost_analysis().get("flops", 0.0)
+    raw = raw_cost_analysis(compiled).get("flops", 0.0)
     assert raw < analytic / 2
 
 

@@ -151,10 +151,11 @@ def test_compressed_pmean_under_shard_map():
             m, e2 = compressed_pmean_leaf(gs[0], es[0], "pod")
             return m[None], e2[None]
 
-        m, e2 = jax.jit(jax.shard_map(
+        from repro.parallel.axes import SHARD_MAP_NOCHECK, shard_map
+        m, e2 = jax.jit(shard_map(
             f, mesh=mesh, in_specs=(P("pod", None), P("pod", None)),
             out_specs=(P("pod", None), P("pod", None)),
-            check_vma=False))(g, err)
+            **SHARD_MAP_NOCHECK))(g, err)
         true_mean = jnp.mean(g, axis=0)
         got = m[0]
         rel = float(jnp.max(jnp.abs(got - true_mean))
