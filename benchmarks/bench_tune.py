@@ -1,0 +1,73 @@
+"""Policy-tuning throughput: row-steps/sec of the jitted fleet-wide
+gradient loop, plus the realized improvement over the swept grid.
+
+One tuning step = forward + backward through the associative soft scan
+over all B rows and T hours plus a vmapped Adam update — the figure of
+merit is (rows x steps) / second, i.e. how many per-site gradient
+refinements the tuner sustains."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import write_artifact
+from repro.core.tco import make_system
+from repro.energy.presets import region_params
+from repro.fleet import PolicySpec, build_grid
+from repro.tune import TuneConfig, optimize
+
+
+def _grid(n_markets: int, n_systems: int, hours: int):
+    markets = [region_params("germany", seed=s).replace(n_hours=hours)
+               for s in range(n_markets)]
+    p_avg = markets[0].p_avg
+    psis = np.geomspace(0.5, 4.0, n_systems)
+    systems = [make_system(float(psi) * hours * 1.0 * p_avg, 1.0,
+                           float(hours)) for psi in psis]
+    policies = [
+        PolicySpec("always_on"),
+        PolicySpec("x1", x=0.01), PolicySpec("x3", x=0.03),
+        PolicySpec("x8", x=0.08), PolicySpec("x15", x=0.15),
+        PolicySpec("x25", x=0.25),
+        PolicySpec("x3_hyst", x=0.03, hysteresis=0.9),
+        PolicySpec("x8_hyst", x=0.08, hysteresis=0.85),
+    ]
+    return build_grid(markets, systems, policies)
+
+
+def bench_tune(n_markets: int = 8, n_systems: int = 4,
+               hours: int = 2190, steps: int = 200) -> dict:
+    """8 x 4 x 8 = 256 rows x 2190 h, 200 annealed Adam steps."""
+    grid = _grid(n_markets, n_systems, hours)
+    cfg = TuneConfig(steps=steps)
+
+    # the scan length is baked into the jitted loop, so a short warmup
+    # would not compile the real thing: time a cold and a warm run
+    t0 = time.perf_counter()
+    optimize(grid, cfg)
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = optimize(grid, cfg)
+    wall_s = time.perf_counter() - t0
+
+    out = {
+        "rows": grid.n_rows,
+        "hours": hours,
+        "steps": steps,
+        "wall_s": wall_s,
+        "cold_wall_s": cold_s,
+        "row_steps_per_s": grid.n_rows * steps / wall_s,
+        "improvement_vs_best_mean": float(res.improvement_vs_best.mean()),
+        "improvement_vs_own_mean": float(res.improvement_vs_own.mean()),
+        "rows_strictly_better": int(
+            (res.cpc < res.cpc_swept_best * (1 - 1e-6)).sum()),
+        "loss_first": float(res.history["loss"][0]),
+        "loss_last": float(res.history["loss"][-1]),
+    }
+    write_artifact("bench_tune", out)
+    return out
+
+
+ALL = {"bench_tune": bench_tune}

@@ -10,7 +10,7 @@ import argparse
 import time
 import traceback
 
-from benchmarks import bench_fleet, bench_runtime, paper_figures
+from benchmarks import bench_fleet, bench_runtime, bench_tune, paper_figures
 from benchmarks.common import ARTIFACTS
 
 
@@ -24,6 +24,7 @@ def main() -> int:
     suites = dict(paper_figures.ALL)
     if not args.skip_runtime:
         suites.update(bench_fleet.ALL)
+        suites.update(bench_tune.ALL)
         suites.update(bench_runtime.ALL)
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}
@@ -93,6 +94,12 @@ def _headline(name: str, out: dict) -> str:
         return (f"{out['rows']} rows: {out['rows_per_s_vectorized']:.0f} "
                 f"rows/s vectorized vs {out['rows_per_s_python_loop']:.1f} "
                 f"per-row loop (x{out['speedup']:.0f})")
+    if name == "bench_tune":
+        return (f"{out['rows']} rows x {out['steps']} steps: "
+                f"{out['row_steps_per_s']:.0f} row-steps/s, "
+                f"{out['rows_strictly_better']}/{out['rows']} rows beat "
+                f"best swept "
+                f"(mean +{out['improvement_vs_best_mean'] * 100:.2f}%)")
     if name == "step_time":
         return ", ".join(f"{k}: {v['s_per_step']:.2f}s"
                          for k, v in out.items())

@@ -9,6 +9,7 @@ midday prices — whose parameters are *calibrated* per region against the
 paper's published statistics (see `repro.core.calibration`).
 """
 
+from repro.energy.ensemble import block_bootstrap
 from repro.energy.markets import MarketParams, generate_market, MarketData
 from repro.energy.stream import PriceStream
 from repro.energy.presets import region_params, REGION_PRESETS
@@ -18,6 +19,7 @@ __all__ = [
     "MarketData",
     "generate_market",
     "PriceStream",
+    "block_bootstrap",
     "region_params",
     "REGION_PRESETS",
 ]

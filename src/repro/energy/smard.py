@@ -5,15 +5,55 @@ The paper sources Germany's 2024 day-ahead prices from SMARD [7]. When the
 real export is available, drop it next to your config and point
 ``--prices path.csv`` at it; every model entry point consumes the result
 identically to a synthetic series.
+
+Malformed rows are counted, not silently dropped: both loaders warn when
+more than ``max_skip_frac`` of the data rows fail to parse and raise when
+*nothing* parses — a mis-pointed ``column`` index fails loudly instead of
+returning a short (or empty) series that corrupts every downstream
+statistic. Per-load totals are available via ``return_stats=True``.
 """
 
 from __future__ import annotations
 
 import csv
 import io
+import warnings
 from pathlib import Path
+from typing import NamedTuple
 
 import numpy as np
+
+
+class LoadStats(NamedTuple):
+    """Row accounting of one CSV load."""
+
+    n_rows: int       # data rows seen (header excluded)
+    n_parsed: int     # rows that yielded a finite price
+    n_skipped: int    # unparseable / too-short rows
+    n_nan: int        # parsed but empty ("-"/blank) price fields
+
+    @property
+    def skip_frac(self) -> float:
+        bad = self.n_skipped + self.n_nan
+        return bad / self.n_rows if self.n_rows else 0.0
+
+
+def _finalize(values: list, stats: LoadStats, path, what: str,
+              max_skip_frac: float, return_stats: bool):
+    arr = np.asarray(values, dtype=np.float64)
+    arr = arr[~np.isnan(arr)]
+    if stats.n_rows and stats.n_parsed == 0:
+        raise ValueError(
+            f"{what}: no {path} row parsed ({stats.n_rows} rows, "
+            f"{stats.n_skipped} unparseable, {stats.n_nan} empty) — "
+            "wrong column index or not a price CSV?")
+    if stats.skip_frac > max_skip_frac:
+        warnings.warn(
+            f"{what}: skipped {stats.n_skipped + stats.n_nan}/"
+            f"{stats.n_rows} rows of {path} "
+            f"({stats.skip_frac:.1%} > {max_skip_frac:.0%} threshold) — "
+            "check the column index / file format", stacklevel=3)
+    return (arr, stats) if return_stats else arr
 
 
 def _parse_german_float(s: str) -> float:
@@ -23,31 +63,52 @@ def _parse_german_float(s: str) -> float:
     return float(s)
 
 
-def load_smard_csv(path: str | Path, column: int = -1) -> np.ndarray:
+def load_smard_csv(path: str | Path, column: int = -1, *,
+                   max_skip_frac: float = 0.05,
+                   return_stats: bool = False):
     """Load a SMARD 'Marktdaten' CSV export; returns EUR/MWh samples.
 
     SMARD exports are ';'-separated with a header row; price columns use
     German decimal commas. ``column`` selects the price column (default:
-    last).
+    last). With ``return_stats=True`` returns ``(prices, LoadStats)``.
     """
     text = Path(path).read_text(encoding="utf-8-sig")
     rows = list(csv.reader(io.StringIO(text), delimiter=";"))
-    out = []
+    out: list = []
+    n_rows = n_skipped = n_nan = 0
     for row in rows[1:]:
-        if not row or len(row) <= abs(column) - (1 if column < 0 else 0):
+        if not row:
+            continue                     # blank line, not a data row
+        n_rows += 1
+        if len(row) <= abs(column) - (1 if column < 0 else 0):
+            n_skipped += 1
             continue
         try:
-            out.append(_parse_german_float(row[column]))
+            v = _parse_german_float(row[column])
         except ValueError:
+            n_skipped += 1
             continue
-    arr = np.asarray(out, dtype=np.float64)
-    return arr[~np.isnan(arr)]
+        if np.isnan(v):
+            n_nan += 1
+        out.append(v)
+    stats = LoadStats(n_rows=n_rows, n_parsed=n_rows - n_skipped - n_nan,
+                      n_skipped=n_skipped, n_nan=n_nan)
+    return _finalize(out, stats, path, "load_smard_csv", max_skip_frac,
+                     return_stats)
 
 
-def load_price_csv(path: str | Path) -> np.ndarray:
-    """Generic loader: one price per line, or comma-separated single column."""
+def load_price_csv(path: str | Path, *, max_skip_frac: float = 0.05,
+                   return_stats: bool = False):
+    """Generic loader: one price per line, or comma-separated single column.
+
+    Leading unparseable lines (one- or multi-line headers, before the
+    first value parses) are expected and not counted against the skip
+    threshold; unparseable lines *after* data has started are. A file
+    with content but no parseable value at all raises.
+    """
     text = Path(path).read_text()
-    vals = []
+    vals: list = []
+    n_rows = n_skipped = n_header = 0
     for line in text.splitlines():
         line = line.strip().split(",")[0]
         if not line:
@@ -55,5 +116,18 @@ def load_price_csv(path: str | Path) -> np.ndarray:
         try:
             vals.append(float(line))
         except ValueError:
-            continue  # header
-    return np.asarray(vals, dtype=np.float64)
+            if not vals:
+                n_header += 1            # still inside the header block
+            else:
+                n_rows += 1
+                n_skipped += 1
+            continue
+        n_rows += 1
+    if not vals and (n_rows or n_header):
+        raise ValueError(
+            f"load_price_csv: no {path} line parsed "
+            f"({n_header} non-numeric lines) — not a price CSV?")
+    stats = LoadStats(n_rows=n_rows, n_parsed=n_rows - n_skipped,
+                      n_skipped=n_skipped, n_nan=0)
+    return _finalize(vals, stats, path, "load_price_csv", max_skip_frac,
+                     return_stats)

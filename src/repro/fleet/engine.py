@@ -22,7 +22,7 @@ question for free along the market axis.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,38 @@ import jax.numpy as jnp
 from repro.fleet.grid import ScenarioGrid
 from repro.fleet.report import FleetReport
 from repro.kernels.fleet_scan import fleet_scan
-from repro.kernels.ref import fleet_scan_ref
+from repro.kernels.ref import FleetScanOut, fleet_scan_ref
+
+
+class FleetCosts(NamedTuple):
+    """Per-row cost assembly over a `FleetScanOut` (all [B])."""
+
+    cpc: jax.Array          # realized cost-per-compute
+    cpc_ao: jax.Array       # always-on baseline (Eq. 11)
+    tco: jax.Array          # fixed + energy + restart cost
+    energy_cost: jax.Array  # running + idle draw energy cost
+    restart_cost: jax.Array
+    up_hours: jax.Array
+
+
+def fleet_costs(scan: FleetScanOut, *, price_sum, fixed, power, period,
+                restart_energy_mwh, restart_time_h, n_samples: int
+                ) -> FleetCosts:
+    """Cost accounting shared by the hard backtest and the differentiable
+    tuner (`repro.tune.objective`): every quantity is affine in the four
+    scan sums, so the same closed form prices a hard *and* a soft scan.
+    ``price_sum`` is sum_t p_t per row; ``n_samples`` the series length.
+    """
+    dt = period / n_samples                           # [B] hours per sample
+    e_ao = dt * power * price_sum                     # E_AO (Eq. 6)
+    e_run = dt * power * scan.draw_price_sum
+    e_restart = restart_energy_mwh * scan.restart_price_sum
+    up_hours = dt * scan.up_units - restart_time_h * scan.n_starts
+    tco = fixed + e_run + e_restart
+    cpc = tco / jnp.maximum(up_hours, 1e-9)
+    cpc_ao = (fixed + e_ao) / period                  # Eq. (11)
+    return FleetCosts(cpc=cpc, cpc_ao=cpc_ao, tco=tco, energy_cost=e_run,
+                      restart_cost=e_restart, up_hours=up_hours)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "block_b",
@@ -49,19 +80,16 @@ def _backtest_jit(prices, market_idx, system_idx, policy_idx,
     else:
         scan = fleet_scan_ref(p_rows, p_on, p_off, off_level, idle_frac)
 
-    dt = period / t                                   # [B] hours per sample
     price_sum = jnp.sum(prices, axis=1)[market_idx]   # [B] sum_t p_t
-    e_ao = dt * power * price_sum                     # E_AO (Eq. 6)
-    e_run = dt * power * scan.draw_price_sum
-    e_restart = restart_energy_mwh * scan.restart_price_sum
-    up_hours = dt * scan.up_units - restart_time_h * scan.n_starts
-    tco = fixed + e_run + e_restart
-    cpc = tco / jnp.maximum(up_hours, 1e-9)
-    cpc_ao = (fixed + e_ao) / period                  # Eq. (11)
+    costs = fleet_costs(scan, price_sum=price_sum, fixed=fixed, power=power,
+                        period=period, restart_energy_mwh=restart_energy_mwh,
+                        restart_time_h=restart_time_h, n_samples=t)
     return FleetReport(
-        cpc=cpc, cpc_ao=cpc_ao, cpc_reduction=1.0 - cpc / cpc_ao,
-        tco=tco, energy_cost=e_run, restart_cost=e_restart,
-        up_hours=up_hours, n_starts=scan.n_starts,
+        cpc=costs.cpc, cpc_ao=costs.cpc_ao,
+        cpc_reduction=1.0 - costs.cpc / costs.cpc_ao,
+        tco=costs.tco, energy_cost=costs.energy_cost,
+        restart_cost=costs.restart_cost,
+        up_hours=costs.up_hours, n_starts=scan.n_starts,
         x_realized=1.0 - scan.up_units / t,
         market_idx=market_idx, system_idx=system_idx,
         policy_idx=policy_idx)

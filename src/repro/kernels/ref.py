@@ -73,6 +73,56 @@ def fleet_scan_ref(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
     return FleetScanOut(*acc)
 
 
+def soft_scan_ref(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
+                  off_level: jax.Array, idle_frac: jax.Array, *,
+                  tau: float) -> FleetScanOut:
+    """Sequential oracle for the temperature-``tau`` relaxation of
+    `fleet_scan_ref` (see `repro.kernels.soft_scan` for the fused form).
+
+    The hard two-threshold state machine
+
+        on_t = 0 if p_t > p_off, 1 if p_t <= p_on, else on_{t-1}
+
+    is relaxed with sigmoid event gates a_t = sigmoid((p_on - p_t)/tau)
+    ("turn on") and b_t = sigmoid((p_t - p_off)/tau) ("turn off"):
+
+        s_t = a_t + (1 - a_t)(1 - b_t) s_{t-1},   s_{-1} = 1
+
+    which is affine in s_{t-1} and recovers the hard recurrence (with the
+    kernel's on-wins precedence) as tau -> 0 at every sample not exactly
+    on a threshold. Restarts are counted softly as s_t (1 - s_{t-1}) —
+    smooth everywhere, and equal to the hard 0->1 indicator on binary
+    states. Everything is differentiable in (p_on, p_off, off_level,
+    idle_frac, prices); computation runs in the price dtype (float64
+    under x64 — finite-difference gradient checks rely on this).
+    """
+    p = jnp.asarray(prices)
+    dtype = p.dtype if jnp.issubdtype(p.dtype, jnp.floating) else jnp.float32
+    p = p.astype(dtype)
+    b = p.shape[0]
+    p_on, p_off, off_level, idle_frac = (
+        jnp.broadcast_to(jnp.asarray(v, dtype), (b,))
+        for v in (p_on, p_off, off_level, idle_frac))
+    inv_tau = 1.0 / jnp.asarray(tau, dtype)
+
+    def step(carry, p_t):
+        s_prev, acc = carry
+        a = jax.nn.sigmoid((p_on - p_t) * inv_tau)
+        off = jax.nn.sigmoid((p_t - p_off) * inv_tau)
+        s = a + (1.0 - a) * (1.0 - off) * s_prev
+        start = s * (1.0 - s_prev)
+        cap = off_level + (1.0 - off_level) * s
+        draw = cap + idle_frac * (1.0 - cap)
+        acc = (acc[0] + draw * p_t, acc[1] + cap,
+               acc[2] + start, acc[3] + start * p_t)
+        return (s, acc), None
+
+    zeros = jnp.zeros((b,), dtype)
+    init = (jnp.ones((b,), dtype), (zeros, zeros, zeros, zeros))
+    (_, acc), _ = jax.lax.scan(step, init, p.T)
+    return FleetScanOut(*acc)
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: int = 0,
                   q_offset: int = 0) -> jax.Array:

@@ -88,13 +88,15 @@ def adamw_update(grads: Any, state: AdamWState, params: Any,
         new_p = p.astype(jnp.float32) - lr * delta
         return new_p.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
 
+    # plain tuples are the (p, mu, nu) triples produced by ``upd``;
+    # NamedTuple containers (e.g. repro.tune's PolicyParams) are pytree
+    # structure and must still be traversed
+    _triple = lambda x: (isinstance(x, tuple)  # noqa: E731
+                         and not hasattr(x, "_fields"))
     flat = jax.tree.map(upd, params, grads, state.mu, state.nu,
                         is_leaf=lambda x: isinstance(x, jax.Array))
-    new_params = jax.tree.map(lambda t: t[0], flat,
-                              is_leaf=lambda x: isinstance(x, tuple))
-    new_mu = jax.tree.map(lambda t: t[1], flat,
-                          is_leaf=lambda x: isinstance(x, tuple))
-    new_nu = jax.tree.map(lambda t: t[2], flat,
-                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=_triple)
+    new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=_triple)
+    new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=_triple)
     stats = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
     return new_params, AdamWState(step, new_mu, new_nu), stats

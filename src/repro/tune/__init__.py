@@ -1,0 +1,33 @@
+"""Differentiable policy tuning: gradient-optimize shutdown policies
+over the whole fleet grid.
+
+The fleet engine (`repro.fleet`) made *sweeping* policies cheap; this
+subsystem makes them *searchable*. The two-threshold hysteresis state
+machine is relaxed with temperature-``tau`` sigmoid gates
+(`repro.kernels.soft_scan` — one fused associative scan over [B, T],
+differentiable end to end), per-row policy variables are
+reparameterized onto the feasible set (`objective` — p_on <= p_off and
+off_level in [0, 1) by construction), and a vmapped Adam loop
+(`optimizer`, reusing `repro.optim.adamw`) descends the per-row
+CPC/CPC_AO ratio for all B rows simultaneously while annealing tau
+toward the hard scan. The result is re-evaluated hard and guaranteed
+no worse than the row's own swept `PolicySpec` — and no worse than the
+*best* swept policy of the row's (market, system) cell whenever the
+hardware parameters (idle draw, restart costs) are uniform within the
+cell, since the cell-best fallback is re-priced under each row's own
+hardware.
+
+  quickstart:  PYTHONPATH=src python examples/tune_policies.py
+"""
+
+from repro.tune.objective import (PhysicalPolicy, PolicyParams, TuneProblem,
+                                  cell_index, init_from_grid,
+                                  inverse_transform, problem_from_grid,
+                                  soft_costs, soft_objective, transform)
+from repro.tune.optimizer import (TuneConfig, TuneResult, cell_best_rows,
+                                  hard_cpc, optimize)
+
+__all__ = ["PhysicalPolicy", "PolicyParams", "TuneProblem", "TuneConfig",
+           "TuneResult", "cell_best_rows", "cell_index", "hard_cpc",
+           "init_from_grid", "inverse_transform", "problem_from_grid",
+           "soft_costs", "soft_objective", "transform", "optimize"]

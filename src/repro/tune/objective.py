@@ -1,0 +1,220 @@
+"""Differentiable per-row CPC/TCO objectives over a scenario grid.
+
+The fleet engine *evaluates* policies; this module makes them
+*parameters*. Each scenario row gets three unconstrained raw variables
+(`PolicyParams`) that deterministic transforms map onto the feasible
+policy set:
+
+    p_off     = raw_off                           (price units, free)
+    p_on      = p_off - softplus(raw_gap)         (p_on <= p_off always)
+    off_level = (1 - 1e-6) sigmoid(raw_lvl)       (in [0, 1) always)
+
+so gradient steps in raw space can never produce an inverted hysteresis
+band or an infeasible capacity level — the constraint surface of
+`repro.fleet.grid.PolicySpec`, enforced by construction instead of by
+validation.
+
+`soft_objective` prices every row with the temperature-``tau`` relaxed
+scan (`repro.kernels.soft_scan`) and the *same* cost assembly the hard
+backtest uses (`repro.fleet.engine.fleet_costs`), returning the mean
+dimensionless CPC ratio (CPC/CPC_AO, Eq. 28's measured analogue) plus
+optional fleet-coupling penalties:
+
+  * ``power_cap_mw`` — soft cap on total instantaneous fleet draw
+    (multi-site dispatch constraint, ROADMAP follow-on);
+  * ``min_up_hours`` — minimum aggregate compute delivered by the fleet.
+
+Both penalties are quadratic in the *relative* violation, so their scale
+is comparable with the O(1) CPC ratio term; both weight each row by
+1 / |its (market, system) cell| so a grid carrying K candidate policies
+per site charges the site's mean dispatch once rather than summing K
+copies (exact with one row per site).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fleet.engine import fleet_costs
+from repro.kernels.soft_scan import soft_scan_parts
+
+
+class PolicyParams(NamedTuple):
+    """Unconstrained per-row policy parameters (all [B])."""
+
+    raw_off: jax.Array   # shutdown threshold, price units (identity)
+    raw_gap: jax.Array   # softplus -> hysteresis band width p_off - p_on
+    raw_lvl: jax.Array   # sigmoid -> off-capacity level
+
+
+class PhysicalPolicy(NamedTuple):
+    """Feasible policy variables (all [B]): p_on <= p_off, lvl in [0, 1)."""
+
+    p_on: jax.Array
+    p_off: jax.Array
+    off_level: jax.Array
+
+
+class TuneProblem(NamedTuple):
+    """The static (non-tuned) data of a tuning run (from a ScenarioGrid).
+
+    ``prices`` stays [N, T] shared across rows, exactly like
+    `ScenarioGrid.prices` — the per-row [B, T] gather happens *inside*
+    the jitted objective (as in `fleet.engine._backtest_jit`), so the
+    persistent footprint is one year of prices per market, not per row.
+    Everything else is [B]. ``idle_frac`` and the restart costs stay
+    fixed — they are hardware properties, not policy choices.
+    ``site_weight`` is 1 / (number of rows sharing the row's (market,
+    system) cell): a grid with K policy columns holds K *candidate* rows
+    per physical site, and coupling penalties must charge each site
+    once, not K times — weighting by 1/K makes the fleet totals the
+    per-site mean over candidates (exact when K = 1).
+    """
+
+    prices: jax.Array        # [N, T]
+    market_idx: jax.Array    # [B] int32 row -> market
+    price_sum: jax.Array     # [B] sum_t p_t of the row's market
+    fixed: jax.Array
+    power: jax.Array
+    period: jax.Array
+    idle_frac: jax.Array
+    restart_energy_mwh: jax.Array
+    restart_time_h: jax.Array
+    site_weight: jax.Array
+
+    def row_prices(self) -> jax.Array:
+        """[B, T] per-row gather — call inside jit so the duplication is
+        a compiler-managed temporary, not a live buffer."""
+        return self.prices[self.market_idx]
+
+
+_LVL_SCALE = 1.0 - 1e-6   # keeps off_level < 1 even when the f32
+                          # sigmoid saturates to exactly 1.0
+
+
+def transform(raw: PolicyParams) -> PhysicalPolicy:
+    """Raw -> feasible policy variables (smooth, surjective onto the
+    interior of the feasible set)."""
+    p_off = raw.raw_off
+    p_on = p_off - jax.nn.softplus(raw.raw_gap)
+    return PhysicalPolicy(p_on=p_on, p_off=p_off,
+                          off_level=_LVL_SCALE
+                          * jax.nn.sigmoid(raw.raw_lvl))
+
+
+def inverse_transform(phys: PhysicalPolicy, *, gap_min: float = 1e-3,
+                      lvl_eps: float = 1e-4) -> PolicyParams:
+    """Feasible -> raw, the right inverse of `transform` (used to seed
+    tuning at a swept `PolicySpec`). Degenerate values are nudged inside
+    the open feasible set: a zero hysteresis gap to ``gap_min``, an
+    off_level of exactly 0 (or 1) to ``lvl_eps`` from the boundary."""
+    p_off = np.asarray(phys.p_off, np.float64)
+    gap = np.maximum(p_off - np.asarray(phys.p_on, np.float64), gap_min)
+    # stable softplus^-1: log(e^y - 1) = y + log1p(-e^-y)
+    raw_gap = np.where(gap > 20.0, gap, np.log(np.expm1(gap)))
+    raw_gap = raw_gap + np.where(gap > 20.0, np.log1p(-np.exp(-gap)), 0.0)
+    lvl = np.clip(np.asarray(phys.off_level, np.float64),
+                  lvl_eps, 1.0 - lvl_eps)
+    return PolicyParams(raw_off=jnp.asarray(p_off, jnp.float32),
+                        raw_gap=jnp.asarray(raw_gap, jnp.float32),
+                        raw_lvl=jnp.asarray(np.log(lvl / (1.0 - lvl)),
+                                            jnp.float32))
+
+
+def cell_index(grid) -> np.ndarray:
+    """[B] int64 key of each row's (market, system) cell — the physical
+    site a row's candidate policy would run at. Single source of the
+    cell definition for site weighting and best-swept lookups."""
+    mi = np.asarray(grid.market_idx, np.int64)
+    si = np.asarray(grid.system_idx, np.int64)
+    return mi * max(grid.n_systems, 1) + si
+
+
+def problem_from_grid(grid) -> TuneProblem:
+    """Extract the static tuning data from a `ScenarioGrid`."""
+    _, inverse, counts = np.unique(cell_index(grid), return_inverse=True,
+                                   return_counts=True)
+    return TuneProblem(
+        prices=grid.prices, market_idx=grid.market_idx,
+        price_sum=jnp.sum(grid.prices, axis=1)[grid.market_idx],
+        fixed=grid.fixed, power=grid.power, period=grid.period,
+        idle_frac=grid.idle_frac,
+        restart_energy_mwh=grid.restart_energy_mwh,
+        restart_time_h=grid.restart_time_h,
+        site_weight=jnp.asarray(1.0 / counts[inverse], jnp.float32))
+
+
+def init_from_grid(grid) -> PolicyParams:
+    """Seed raw parameters at the grid's own swept policies.
+
+    Always-on rows (p_off = +inf) are seeded at their market's maximum
+    price — operationally identical (no sample exceeds it, so the row
+    never shuts down) but finite, so gradients can pull the threshold
+    into the price range if shutdowns pay.
+    """
+    p_off = np.asarray(grid.p_off, np.float64)
+    p_on = np.asarray(grid.p_on, np.float64)
+    p_max = np.asarray(jnp.max(grid.prices, axis=1),
+                       np.float64)[np.asarray(grid.market_idx)]
+    inf = ~np.isfinite(p_off)
+    p_off = np.where(inf, p_max, p_off)
+    p_on = np.where(inf, p_max, p_on)
+    return inverse_transform(PhysicalPolicy(
+        p_on=p_on, p_off=p_off, off_level=np.asarray(grid.off_level)))
+
+
+def soft_costs(raw: PolicyParams, problem: TuneProblem, tau):
+    """(FleetCosts, per-sample draw [B, T]) of the relaxed scan at
+    ``tau`` — the engine's cost assembly over the soft sufficient
+    statistics."""
+    phys = transform(raw)
+    p = problem.row_prices()                      # [B, T] gather, in-jit
+    scan, draw = soft_scan_parts(p, phys.p_on, phys.p_off, phys.off_level,
+                                 problem.idle_frac, tau=tau)
+    costs = fleet_costs(
+        scan, price_sum=problem.price_sum, fixed=problem.fixed,
+        power=problem.power, period=problem.period,
+        restart_energy_mwh=problem.restart_energy_mwh,
+        restart_time_h=problem.restart_time_h, n_samples=p.shape[1])
+    return costs, draw
+
+
+def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
+                   power_cap_mw: Optional[float] = None,
+                   min_up_hours: Optional[float] = None,
+                   penalty_weight: float = 10.0):
+    """Scalar tuning loss at temperature ``tau`` (lower is better).
+
+    loss = mean_b CPC_b / CPC_AO_b  (+ fleet-coupling penalties)
+
+    The CPC ratio is dimensionless (Eq. 28), so rows with very different
+    absolute costs contribute comparably and one learning rate serves
+    the whole grid. Returns ``(loss, aux)`` with per-row diagnostics.
+    """
+    costs, draw = soft_costs(raw, problem, tau)
+    ratio = costs.cpc / costs.cpc_ao
+    loss = jnp.mean(ratio)
+
+    # coupling terms weight each row by 1/|cell| so a K-policy grid
+    # charges each physical site once (per-site candidate mean), not K
+    # times — see TuneProblem.site_weight
+    penalty = jnp.zeros((), ratio.dtype)
+    w = problem.site_weight.astype(ratio.dtype)
+    if power_cap_mw is not None:
+        fleet_mw = jnp.sum((problem.power * w)[:, None] * draw,
+                           axis=0)                                  # [T]
+        excess = jax.nn.relu(fleet_mw - power_cap_mw) / power_cap_mw
+        penalty = penalty + jnp.mean(excess ** 2)
+    if min_up_hours is not None:
+        total_up = jnp.sum(w * costs.up_hours)
+        deficit = jax.nn.relu(min_up_hours - total_up) / min_up_hours
+        penalty = penalty + deficit ** 2
+    loss = loss + penalty_weight * penalty
+
+    aux = {"ratio": ratio, "cpc": costs.cpc, "up_hours": costs.up_hours,
+           "penalty": penalty}
+    return loss, aux

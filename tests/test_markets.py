@@ -91,6 +91,87 @@ def test_generic_price_csv(tmp_path):
                                [50.5, -3.2, 120.0])
 
 
+def test_smard_csv_bad_column_fails_loudly(tmp_path):
+    """A mis-pointed column index must raise, not return a short series."""
+    from repro.energy.smard import load_smard_csv
+    csv = tmp_path / "p.csv"
+    csv.write_text("Datum;Preis\n01.01.2024 00:00;50,5\n"
+                   "01.01.2024 01:00;-3,2\n")
+    with pytest.raises(ValueError, match="no .* row parsed"):
+        load_smard_csv(str(csv), column=0)   # datetime column: never a float
+
+
+def test_smard_csv_skip_accounting_and_warning(tmp_path):
+    from repro.energy.smard import load_smard_csv
+    csv = tmp_path / "p.csv"
+    csv.write_text("Datum;Preis\na;50,5\nb;bogus\nc;-\nd;70,0\nshort\n")
+    with pytest.warns(UserWarning, match="skipped"):
+        p, stats = load_smard_csv(str(csv), return_stats=True)
+    np.testing.assert_allclose(p, [50.5, 70.0])
+    assert stats.n_rows == 5
+    assert stats.n_parsed == 2
+    assert stats.n_skipped == 2        # "bogus" + the too-short row
+    assert stats.n_nan == 1            # the "-" placeholder
+    assert stats.skip_frac == pytest.approx(3 / 5)
+
+
+def test_generic_price_csv_multiline_header_and_all_header(tmp_path):
+    import warnings
+    csv = tmp_path / "p.csv"
+    # a two-line header (plus a leading blank) must not trip the skip
+    # warning — leading unparseable lines are header, not data
+    csv.write_text("\nprice\nEUR/MWh\n" + "\n".join(str(float(i))
+                                                    for i in range(20)))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        p = load_price_csv(str(csv))
+    np.testing.assert_allclose(p, np.arange(20.0))
+    # a file with no parseable value at all fails loudly
+    bad = tmp_path / "bad.csv"
+    bad.write_text("alpha\nbeta\ngamma\n")
+    with pytest.raises(ValueError, match="no .* line parsed"):
+        load_price_csv(str(bad))
+
+
+def test_block_bootstrap_shapes_and_reproducibility():
+    from repro.energy.ensemble import block_bootstrap
+    src = np.arange(500.0)
+    out = block_bootstrap(src, 4, series_hours=300, block_hours=48, seed=9)
+    assert out.shape == (4, 300) and out.dtype == np.float32
+    np.testing.assert_array_equal(
+        out, block_bootstrap(src, 4, series_hours=300, block_hours=48,
+                             seed=9))
+    assert not np.array_equal(
+        out, block_bootstrap(src, 4, series_hours=300, block_hours=48,
+                             seed=10))
+    # every sample comes from the source trace
+    assert np.isin(out, src.astype(np.float32)).all()
+    # blocks are contiguous (circular) runs of the source: within each
+    # 48-sample block the integer series increments by 1 mod 500 (the
+    # 300-sample series is 6 blocks with the last one trimmed; check the
+    # 6 full blocks of the first 288 samples)
+    blocks = out[:, :288].reshape(4, 6, 48)
+    d = np.diff(blocks, axis=-1) % 500
+    assert (d == 1).all()
+
+
+def test_block_bootstrap_feeds_build_grid():
+    from repro.core.tco import make_system
+    from repro.energy.ensemble import block_bootstrap
+    from repro.fleet import PolicySpec, backtest, build_grid
+    md = generate_market(MarketParams(n_hours=600, seed=12))
+    ens = block_bootstrap(np.asarray(md.prices), 5, block_hours=24 * 7,
+                          seed=1)
+    grid = build_grid(ens, [make_system(40_000.0, 1.0, 600.0)],
+                      [PolicySpec("x5", x=0.05)])
+    rep = backtest(grid, use_pallas=False)
+    assert grid.n_rows == 5
+    assert np.isfinite(np.asarray(rep.cpc)).all()
+    # resampling preserves the source's gross price level
+    assert np.mean(ens) == pytest.approx(float(np.mean(md.prices)),
+                                         rel=0.15)
+
+
 def test_forecast_seasonal_naive():
     prices = np.tile(np.arange(24.0), 30)      # perfectly periodic
     pred = seasonal_naive(prices[:-24], horizon=24)

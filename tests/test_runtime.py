@@ -55,13 +55,41 @@ def test_scheduler_runs_below_threshold_and_stops_above(market):
 
 
 def test_rolling_mode_adapts(market):
+    """Rolling mode must track the trailing window: at a Psi where every
+    2-week window of the seed-7 series is Eq.-19-viable (Psi=0.25 — see
+    ROADMAP; at Psi=2 only ~half the windows are), the threshold is
+    always finite, *changes* as the window moves, and is always one of
+    the window's own price samples (the PV-set quantile, Eq. 1)."""
+    prices = np.asarray(market.prices)
+    sched = EnergyAwareScheduler(
+        PriceStream(prices, window=24 * 14),
+        SchedulerConfig(psi=0.25, mode="rolling", refit_hours=24))
+    threshs = []
+    for _ in range(24 * 30):
+        sched.step()
+        threshs.append(sched.p_thresh)
+    threshs = np.asarray(threshs)
+    assert np.isfinite(threshs).all()
+    # the threshold adapts: many distinct values across 30 daily refits
+    assert len(np.unique(threshs)) >= 5
+    # every threshold is an actual sample of the series (PV quantile)
+    for t in np.unique(threshs):
+        assert np.isclose(prices, t, rtol=1e-6).any()
+
+
+def test_rolling_mode_falls_back_to_always_on_when_not_viable(market):
+    """At Psi=2 the seed-7 series' final 2-week windows are *not*
+    viable (the trailing spike mass is too thin — the generator
+    statistic recorded in ROADMAP.md), so rolling mode must end in the
+    always-on fallback rather than keep a stale threshold."""
     prices = np.asarray(market.prices)
     sched = EnergyAwareScheduler(
         PriceStream(prices, window=24 * 14),
         SchedulerConfig(psi=2.0, mode="rolling", refit_hours=24))
     for _ in range(24 * 30):
         sched.step()
-    assert np.isfinite(sched.p_thresh)
+    assert not sched.viable
+    assert sched.p_thresh == np.inf and sched.planned_x == 0.0
 
 
 def test_overhead_gate_disables_marginal_plans(market):
@@ -186,14 +214,33 @@ def test_straggler_mitigation_drops_and_renormalises(tmp_path):
 
 
 def test_energy_aware_run_reduces_energy_cost(tmp_path, market):
+    """With hysteresis=1.0 the online policy equals the planned threshold
+    policy, so the realised shutdown fraction must match the off-fraction
+    of the *covered* price window exactly — not the full-series plan: the
+    seed-7 series opens inside a high-price stretch (~72% of the first
+    ~100 h sit above the Psi=0.5 threshold vs 37% over the whole series,
+    the ROADMAP-noted statistic), so a 30-step run legitimately realises
+    x ~ 0.72 while tracking the policy perfectly."""
     prices = np.asarray(market.prices)
     sched = EnergyAwareScheduler(PriceStream(prices),
-                                 SchedulerConfig(psi=0.5))  # very viable
+                                 SchedulerConfig(psi=0.5,  # very viable
+                                                 hysteresis=1.0))
     t = _mk_trainer(tmp_path / "ws", steps=30, scheduler=sched)
     out_ws = t.run(log_every=0)
-    assert out_ws["restarts"] >= 0
-    # realised x should be near the plan when the series is long enough
-    assert 0.0 <= out_ws["x_realized"] < 0.6
+    assert out_ws["restarts"] > 0
+    # energy cost must be reduced vs the always-on counterfactual on the
+    # same prices (off-hours at positive prices were skipped)
+    assert t.meter.energy_cost < t.meter.ao_energy_cost
+    # realised x == off-fraction of the threshold policy over the hours
+    # actually covered (restart lost-time excluded from the price clock)
+    covered = int(round(out_ws["hours"]
+                        - out_ws["restarts"] * t.tcfg.restart_time_h))
+    want_x = float((prices[:covered] > sched.p_thresh).mean())
+    assert out_ws["x_realized"] == pytest.approx(want_x, abs=0.02)
+    # and the plan itself is consistent: over the *full* series the
+    # threshold policy realises the planned shutdown fraction
+    full_x = float((prices > sched.p_thresh).mean())
+    assert full_x == pytest.approx(sched.planned_x, abs=0.02)
 
 
 def test_grad_compress_trains(tmp_path):
