@@ -73,9 +73,14 @@ def bench_fleet(n_markets: int = 16, n_systems: int = 8,
              grid.restart_time_h[r], grid.fixed[r], grid.power[r],
              grid.period[r]) for r in sample]
     _one_row(*args[0]).block_until_ready()            # compile
-    t0 = time.perf_counter()
-    loop_cpc = [float(_one_row(*a)) for a in args]
-    loop_s_per_row = (time.perf_counter() - t0) / len(sample)
+    # per-call minimum: like `timed`, the floor is the stable estimator
+    # of what a call costs (interrupt/GC outliers only ever add time)
+    loop_cpc, per_call = [], []
+    for a in args:
+        t0 = time.perf_counter()
+        loop_cpc.append(float(_one_row(*a)))
+        per_call.append(time.perf_counter() - t0)
+    loop_s_per_row = min(per_call)
 
     # sanity: the loop reproduces the engine on the sampled rows (small
     # residual expected: hysteresis_policy resumes on strict p < p_on,

@@ -1,0 +1,145 @@
+"""CI benchmark gate: run the fleet/dispatch benchmarks in a fixed-seed
+smoke configuration, write the results to ``BENCH_ci.json`` at the repo
+root, and fail (exit 1) when a headline metric regresses more than the
+tolerance against the previously *committed* baseline.
+
+Gated metrics are the machine-relative **speedups** (fused/vectorized
+path vs the per-row / per-hour Python loop on the same host), not
+absolute rows/s: CI runners and dev laptops differ by integer factors in
+absolute throughput, but the fused-vs-loop ratio is the property the
+fleet and dispatch engines exist to provide, and a >30% drop in it means
+someone de-fused a hot path. Absolute numbers are recorded alongside for
+inspection.
+
+  PYTHONPATH=src python -m benchmarks.check_regression          # gate
+  PYTHONPATH=src python -m benchmarks.check_regression --reset  # reseed
+
+The smoke shapes are fixed-seed and small enough for a CI runner; the
+full-size headline numbers live in `bench_fleet` / `bench_dispatch` via
+`python -m benchmarks.run`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import statistics
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_BASELINE = REPO_ROOT / "BENCH_ci.json"
+TOLERANCE = 0.30          # fail when a gated metric drops >30%
+SMOKE_RUNS = 3            # gate on the median of this many suite runs
+LOW_WATER = 0.5           # --reset seeds baseline at median x this:
+                          # the committed baseline is a low-water mark,
+                          # so host jitter (shared CI runners swing
+                          # single timings ~1.5x) doesn't flake the
+                          # gate, while de-fusing a hot path (the 5-30x
+                          # effects this gate exists for) still trips it
+
+# name -> (runner, smoke kwargs, gated metric keys, recorded extras)
+def _suites():
+    from benchmarks import bench_dispatch, bench_fleet
+    return {
+        # shapes sized so the fused calls take tens of ms: smaller smoke
+        # runs time nothing but host jitter and the gate flakes
+        "bench_fleet": (
+            bench_fleet.bench_fleet,
+            dict(n_markets=8, n_systems=4, hours=4096, baseline_rows=16),
+            ("speedup",),
+            ("rows_per_s_vectorized", "rows_per_s_python_loop", "rows")),
+        "bench_dispatch": (
+            bench_dispatch.bench_dispatch,
+            dict(n_sites=32, hours=4096, baseline_hours=256),
+            ("speedup",),
+            ("hours_per_s_fused", "hours_per_s_python_loop", "sites",
+             "bit_identical_pallas_vs_ref")),
+    }
+
+
+def run_smoke() -> dict:
+    """Median of `SMOKE_RUNS` runs per gated metric: single timing runs
+    of small smoke shapes are noisy (host scheduling, GC), and a flaky
+    gate trains people to ignore it."""
+    results = {}
+    for name, (fn, kwargs, gated, extras) in _suites().items():
+        outs = [fn(**kwargs) for _ in range(SMOKE_RUNS)]
+        results[name] = {
+            "measured": {k: statistics.median(o[k] for o in outs)
+                         for k in gated},
+            "info": {k: outs[-1][k] for k in extras},
+            "smoke_config": kwargs,
+        }
+    return {"tolerance": TOLERANCE,
+            "host": {"machine": platform.machine(),
+                     "python": platform.python_version()},
+            "results": results}
+
+
+def compare(old: dict, new: dict) -> list[str]:
+    failures = []
+    for name, entry in old.get("results", {}).items():
+        fresh = new["results"].get(name)
+        if fresh is None:
+            failures.append(f"{name}: benchmark missing from this run")
+            continue
+        for key, base in entry.get("gated", {}).items():
+            got = fresh["measured"].get(key)
+            if got is None:
+                failures.append(f"{name}.{key}: metric missing")
+            elif got < base * (1.0 - TOLERANCE):
+                failures.append(
+                    f"{name}.{key}: {got:.2f} vs baseline {base:.2f} "
+                    f"(-{(1.0 - got / base):.0%} > {TOLERANCE:.0%} "
+                    "tolerance)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="committed baseline to compare against (and "
+                    "overwrite with this run's results)")
+    ap.add_argument("--reset", action="store_true",
+                    help="reseed the baseline without comparing")
+    args = ap.parse_args()
+
+    old = None
+    if args.baseline.exists() and not args.reset:
+        old = json.loads(args.baseline.read_text())
+
+    new = run_smoke()
+    # the low-water "gated" values are the baseline contract: a plain
+    # run carries the committed ones forward (so accidentally committing
+    # the overwritten file cannot tighten the gate onto raw jitter) and
+    # only --reset reseeds them from this run's medians
+    for name, entry in new["results"].items():
+        if old is not None and name in old.get("results", {}):
+            entry["gated"] = dict(old["results"][name].get("gated", {}))
+        else:
+            entry["gated"] = {k: v * LOW_WATER
+                              for k, v in entry["measured"].items()}
+    new["seeded_low_water"] = LOW_WATER
+    args.baseline.write_text(json.dumps(new, indent=1) + "\n")
+    print(f"wrote {args.baseline}")
+    for name, entry in new["results"].items():
+        print(f"  {name}: " + ", ".join(
+            f"{k}={v:.2f} (gate {entry['gated'][k]:.2f})"
+            for k, v in entry["measured"].items()))
+
+    if old is None:
+        print("no baseline to compare against (seeded)")
+        return 0
+    failures = compare(old, new)
+    if failures:
+        print("benchmark regression gate FAILED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"gate passed (tolerance {TOLERANCE:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

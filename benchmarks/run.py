@@ -10,7 +10,8 @@ import argparse
 import time
 import traceback
 
-from benchmarks import bench_fleet, bench_runtime, bench_tune, paper_figures
+from benchmarks import (bench_dispatch, bench_fleet, bench_runtime,
+                        bench_tune, paper_figures)
 from benchmarks.common import ARTIFACTS
 
 
@@ -24,6 +25,7 @@ def main() -> int:
     suites = dict(paper_figures.ALL)
     if not args.skip_runtime:
         suites.update(bench_fleet.ALL)
+        suites.update(bench_dispatch.ALL)
         suites.update(bench_tune.ALL)
         suites.update(bench_runtime.ALL)
     if args.only:
@@ -94,6 +96,12 @@ def _headline(name: str, out: dict) -> str:
         return (f"{out['rows']} rows: {out['rows_per_s_vectorized']:.0f} "
                 f"rows/s vectorized vs {out['rows_per_s_python_loop']:.1f} "
                 f"per-row loop (x{out['speedup']:.0f})")
+    if name == "bench_dispatch":
+        return (f"{out['sites']} sites x {out['hours']} h: "
+                f"{out['hours_per_s_fused']:.0f} h/s fused vs "
+                f"{out['hours_per_s_python_loop']:.1f} per-hour loop "
+                f"(x{out['speedup']:.0f}), pallas|ref err "
+                f"{out['max_abs_err_pallas_vs_ref']:.1e}")
     if name == "bench_tune":
         return (f"{out['rows']} rows x {out['steps']} steps: "
                 f"{out['row_steps_per_s']:.0f} row-steps/s, "

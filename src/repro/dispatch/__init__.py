@@ -1,0 +1,25 @@
+"""Feasible cross-site dispatch: allocate a fleet-wide compute demand
+across sites hour by hour under *hard* constraints.
+
+  schedule — materialised per-site shutdown schedules (the fleet state
+             machine, hour-by-hour instead of summed)
+  allocate — greedy water-fill over price-sorted capacity segments with
+             migration costs and minimum-dwell locks; loud
+             `DispatchInfeasible` on unmeetable constraints
+
+The hot loop is `repro.kernels.dispatch_scan` (Pallas, time-innermost
+grid with the carry in VMEM), bit-identical to the sequential
+`repro.kernels.ref.dispatch_ref` oracle. `repro.fleet.summarize` exposes
+the result as `FleetSummary.dispatch`; `repro.tune.optimize` re-scores
+tuned policies on feasible dispatch via `TuneConfig.dispatch`.
+"""
+
+from repro.dispatch.allocate import (DispatchConfig, DispatchInfeasible,
+                                     DispatchProblem, DispatchResult,
+                                     build_problem, dispatch,
+                                     segment_rank, summarize_alloc)
+from repro.dispatch.schedule import capacity_series, on_state_series
+
+__all__ = ["DispatchConfig", "DispatchInfeasible", "DispatchProblem",
+           "DispatchResult", "build_problem", "dispatch", "segment_rank",
+           "summarize_alloc", "capacity_series", "on_state_series"]

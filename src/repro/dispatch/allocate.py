@@ -1,0 +1,264 @@
+"""Feasible cross-site dispatch: hard constraints, not penalty terms.
+
+The paper prices each site in isolation; the PR-2 tuner couples sites
+only through *soft* penalties. An operator with sites in several markets
+instead shifts load to wherever power is cheapest, subject to hard
+constraints (the TARDIS setting, PAPERS.md): per-site capacity from each
+site's shutdown schedule, a total-fleet power cap, and an aggregate
+compute floor. This module is that dispatcher.
+
+Model. Every hour, a fleet-wide compute demand ``D_t`` (MW) is placed
+across S sites. Site s offers ``avail[s, t]`` MW (its policy's on/off
+state times its rating — `repro.dispatch.schedule`). Placement is a
+greedy water-fill over price-sorted capacity segments: load already at a
+site is priced at ``p - migrate_cost`` (leaving must pay the one-time
+migration fee, so moves happen only when the price advantage beats the
+fee within the hour), load placed less than ``min_dwell_h`` hours ago is
+locked (ranked below everything), and fresh capacity pays the plain
+market price. With ``migrate_cost = 0`` and ``min_dwell_h = 0`` this
+reduces exactly to filling the cheapest available sites each hour.
+
+Greedy-by-price is *optimal* per hour for this segment model (exchange
+argument: any feasible allocation moving a MW from a cheaper to a
+costlier segment weakly increases cost); the migration premium and dwell
+locks make consecutive hours consistent instead of thrashing.
+
+Infeasibility is loud: demand above the power cap, demand above fleet
+availability in any hour, or a total demand below the compute floor
+raises `DispatchInfeasible` — hard constraints are never silently
+clipped. Feasible results report their slack.
+
+The hot loop is `repro.kernels.dispatch_scan` (Pallas, time-innermost
+with the carry in VMEM) with `repro.kernels.ref.dispatch_ref` as the
+sequential oracle; both share the per-hour math and are bit-identical.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.dispatch.schedule import capacity_series
+from repro.kernels.dispatch_scan import dispatch_scan
+from repro.kernels.ref import dispatch_ref
+
+_MOVE_TOL = 1e-6     # MW below which an hour's net move is not an event
+
+
+class DispatchInfeasible(ValueError):
+    """A hard dispatch constraint cannot be met (never silently clipped)."""
+
+
+class DispatchConfig(NamedTuple):
+    """Operator-side dispatch constraints (hashable — nested in
+    `repro.tune.TuneConfig` as a jit-static field).
+
+    ``demand_mw`` is the fleet-wide compute demand (scalar, every hour);
+    when None it defaults to ``demand_frac`` of the summed site ratings.
+    ``migrate_cost`` is EUR per MW moved between sites (charged on the
+    matched in/out flow, and used as the retention premium in the
+    greedy fill). ``min_dwell_h`` locks newly placed load for that many
+    hours. ``compute_floor_mwh`` is the aggregate compute the fleet must
+    deliver over the period.
+    """
+
+    demand_mw: Optional[float] = None
+    demand_frac: float = 0.5
+    power_cap_mw: float = float("inf")
+    migrate_cost: float = 0.0
+    min_dwell_h: int = 0
+    compute_floor_mwh: float = 0.0
+
+
+class DispatchProblem(NamedTuple):
+    """One concrete dispatch instance (all arrays host-side numpy)."""
+
+    prices: np.ndarray      # [S, T] EUR/MWh
+    avail_mw: np.ndarray    # [S, T] available MW (schedule x rating)
+    demand_mw: np.ndarray   # [T] fleet demand
+    power_cap_mw: float
+    migrate_cost: float     # EUR per MW moved
+    min_dwell_h: int
+    compute_floor_mwh: float
+    fixed_cost: float       # summed per-period fixed cost of the sites
+    site_names: tuple = ()
+    # precomputed segment sort data ([T, 3S] int32 each, from
+    # `segment_rank`); None -> computed on first dispatch
+    order: Optional[np.ndarray] = None
+    rank: Optional[np.ndarray] = None
+
+
+class DispatchResult(NamedTuple):
+    """Feasible dispatch outcome (the `FleetSummary.dispatch` block)."""
+
+    alloc_mw: np.ndarray      # [S, T] hourly allocation
+    cpc: float                # (fixed + energy + migration) / delivered
+    energy_cost: float        # sum_t sum_s alloc * price
+    migration_cost: float     # migrate_cost x MW moved
+    migration_mw: float       # total MW moved between sites
+    n_migrations: int         # hours with a net cross-site move
+    delivered_mwh: float
+    site_mwh: np.ndarray      # [S] compute delivered per site
+    slack_power_mw: float     # min_t (power cap - demand)
+    slack_capacity_mw: float  # min_t (fleet availability - demand)
+    slack_floor_mwh: float    # delivered - compute floor
+
+
+def segment_rank(prices: np.ndarray, migrate_cost: float
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Ascending sort permutation and rank ([T, 3S] int32 each) of every
+    site's three capacity segments.
+
+    Keys (float64, so a class offset cannot swallow price differences):
+    locked segments sit below everything (offset by more than the price
+    span, price-ordered among themselves), retained load is priced at
+    ``p - migrate_cost``, fresh capacity at ``p``. Keys depend only on
+    prices and the premium — never on the running state — which is what
+    lets the kernel run sort-free (`repro.kernels.dispatch_scan`).
+
+    Ties (equal keys) resolve by segment position — stable argsort —
+    so a site's retained load wins over its own fresh capacity at
+    ``migrate_cost = 0``; cross-site ties follow site order.
+    """
+    p = np.asarray(prices, np.float64).T                      # [T, S]
+    span = float(np.max(p) - np.min(p)) + abs(migrate_cost) + 1.0
+    keys = np.concatenate([p - span, p - migrate_cost, p], axis=1)
+    order = np.argsort(keys, axis=1, kind="stable").astype(np.int32)
+    rank = np.empty_like(order)
+    np.put_along_axis(rank, order,
+                      np.broadcast_to(np.arange(order.shape[1],
+                                                dtype=np.int32),
+                                      order.shape), axis=1)
+    return order, rank
+
+
+def build_problem(prices, p_on, p_off, off_level, power,
+                  cfg: DispatchConfig, *, fixed=None,
+                  site_names: Sequence[str] = ()) -> DispatchProblem:
+    """Assemble a `DispatchProblem` from per-site policy variables.
+
+    prices: [S, T]; p_on/p_off/off_level/power (MW rating): [S].
+    Availability is each site's materialised shutdown schedule times its
+    rating. Callers hold the site semantics: `repro.fleet.report` feeds
+    the best swept row per (market, system) cell, `repro.tune` the
+    gradient-tuned policies.
+    """
+    prices = np.asarray(prices, np.float32)
+    s, t = prices.shape
+    power = np.broadcast_to(np.asarray(power, np.float32), (s,))
+    cap = np.asarray(capacity_series(prices, p_on, p_off, off_level))
+    demand = cfg.demand_mw if cfg.demand_mw is not None \
+        else cfg.demand_frac * float(power.sum())
+    order, rank = segment_rank(prices, float(cfg.migrate_cost))
+    return DispatchProblem(
+        prices=prices,
+        avail_mw=power[:, None] * cap,
+        demand_mw=np.broadcast_to(np.asarray(demand, np.float32), (t,)),
+        power_cap_mw=float(cfg.power_cap_mw),
+        migrate_cost=float(cfg.migrate_cost),
+        min_dwell_h=int(cfg.min_dwell_h),
+        compute_floor_mwh=float(cfg.compute_floor_mwh),
+        fixed_cost=float(np.sum(fixed)) if fixed is not None else 0.0,
+        site_names=tuple(site_names),
+        order=order, rank=rank)
+
+
+def _check_feasible(problem: DispatchProblem) -> None:
+    d = np.asarray(problem.demand_mw, np.float64)
+    cap = problem.power_cap_mw
+    if float(d.max()) > cap:
+        worst = int(d.argmax())
+        raise DispatchInfeasible(
+            f"fleet power cap {cap:.3f} MW is below the demand "
+            f"{d.max():.3f} MW (first binding hour {worst}) — the cap "
+            "can never be met by reallocating; raise it or shed demand")
+    avail = np.asarray(problem.avail_mw, np.float64).sum(axis=0)   # [T]
+    short = d - avail
+    if float(short.max()) > 1e-6:
+        worst = int(short.argmax())
+        n_bad = int((short > 1e-6).sum())
+        raise DispatchInfeasible(
+            f"fleet availability covers demand in only {len(d) - n_bad}/"
+            f"{len(d)} hours: worst hour {worst} offers {avail[worst]:.3f} "
+            f"MW against {d[worst]:.3f} MW demanded — site schedules shut "
+            "down too much capacity for this demand")
+    if float(d.sum()) < problem.compute_floor_mwh:
+        raise DispatchInfeasible(
+            f"aggregate compute floor {problem.compute_floor_mwh:.3f} MWh "
+            f"exceeds the total demanded {d.sum():.3f} MWh — the floor "
+            "cannot be reached even at full delivery")
+
+
+_dispatch_ref_jit = jax.jit(dispatch_ref, static_argnames=("min_dwell",))
+
+
+def dispatch(problem: DispatchProblem, *,
+             use_pallas: Optional[bool] = None,
+             block_t: int = 512) -> DispatchResult:
+    """Solve one dispatch instance; raises `DispatchInfeasible` when a
+    hard constraint cannot hold.
+
+    ``use_pallas=None`` auto-selects like `repro.fleet.engine.backtest`:
+    the Pallas kernel on TPU, the jitted sequential reference elsewhere
+    (both are bit-identical; the interpreter is a debugging tool, not a
+    fast path).
+    """
+    _check_feasible(problem)
+    order, rank = (problem.order, problem.rank) \
+        if problem.order is not None and problem.rank is not None \
+        else segment_rank(problem.prices, problem.migrate_cost)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        alloc = dispatch_scan(problem.avail_mw, order, rank,
+                              problem.demand_mw,
+                              min_dwell=problem.min_dwell_h,
+                              block_t=block_t)
+    else:
+        alloc = _dispatch_ref_jit(problem.avail_mw, order, rank,
+                                  problem.demand_mw,
+                                  min_dwell=problem.min_dwell_h)
+    return summarize_alloc(problem, np.asarray(alloc))
+
+
+def summarize_alloc(problem: DispatchProblem,
+                    alloc: np.ndarray) -> DispatchResult:
+    """Cost/migration/slack accounting over a [S, T] allocation (shared
+    by both scan paths, so identical allocations give identical stats).
+
+    Hour 0 places the fleet's load from empty; migration counts only the
+    *matched* in/out flow (load that left one site and arrived at
+    another), so demand ramps are not billed as moves.
+    """
+    alloc = np.asarray(alloc, np.float64)
+    prices = np.asarray(problem.prices, np.float64)
+    demand = np.asarray(problem.demand_mw, np.float64)
+
+    energy_cost = float((alloc * prices).sum())
+    prev = np.concatenate([np.zeros_like(alloc[:, :1]), alloc[:, :-1]],
+                          axis=1)
+    delta = alloc - prev
+    inflow = np.clip(delta, 0.0, None).sum(axis=0)        # [T]
+    outflow = np.clip(-delta, 0.0, None).sum(axis=0)
+    moved = np.minimum(inflow, outflow)
+    migration_mw = float(moved.sum())
+    migration_cost = problem.migrate_cost * migration_mw
+    delivered = float(alloc.sum())
+
+    avail_total = np.asarray(problem.avail_mw, np.float64).sum(axis=0)
+    return DispatchResult(
+        alloc_mw=alloc,
+        cpc=(problem.fixed_cost + energy_cost + migration_cost)
+        / max(delivered, 1e-9),
+        energy_cost=energy_cost,
+        migration_cost=migration_cost,
+        migration_mw=migration_mw,
+        n_migrations=int((moved > _MOVE_TOL).sum()),
+        delivered_mwh=delivered,
+        site_mwh=alloc.sum(axis=1),
+        slack_power_mw=float(problem.power_cap_mw - demand.max()),
+        slack_capacity_mw=float((avail_total - demand).min()),
+        slack_floor_mwh=delivered - problem.compute_floor_mwh,
+    )

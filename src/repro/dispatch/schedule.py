@@ -1,0 +1,53 @@
+"""Materialised per-site shutdown schedules.
+
+The fleet scan (`repro.kernels.fleet_scan`) deliberately never stores the
+[B, T] on/off trajectory — every per-site cost is affine in four sums.
+The dispatcher, however, needs the hour-by-hour *capacity* each site
+offers: which is exactly the same two-threshold hysteresis state machine,
+materialised instead of summed. `capacity_series` is that
+materialisation; `tests/test_dispatch.py` pins it against
+`fleet_scan_ref`'s ``up_units`` so the two state machines cannot drift
+apart.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def on_state_series(prices: jax.Array, p_on: jax.Array,
+                    p_off: jax.Array) -> jax.Array:
+    """[S, T] on/off trajectory of the hysteresis state machine.
+
+    Same recurrence and initial state (running) as
+    `repro.kernels.ref.fleet_scan_ref`:
+
+        on_t = 0 if p_t > p_off, 1 if p_t <= p_on, else on_{t-1}
+
+    ``p_off = +inf`` rows (always-on policies) never shut down.
+    """
+    p = jnp.asarray(prices, jnp.float32)
+    s = p.shape[0]
+    p_on, p_off = (jnp.broadcast_to(jnp.asarray(v, jnp.float32), (s,))
+                   for v in (p_on, p_off))
+
+    def step(on_prev, p_t):
+        on = jnp.where(p_t > p_off, 0.0,
+                       jnp.where(p_t <= p_on, 1.0, on_prev))
+        return on, on
+
+    _, on = jax.lax.scan(step, jnp.ones((s,), jnp.float32), p.T)
+    return on.T
+
+
+@jax.jit
+def capacity_series(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
+                    off_level: jax.Array) -> jax.Array:
+    """[S, T] capacity fraction each site offers per hour: 1 while on,
+    ``off_level`` (partial shutdown, paper §V-C) while off."""
+    on = on_state_series(prices, p_on, p_off)
+    s = on.shape[0]
+    lvl = jnp.broadcast_to(jnp.asarray(off_level, jnp.float32), (s,))
+    return lvl[:, None] + (1.0 - lvl[:, None]) * on

@@ -37,6 +37,11 @@ class LoadStats(NamedTuple):
         bad = self.n_skipped + self.n_nan
         return bad / self.n_rows if self.n_rows else 0.0
 
+    def __str__(self) -> str:
+        return (f"{self.n_rows} data rows: {self.n_parsed} parsed, "
+                f"{self.n_skipped} unparseable, {self.n_nan} empty "
+                f"({self.skip_frac:.1%} bad)")
+
 
 def _finalize(values: list, stats: LoadStats, path, what: str,
               max_skip_frac: float, return_stats: bool):
@@ -44,14 +49,12 @@ def _finalize(values: list, stats: LoadStats, path, what: str,
     arr = arr[~np.isnan(arr)]
     if stats.n_rows and stats.n_parsed == 0:
         raise ValueError(
-            f"{what}: no {path} row parsed ({stats.n_rows} rows, "
-            f"{stats.n_skipped} unparseable, {stats.n_nan} empty) — "
+            f"{what}: no {path} row parsed ({stats}) — "
             "wrong column index or not a price CSV?")
     if stats.skip_frac > max_skip_frac:
         warnings.warn(
-            f"{what}: skipped {stats.n_skipped + stats.n_nan}/"
-            f"{stats.n_rows} rows of {path} "
-            f"({stats.skip_frac:.1%} > {max_skip_frac:.0%} threshold) — "
+            f"{what}: skipped rows of {path} ({stats}; over the "
+            f"{max_skip_frac:.0%} threshold) — "
             "check the column index / file format", stacklevel=3)
     return (arr, stats) if return_stats else arr
 

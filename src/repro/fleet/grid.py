@@ -117,14 +117,34 @@ class ScenarioGrid:
     def n_hours(self) -> int:
         return int(self.prices.shape[1])
 
+    # fields shared across rows, NOT permuted by take_rows; everything
+    # else must be a [B]-leading array or take_rows refuses to guess
+    SHARED_FIELDS = ("prices", "market_names", "system_names",
+                     "policy_names")
+
     def take_rows(self, order: np.ndarray) -> "ScenarioGrid":
-        """Row-permuted view (prices stay [N, T]); row order is an
-        implementation detail the report layer must not depend on."""
+        """Row-permuted view (shared fields stay); row order is an
+        implementation detail the report layer must not depend on.
+
+        Every field outside `SHARED_FIELDS` is carried through the
+        permutation — a future per-row field is picked up automatically,
+        and a field that is neither shared nor [B]-leading raises
+        instead of being silently dropped (`tests/test_fleet.py` pins
+        this against ``dataclasses.fields``).
+        """
         order = np.asarray(order)
-        rep = {f.name: getattr(self, f.name)[order]
-               for f in dataclasses.fields(self)
-               if f.name not in ("prices", "market_names", "system_names",
-                                 "policy_names")}
+        b = self.n_rows
+        rep = {}
+        for f in dataclasses.fields(self):
+            if f.name in self.SHARED_FIELDS:
+                continue
+            v = getattr(self, f.name)
+            if not hasattr(v, "shape") or v.ndim < 1 or v.shape[0] != b:
+                raise TypeError(
+                    f"ScenarioGrid.take_rows: field {f.name!r} is neither "
+                    "a shared field nor a [B]-leading per-row array — add "
+                    "it to SHARED_FIELDS or make it per-row")
+            rep[f.name] = v[order]
         return dataclasses.replace(self, **rep)
 
 

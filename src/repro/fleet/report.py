@@ -6,11 +6,18 @@ index columns, so it is invariant to any row permutation — and answers the
 operator questions: which policy wins at each site, how far each policy is
 from the closed-form oracle (`repro.core.optimizer.optimal_shutdown`'s
 reduction, Eqs. 21-29), and what the whole fleet dispatches in total.
+
+With a `repro.dispatch.DispatchConfig`, `summarize` additionally runs the
+*feasible* cross-site dispatcher over the fleet — one site per covered
+(market, system) cell, operating its best swept policy's schedule — and
+reports the realized fleet CPC, migration count/cost and constraint
+slack as `FleetSummary.dispatch` (hard constraints at report time, not
+penalty proxies).
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +25,8 @@ import numpy as np
 
 from repro.core.price_model import price_variability
 from repro.core.tco import cpc_reduction
+from repro.dispatch import (DispatchConfig, DispatchResult, build_problem,
+                            dispatch)
 
 
 class FleetReport(NamedTuple):
@@ -50,6 +59,9 @@ class FleetSummary(NamedTuple):
     up_hours_by_policy: np.ndarray # [K] compute-hours across sites
     total_cost: float              # sum of TCO over the fleet
     total_up_hours: float
+    # feasible cross-site dispatch over the best-policy sites (None
+    # unless summarize() was given a DispatchConfig)
+    dispatch: Optional[DispatchResult] = None
 
 
 def oracle_reduction_grid(prices: jnp.ndarray,
@@ -69,10 +81,36 @@ def oracle_reduction_grid(prices: jnp.ndarray,
     return jax.vmap(per_market)(jnp.asarray(prices), jnp.asarray(psi_nm))
 
 
-def summarize(grid, report: FleetReport) -> FleetSummary:
+def dispatch_sites(grid, report: FleetReport,
+                   best_policy: np.ndarray) -> np.ndarray:
+    """Report-row index of each covered (market, system) cell's best
+    policy, in canonical cube order — the site set the fleet dispatcher
+    operates. Cube-ordered, so it is invariant to row permutations."""
+    mi = np.asarray(report.market_idx)
+    si = np.asarray(report.system_idx)
+    pi = np.asarray(report.policy_idx)
+    rows = []
+    for n in range(grid.n_markets):
+        for m in range(grid.n_systems):
+            if best_policy[n, m] < 0:
+                continue
+            rows.append(int(np.flatnonzero(
+                (mi == n) & (si == m) & (pi == best_policy[n, m]))[0]))
+    return np.asarray(rows, np.int64)
+
+
+def summarize(grid, report: FleetReport, *,
+              dispatch_cfg: Optional[DispatchConfig] = None
+              ) -> FleetSummary:
     """Aggregate a `FleetReport` over the scenario cube of ``grid``
     (a `repro.fleet.grid.ScenarioGrid`). Row order never matters: cells
-    are addressed by the report's index columns."""
+    are addressed by the report's index columns.
+
+    With ``dispatch_cfg``, the feasible cross-site dispatcher runs over
+    one site per covered (market, system) cell — each operating its best
+    swept policy — and the result lands in `FleetSummary.dispatch`
+    (raises `repro.dispatch.DispatchInfeasible` when the configured
+    demand cannot be met; hard constraints are never clipped)."""
     n, m, k = grid.n_markets, grid.n_systems, grid.n_policies
     mi = np.asarray(report.market_idx)
     si = np.asarray(report.system_idx)
@@ -107,6 +145,21 @@ def summarize(grid, report: FleetReport) -> FleetSummary:
     oracle = np.asarray(oracle_reduction_grid(grid.prices,
                                               jnp.asarray(psi_nm)))
 
+    disp = None
+    if dispatch_cfg is not None:
+        rows = dispatch_sites(grid, report, best_policy)
+        markets = np.asarray(grid.market_idx)[rows]
+        systems = np.asarray(grid.system_idx)[rows]
+        names = tuple(f"{grid.market_names[n]}/{grid.system_names[m]}"
+                      for n, m in zip(markets, systems)) \
+            if grid.market_names and grid.system_names else ()
+        disp = dispatch(build_problem(
+            np.asarray(grid.prices)[markets],
+            np.asarray(grid.p_on)[rows], np.asarray(grid.p_off)[rows],
+            np.asarray(grid.off_level)[rows], np.asarray(grid.power)[rows],
+            dispatch_cfg, fixed=np.asarray(grid.fixed)[rows],
+            site_names=names))
+
     return FleetSummary(
         reduction=red,
         best_policy=best_policy,
@@ -117,4 +170,5 @@ def summarize(grid, report: FleetReport) -> FleetSummary:
         up_hours_by_policy=np.nansum(hours, axis=(0, 1)),
         total_cost=float(np.nansum(cube(report.tco))),
         total_up_hours=float(np.nansum(hours)),
+        dispatch=disp,
     )

@@ -123,6 +123,84 @@ def soft_scan_ref(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
     return FleetScanOut(*acc)
 
 
+def dispatch_alloc_hour(prev: jax.Array, dwell: jax.Array,
+                        avail: jax.Array, order: jax.Array,
+                        rank: jax.Array, demand,
+                        *, min_dwell: int) -> tuple[jax.Array, jax.Array]:
+    """One hour of feasible cross-site dispatch (greedy water-fill).
+
+    Shared *verbatim* by `dispatch_ref` and the Pallas kernel
+    (`repro.kernels.dispatch_scan`), so the two paths produce
+    bit-identical allocations — only the orchestration around this
+    function (lax.scan vs time-blocked grid with VMEM carry) differs.
+
+    Each site contributes three price-sorted segments of capacity:
+
+      locked  — load held < ``min_dwell`` hours; ranked below every
+                other segment (price-ordered among themselves) so it is
+                retained unless demand itself shrinks below the locks
+      retain  — the rest of the previous allocation, priced at
+                p - migrate_cost (leaving must pay the migration fee)
+      fresh   — unused capacity at the plain market price
+
+    ``order``/``rank`` are the ascending sort permutation of the 3S
+    segment keys and its inverse, precomputed on the host
+    (`repro.dispatch.segment_rank`): keys depend only on prices and the
+    migration premium, never on the running state. The greedy fill is
+    then sort-free — gather the widths into price order, one exclusive
+    cumsum, gather each segment's cheaper-mass back, and take
+    ``clip(demand - cheaper_mass, 0, width)`` — O(S) work per hour.
+
+    prev/dwell/avail: [S]; order/rank: [3S] int32; demand: scalar MW.
+    Returns ``(alloc [S], dwell' [S])``. Capacity loss breaks a dwell
+    lock (physics beats contract): locked width is capped at ``avail``.
+    """
+    s = prev.shape[0]
+    held = jnp.minimum(prev, avail)
+    if min_dwell > 0:
+        locked = jnp.where(dwell > 0.0, held, 0.0)
+    else:
+        locked = jnp.zeros_like(held)
+    widths = jnp.concatenate([locked, held - locked, avail - held])
+    sorted_w = jnp.take(widths, order)
+    excl = jnp.cumsum(sorted_w) - sorted_w
+    before = jnp.take(excl, rank)        # MW at strictly cheaper segments
+    fill = jnp.clip(demand - before, 0.0, widths)
+    alloc = fill[:s] + fill[s:2 * s] + fill[2 * s:]
+    if min_dwell > 0:
+        dwell = jnp.where(alloc > prev + 1e-6, float(min_dwell),
+                          jnp.maximum(dwell - 1.0, 0.0))
+    return alloc, dwell
+
+
+def dispatch_ref(avail: jax.Array, order: jax.Array, rank: jax.Array,
+                 demand: jax.Array, *, min_dwell: int = 0) -> jax.Array:
+    """Sequential oracle for the hour-by-hour fleet dispatch scan.
+
+    avail: [S, T] available MW per site (policy on/off state x site
+    rating); order/rank: [T, 3S] precomputed segment sort data;
+    demand: [T] MW. Returns the allocation [S, T]. Initial state is
+    empty (hour 0 *places* the fleet's load, which is not counted as
+    migration by the accounting in `repro.dispatch`).
+    """
+    a = jnp.asarray(avail, jnp.float32)
+    s = a.shape[0]
+
+    def step(carry, inp):
+        prev, dwell = carry
+        a_t, o_t, r_t, d_t = inp
+        alloc, dwell = dispatch_alloc_hour(prev, dwell, a_t, o_t, r_t,
+                                           d_t, min_dwell=min_dwell)
+        return (alloc, dwell), alloc
+
+    zeros = jnp.zeros((s,), jnp.float32)
+    _, alloc_t = jax.lax.scan(
+        step, (zeros, zeros),
+        (a.T, jnp.asarray(order, jnp.int32), jnp.asarray(rank, jnp.int32),
+         jnp.asarray(demand, jnp.float32)))
+    return alloc_t.T
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: int = 0,
                   q_offset: int = 0) -> jax.Array:

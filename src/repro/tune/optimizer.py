@@ -31,6 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dispatch import (DispatchConfig, DispatchInfeasible,
+                            build_problem)
+from repro.dispatch import dispatch as dispatch_solve
 from repro.fleet.engine import backtest, fleet_costs
 from repro.kernels.ref import fleet_scan_ref
 from repro.optim.adamw import AdamWConfig, AdamWState, adamw_update
@@ -57,6 +60,11 @@ class TuneConfig(NamedTuple):
     power_cap_mw: Optional[float] = None
     min_up_hours: Optional[float] = None
     penalty_weight: float = 10.0
+    # feasible cross-site dispatch re-evaluation (None disables): after
+    # hard re-evaluation, score the tuned and the best-swept policy sets
+    # under `repro.dispatch` — hard constraints, not the soft penalties
+    # above — and report both (TuneResult.dispatch)
+    dispatch: Optional[DispatchConfig] = None
 
 
 class TuneResult(NamedTuple):
@@ -72,6 +80,10 @@ class TuneResult(NamedTuple):
     improvement_vs_own: np.ndarray    # 1 - cpc / cpc_swept
     source: np.ndarray           # 0 = tuned, 1 = own swept, 2 = cell best
     history: dict                # per-step arrays: loss, tau, penalty
+    # feasible-dispatch re-evaluation (None unless cfg.dispatch given):
+    # {"cpc_tuned", "cpc_swept", "chosen", "tuned", "swept"} where the
+    # last two are repro.dispatch.DispatchResult
+    dispatch: Optional[dict] = None
 
 
 def _tau_schedule(cfg: TuneConfig) -> jnp.ndarray:
@@ -143,6 +155,46 @@ def cell_best_rows(grid, cpc: np.ndarray) -> np.ndarray:
     return np.asarray([best[int(c)] for c in key], np.int64)
 
 
+def _dispatch_reeval(grid, params: PhysicalPolicy, cpc: np.ndarray,
+                     best_row: np.ndarray, dcfg: DispatchConfig) -> dict:
+    """Score the selected (tuned) and the best-swept policy sets under
+    the *feasible* cross-site dispatcher — one site per (market, system)
+    cell, hard constraints instead of the soft tuning penalties. A
+    policy set that cannot meet the configured demand is not clipped to
+    fit: it scores ``cpc = inf`` with the `DispatchInfeasible` reason
+    recorded, and the feasible set (if any) is chosen."""
+    key = cell_index(grid)
+    sel: dict[int, int] = {}
+    for b in range(len(key)):
+        c = int(key[b])
+        if c not in sel or cpc[b] < cpc[sel[c]]:
+            sel[c] = b
+    rows = np.asarray([sel[c] for c in sorted(sel)], np.int64)
+    markets = np.asarray(grid.market_idx)[rows]
+    prices = np.asarray(grid.prices)[markets]
+    power = np.asarray(grid.power)[rows]
+    fixed = np.asarray(grid.fixed)[rows]
+
+    def run(p_on, p_off, lvl, take):
+        try:
+            return dispatch_solve(build_problem(
+                prices, np.asarray(p_on)[take], np.asarray(p_off)[take],
+                np.asarray(lvl)[take], power, dcfg, fixed=fixed)), None
+        except DispatchInfeasible as e:
+            return None, str(e)
+
+    tuned, why_t = run(params.p_on, params.p_off, params.off_level, rows)
+    sw = best_row[rows]
+    swept, why_s = run(grid.p_on, grid.p_off, grid.off_level, sw)
+    cpc_t = tuned.cpc if tuned is not None else float("inf")
+    cpc_s = swept.cpc if swept is not None else float("inf")
+    chosen = None if tuned is None and swept is None else \
+        ("tuned" if cpc_t <= cpc_s else "swept")
+    return {"cpc_tuned": cpc_t, "cpc_swept": cpc_s, "chosen": chosen,
+            "tuned": tuned, "swept": swept,
+            "infeasible_tuned": why_t, "infeasible_swept": why_s}
+
+
 def optimize(grid, cfg: TuneConfig = TuneConfig()) -> TuneResult:
     """Gradient-tune every scenario row of ``grid``; hard-re-evaluate.
 
@@ -196,10 +248,16 @@ def optimize(grid, cfg: TuneConfig = TuneConfig()) -> TuneResult:
         p_off=pick(tuned.p_off, grid.p_off, cb.p_off),
         off_level=pick(tuned.off_level, grid.off_level, cb.off_level))
 
+    dispatch_out = None
+    if cfg.dispatch is not None:
+        dispatch_out = _dispatch_reeval(grid, params, cpc, best_row,
+                                        cfg.dispatch)
+
     return TuneResult(
         params=params, raw=raw_f, cpc=cpc, cpc_tuned=cpc_tuned,
         cpc_swept=cpc_swept, cpc_swept_best=cpc_swept_best,
         improvement_vs_best=1.0 - cpc / cpc_swept_best,
         improvement_vs_own=1.0 - cpc / cpc_swept,
         source=source,
-        history={k: np.asarray(v) for k, v in hist.items()})
+        history={k: np.asarray(v) for k, v in hist.items()},
+        dispatch=dispatch_out)

@@ -154,8 +154,11 @@ def test_summary_is_row_permutation_invariant():
     perm = summarize(grid_p, rep_p)
 
     for field in base._fields:
-        np.testing.assert_allclose(np.asarray(getattr(base, field)),
-                                   np.asarray(getattr(perm, field)),
+        bv, pv = getattr(base, field), getattr(perm, field)
+        if bv is None:        # dispatch block: absent unless configured
+            assert pv is None, field
+            continue
+        np.testing.assert_allclose(np.asarray(bv), np.asarray(pv),
                                    rtol=1e-6, atol=1e-6, err_msg=field)
 
 
@@ -170,6 +173,44 @@ def test_grid_shapes_and_indexing():
     assert len(np.unique(offs)) == 3
     # always-on rows have an infinite threshold
     assert np.all(np.isinf(np.asarray(grid.p_off).reshape(3, 2, 2)[:, :, 0]))
+
+
+def test_take_rows_carries_every_per_row_field():
+    """take_rows must permute every dataclass field that is not shared —
+    compared against `dataclasses.fields()` so a future per-row field
+    cannot be silently dropped."""
+    import dataclasses
+
+    from repro.fleet import ScenarioGrid
+
+    grid = _grid([PolicySpec("ao"), PolicySpec("x2", x=0.02)],
+                 n_markets=2, systems=(SYS, SYS))
+    order = rng.permutation(grid.n_rows)
+    perm = grid.take_rows(order)
+    shared = set(ScenarioGrid.SHARED_FIELDS)
+    names = {f.name for f in dataclasses.fields(ScenarioGrid)}
+    assert shared < names
+    for f in dataclasses.fields(ScenarioGrid):
+        v, pv = getattr(grid, f.name), getattr(perm, f.name)
+        if f.name in shared:
+            assert pv is v or np.array_equal(np.asarray(pv),
+                                             np.asarray(v)), f.name
+        else:
+            assert v.shape[0] == grid.n_rows, \
+                f"{f.name}: per-row fields must be [B]-leading"
+            np.testing.assert_array_equal(
+                np.asarray(v)[order], np.asarray(pv), err_msg=f.name)
+
+
+def test_take_rows_refuses_non_per_row_field():
+    """A field that is neither shared nor [B]-leading must raise, not be
+    silently dropped."""
+    import dataclasses
+
+    grid = _grid([PolicySpec("ao")])
+    bad = dataclasses.replace(grid, restart_time_h=jnp.zeros(()))
+    with pytest.raises(TypeError, match="neither a shared field"):
+        bad.take_rows(np.arange(grid.n_rows))
 
 
 def test_policy_spec_validation():

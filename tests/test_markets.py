@@ -115,6 +115,22 @@ def test_smard_csv_skip_accounting_and_warning(tmp_path):
     assert stats.skip_frac == pytest.approx(3 / 5)
 
 
+def test_load_stats_str_in_loud_failure(tmp_path):
+    """LoadStats renders its accounting, and the loud-failure message
+    carries it (a mis-pointed column reports *what* was seen)."""
+    from repro.energy.smard import LoadStats, load_smard_csv
+    s = LoadStats(n_rows=5, n_parsed=2, n_skipped=2, n_nan=1)
+    assert str(s) == ("5 data rows: 2 parsed, 2 unparseable, 1 empty "
+                      "(60.0% bad)")
+    csv = tmp_path / "p.csv"
+    csv.write_text("Datum;Preis\n01.01.2024 00:00;50,5\n"
+                   "01.01.2024 01:00;-3,2\n")
+    with pytest.raises(ValueError) as ei:
+        load_smard_csv(str(csv), column=0)
+    assert str(LoadStats(n_rows=2, n_parsed=0, n_skipped=2,
+                         n_nan=0)) in str(ei.value)
+
+
 def test_generic_price_csv_multiline_header_and_all_header(tmp_path):
     import warnings
     csv = tmp_path / "p.csv"
