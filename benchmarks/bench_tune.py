@@ -1,22 +1,31 @@
 """Policy-tuning throughput: row-steps/sec of the jitted fleet-wide
-gradient loop, plus the realized improvement over the swept grid.
+gradient loop, fused custom-VJP vs native autodiff, plus peak-memory.
 
-One tuning step = forward + backward through the associative soft scan
-over all B rows and T hours plus a vmapped Adam update — the figure of
-merit is (rows x steps) / second, i.e. how many per-site gradient
-refinements the tuner sustains."""
+One tuning step = forward + backward through the soft scan over all B
+rows and T hours plus a vmapped Adam update — the figure of merit is
+(rows x steps) / second, i.e. how many per-site gradient refinements
+the tuner sustains. Both variants time the *same* compiled object the
+tuner runs (`repro.tune.tune_loop`: annealing, Adam scan and hard
+re-evaluation in one program), differing only in
+``TuneConfig.fused`` — so the reported speedup is exactly what
+switching the VJP buys. Warm timings are the median of ``repeats``
+(`benchmarks.common.timed`), and the compiled programs' XLA
+`memory_analysis` peak temp sizes quantify the HBM-resident
+intermediates the checkpointed backward removes.
+"""
 
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
-from benchmarks.common import write_artifact
+import jax
+
+from benchmarks.common import timed, write_artifact
 from repro.core.tco import make_system
 from repro.energy.presets import region_params
 from repro.fleet import PolicySpec, build_grid
-from repro.tune import TuneConfig, optimize
+from repro.tune import (TuneConfig, init_from_grid, optimize,
+                        problem_from_grid, tune_loop)
 
 
 def _grid(n_markets: int, n_systems: int, hours: int):
@@ -37,35 +46,71 @@ def _grid(n_markets: int, n_systems: int, hours: int):
     return build_grid(markets, systems, policies)
 
 
-def bench_tune(n_markets: int = 8, n_systems: int = 4,
-               hours: int = 2190, steps: int = 200) -> dict:
-    """8 x 4 x 8 = 256 rows x 2190 h, 200 annealed Adam steps."""
-    grid = _grid(n_markets, n_systems, hours)
-    cfg = TuneConfig(steps=steps)
+def _time_variant(problem, raw0_np, cfg: TuneConfig, repeats: int):
+    """Median warm wall time of the full jitted loop + compiled peak
+    temp bytes. Compiles exactly once (the timed calls run the lowered
+    executable directly — also the object `memory_analysis` reads);
+    ``tune_loop`` donates its parameter carry, so every call rebuilds
+    the (tiny) raw-parameter arrays from host copies."""
+    raw0 = jax.tree.map(jax.numpy.asarray, raw0_np)
+    compiled = tune_loop.lower(raw0, problem, cfg=cfg).compile()
+    mem = compiled.memory_analysis()
+    temp_bytes = None if mem is None else int(mem.temp_size_in_bytes)
 
-    # the scan length is baked into the jitted loop, so a short warmup
-    # would not compile the real thing: time a cold and a warm run
-    t0 = time.perf_counter()
-    optimize(grid, cfg)
-    cold_s = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    res = optimize(grid, cfg)
-    wall_s = time.perf_counter() - t0
+    def call():
+        out = compiled(jax.tree.map(jax.numpy.asarray, raw0_np), problem)
+        jax.block_until_ready(out[0])
+        return out
+
+    _, warm_us = timed(call, repeats=repeats, stat="median")
+    return warm_us / 1e6, temp_bytes
+
+
+def bench_tune(n_markets: int = 8, n_systems: int = 4,
+               hours: int = 2190, steps: int = 200, repeats: int = 3,
+               with_optimize: bool = True) -> dict:
+    """8 x 4 x 8 = 256 rows x 2190 h, 200 annealed Adam steps,
+    fused custom-VJP vs native-autodiff backward at matched configs."""
+    grid = _grid(n_markets, n_systems, hours)
+    problem = problem_from_grid(grid)
+    raw0_np = jax.tree.map(np.asarray, init_from_grid(grid))
+    row_steps = grid.n_rows * steps
+
+    fused_s, fused_tmp = _time_variant(
+        problem, raw0_np, TuneConfig(steps=steps), repeats)
+    native_s, native_tmp = _time_variant(
+        problem, raw0_np, TuneConfig(steps=steps, fused=False), repeats)
 
     out = {
         "rows": grid.n_rows,
         "hours": hours,
         "steps": steps,
-        "wall_s": wall_s,
-        "cold_wall_s": cold_s,
-        "row_steps_per_s": grid.n_rows * steps / wall_s,
-        "improvement_vs_best_mean": float(res.improvement_vs_best.mean()),
-        "improvement_vs_own_mean": float(res.improvement_vs_own.mean()),
-        "rows_strictly_better": int(
-            (res.cpc < res.cpc_swept_best * (1 - 1e-6)).sum()),
-        "loss_first": float(res.history["loss"][0]),
-        "loss_last": float(res.history["loss"][-1]),
+        "repeats": repeats,
+        "wall_s_fused": fused_s,
+        "wall_s_native": native_s,
+        "row_steps_per_s_fused": row_steps / fused_s,
+        "row_steps_per_s_native": row_steps / native_s,
+        "speedup_fused_vs_native": native_s / fused_s,
+        "temp_bytes_fused": fused_tmp,
+        "temp_bytes_native": native_tmp,
+        "temp_reduction": (native_tmp / fused_tmp
+                           if fused_tmp and native_tmp else None),
     }
+
+    if with_optimize:
+        # end-to-end quality numbers (fused path, the default) — the
+        # hard guarantee and how often the gradient beats the sweep
+        res = optimize(grid, TuneConfig(steps=steps))
+        out.update({
+            "improvement_vs_best_mean": float(
+                res.improvement_vs_best.mean()),
+            "improvement_vs_own_mean": float(
+                res.improvement_vs_own.mean()),
+            "rows_strictly_better": int(
+                (res.cpc < res.cpc_swept_best * (1 - 1e-6)).sum()),
+            "loss_first": float(res.history["loss"][0]),
+            "loss_last": float(res.history["loss"][-1]),
+        })
     write_artifact("bench_tune", out)
     return out
 

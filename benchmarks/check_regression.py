@@ -40,7 +40,7 @@ LOW_WATER = 0.5           # --reset seeds baseline at median x this:
 
 # name -> (runner, smoke kwargs, gated metric keys, recorded extras)
 def _suites():
-    from benchmarks import bench_dispatch, bench_fleet
+    from benchmarks import bench_dispatch, bench_fleet, bench_tune
     return {
         # shapes sized so the fused calls take tens of ms: smaller smoke
         # runs time nothing but host jitter and the gate flakes
@@ -55,6 +55,16 @@ def _suites():
             ("speedup",),
             ("hours_per_s_fused", "hours_per_s_python_loop", "sites",
              "bit_identical_pallas_vs_ref")),
+        # gates the tuner's fused-VJP advantage over the native-autodiff
+        # backward it replaced (same machine-relative-speedup logic: a
+        # drop means someone de-fused the tuner's backward pass)
+        "bench_tune": (
+            bench_tune.bench_tune,
+            dict(n_markets=4, n_systems=2, hours=1024, steps=40,
+                 repeats=2, with_optimize=False),
+            ("speedup_fused_vs_native",),
+            ("row_steps_per_s_fused", "row_steps_per_s_native", "rows",
+             "steps", "temp_bytes_fused", "temp_bytes_native")),
     }
 
 

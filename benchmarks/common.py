@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import json
+import statistics
 import time
 from pathlib import Path
 
@@ -11,21 +12,28 @@ import numpy as np
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
 
 
-def timed(fn, *args, repeats: int = 3, **kw):
+def timed(fn, *args, repeats: int = 3, stat: str = "min", **kw):
     """(result, microseconds-per-call) with one warmup.
 
-    Reports the *fastest* repeat: the minimum is the standard robust
-    estimator for "what does this code cost" — interference from other
-    processes only ever adds time, so the mean drifts with machine load
-    (which matters for the CI regression gate, `check_regression`).
+    ``stat="min"`` (default) reports the *fastest* repeat: the minimum
+    is the standard robust estimator for "what does this code cost" —
+    interference from other processes only ever adds time, so the mean
+    drifts with machine load (which matters for the CI regression gate,
+    `check_regression`). ``stat="median"`` reports the median repeat
+    instead — the right call when the timed quantity is itself a whole
+    pipeline (e.g. `bench_tune`'s warm `tune_loop` runs) and a single
+    lucky repeat should not define the gated number.
     """
+    if stat not in ("min", "median"):
+        raise ValueError(f"timed: unknown stat {stat!r}")
     fn(*args, **kw)
-    best = float("inf")
+    times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn(*args, **kw)
-        best = min(best, time.perf_counter() - t0)
-    return out, best * 1e6
+        times.append(time.perf_counter() - t0)
+    agg = min(times) if stat == "min" else statistics.median(times)
+    return out, agg * 1e6
 
 
 def write_artifact(name: str, payload: dict) -> Path:

@@ -103,11 +103,16 @@ def _headline(name: str, out: dict) -> str:
                 f"(x{out['speedup']:.0f}), pallas|ref err "
                 f"{out['max_abs_err_pallas_vs_ref']:.1e}")
     if name == "bench_tune":
-        return (f"{out['rows']} rows x {out['steps']} steps: "
-                f"{out['row_steps_per_s']:.0f} row-steps/s, "
-                f"{out['rows_strictly_better']}/{out['rows']} rows beat "
-                f"best swept "
-                f"(mean +{out['improvement_vs_best_mean'] * 100:.2f}%)")
+        line = (f"{out['rows']} rows x {out['steps']} steps: "
+                f"{out['row_steps_per_s_fused']:.0f} row-steps/s fused "
+                f"vs {out['row_steps_per_s_native']:.0f} native "
+                f"(x{out['speedup_fused_vs_native']:.1f})")
+        if out.get("temp_reduction"):
+            line += f", x{out['temp_reduction']:.1f} less scratch"
+        if "rows_strictly_better" in out:
+            line += (f"; {out['rows_strictly_better']}/{out['rows']} "
+                     f"rows beat best swept")
+        return line
     if name == "step_time":
         return ", ".join(f"{k}: {v['s_per_step']:.2f}s"
                          for k, v in out.items())

@@ -85,14 +85,20 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grid, few steps (CI)")
     ap.add_argument("--resamples", type=int, default=None)
+    ap.add_argument("--fused", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="checkpointed custom-VJP soft scan (default); "
+                    "--no-fused uses native autodiff through the "
+                    "associative scan (the PR-3 baseline)")
     args = ap.parse_args()
 
     grid = build(args)
-    cfg = TuneConfig(steps=40 if args.smoke else 300)
+    cfg = TuneConfig(steps=40 if args.smoke else 300, fused=args.fused)
     print(f"grid: {grid.n_markets} markets x {grid.n_systems} systems x "
           f"{grid.n_policies} policies = {grid.n_rows} rows x "
           f"{grid.n_hours} h; tuning {cfg.steps} steps, "
-          f"tau {cfg.tau_start} -> {cfg.tau_end}")
+          f"tau {cfg.tau_start} -> {cfg.tau_end}, "
+          f"{'fused' if cfg.fused else 'native'} VJP")
 
     res = optimize(grid, cfg)
     print(f"soft loss {res.history['loss'][0]:.4f} -> "

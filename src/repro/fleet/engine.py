@@ -27,7 +27,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.fleet.grid import ScenarioGrid
+from repro.fleet.grid import ScenarioGrid, concat_rows, row_chunks
 from repro.fleet.report import FleetReport
 from repro.kernels.fleet_scan import fleet_scan
 from repro.kernels.ref import FleetScanOut, fleet_scan_ref
@@ -96,14 +96,26 @@ def _backtest_jit(prices, market_idx, system_idx, policy_idx,
 
 
 def backtest(grid: ScenarioGrid, *, use_pallas: Optional[bool] = None,
-             block_b: int = 128, block_t: int = 512) -> FleetReport:
+             block_b: int = 128, block_t: int = 512,
+             chunk_rows: int = 0) -> FleetReport:
     """Backtest every scenario row of ``grid`` in one jitted call.
 
     ``use_pallas=None`` auto-selects: the Pallas kernel on TPU, the
     vectorized pure-JAX recurrence elsewhere (the Pallas interpreter is a
     debugging tool, not a fast path). Both paths are checked against each
     other in `tests/test_fleet.py`.
+
+    ``chunk_rows`` evaluates the grid in fixed-size row slices (via
+    `ScenarioGrid.take_rows`, padded to one compile shape) instead of
+    one [B, T] pass — per-row results are identical, but the in-jit
+    price gather never exceeds the chunk footprint, which is what lets
+    `repro.tune.optimize` hard-re-evaluate B ~ 10^5 grids on one host.
     """
+    if chunk_rows and grid.n_rows > chunk_rows:
+        parts = [backtest(grid.take_rows(sl), use_pallas=use_pallas,
+                          block_b=block_b, block_t=block_t)
+                 for sl in row_chunks(grid.n_rows, chunk_rows)]
+        return concat_rows(parts, grid.n_rows)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     return _backtest_jit(

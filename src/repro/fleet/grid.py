@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -146,6 +147,29 @@ class ScenarioGrid:
                     "it to SHARED_FIELDS or make it per-row")
             rep[f.name] = v[order]
         return dataclasses.replace(self, **rep)
+
+
+def row_chunks(n_rows: int, chunk: int) -> list[np.ndarray]:
+    """Equal-size row-index slices covering ``n_rows``, the last padded
+    by repeating row 0.
+
+    The single source of the chunked-evaluation idiom (fleet backtest,
+    tuner loop, hard re-eval): equal slice sizes mean one compile shape,
+    and because every per-row computation in those paths is independent
+    of its batch, the padding rows cannot perturb the real ones — they
+    are simply dropped again by `concat_rows`.
+    """
+    n_chunks = -(-n_rows // chunk)
+    idx = np.concatenate([np.arange(n_rows),
+                          np.zeros(n_chunks * chunk - n_rows, np.int64)])
+    return [idx[j * chunk:(j + 1) * chunk] for j in range(n_chunks)]
+
+
+def concat_rows(parts: list, n_rows: int):
+    """Concatenate per-chunk pytrees along the row axis and trim the
+    `row_chunks` padding. Works on bare arrays and on any pytree of
+    [chunk]-leading leaves (FleetReport, PolicyParams, ...)."""
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs)[:n_rows], *parts)
 
 
 def _resolve_threshold(prices_desc: np.ndarray, spec: PolicySpec) -> float:

@@ -73,6 +73,94 @@ def fleet_scan_ref(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
     return FleetScanOut(*acc)
 
 
+def soft_gates(p_t, p_on, p_off, inv_tau):
+    """Per-hour sigmoid event gates of the relaxed hysteresis recurrence.
+
+    Returns ``(a, f, alpha, beta)`` with a = sigmoid((p_on - p_t)/tau)
+    ("turn on"), f = sigmoid((p_t - p_off)/tau) ("turn off"), and the
+    affine-map coefficients of s_t = alpha_t s_{t-1} + beta_t. Shared
+    verbatim — elementwise, broadcasting — by `soft_scan_ref`,
+    `repro.kernels.soft_scan.soft_state`, and both paths of the fused
+    VJP (`repro.kernels.soft_scan_vjp`), so every implementation relaxes
+    the state machine with the *same* per-hour math.
+    """
+    a = jax.nn.sigmoid((p_on - p_t) * inv_tau)
+    f = jax.nn.sigmoid((p_t - p_off) * inv_tau)
+    return a, f, (1.0 - a) * (1.0 - f), a
+
+
+def soft_gate_grad(p_t, s_prev, u_t, p_on, p_off, inv_tau, gates=None):
+    """Per-hour chain rule of the relaxed recurrence.
+
+    Given the adjoint u_t = dL/ds_t (fully accumulated through later
+    hours) and the entering state s_{t-1}, backpropagates through
+    s_t = alpha_t s_{t-1} + beta_t and the gates to the hour's inputs.
+    Returns per-hour contributions ``(d_p, d_p_on, d_p_off, d_inv_tau)``
+    — callers sum the last three over t (and convert d_inv_tau to d_tau
+    via dtau = -inv_tau^2 d_invtau). Shared verbatim by the sequential
+    oracle `soft_scan_grad_ref`, the blocked XLA backward, and the
+    Pallas backward kernel, exactly like `dispatch_alloc_hour`.
+    ``gates`` lets a caller that already evaluated `soft_gates` (the
+    blocked backwards need alpha for the adjoint recurrence anyway)
+    pass ``(a, f)`` instead of paying the sigmoids twice.
+    """
+    a, f = gates if gates is not None else \
+        soft_gates(p_t, p_on, p_off, inv_tau)[:2]
+    d_alpha = u_t * s_prev                  # d beta = u_t
+    d_a = u_t - d_alpha * (1.0 - f)         # alpha = (1-a)(1-f), beta = a
+    d_f = -d_alpha * (1.0 - a)
+    d_zon = d_a * a * (1.0 - a)             # z_on  = (p_on - p) inv_tau
+    d_zoff = d_f * f * (1.0 - f)            # z_off = (p - p_off) inv_tau
+    d_p = (d_zoff - d_zon) * inv_tau
+    d_p_on = d_zon * inv_tau
+    d_p_off = -d_zoff * inv_tau
+    d_inv_tau = d_zon * (p_on - p_t) + d_zoff * (p_t - p_off)
+    return d_p, d_p_on, d_p_off, d_inv_tau
+
+
+def soft_scan_grad_ref(prices: jax.Array, p_on: jax.Array,
+                       p_off: jax.Array, g: jax.Array, *, tau
+                       ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array]:
+    """Sequential oracle for the VJP of the soft-state trajectory.
+
+    Given the cotangent ``g`` [B, T] of `soft_scan.soft_state`'s output,
+    runs the recurrence forward (materialising the state sequence — this
+    is an oracle, not a fast path), then walks the time grid in reverse
+    accumulating the adjoint u_t = g_t + alpha_{t+1} u_{t+1} and the
+    per-hour input gradients via `soft_gate_grad`. Returns
+    ``(d_prices [B, T], d_p_on [B], d_p_off [B], d_tau [])``.
+    """
+    p = jnp.asarray(prices)
+    dtype = p.dtype if jnp.issubdtype(p.dtype, jnp.floating) else jnp.float32
+    p = p.astype(dtype)
+    b = p.shape[0]
+    p_on = jnp.broadcast_to(jnp.asarray(p_on, dtype), (b,))
+    p_off = jnp.broadcast_to(jnp.asarray(p_off, dtype), (b,))
+    g = jnp.asarray(g, dtype)
+    inv_tau = 1.0 / jnp.asarray(tau, dtype)
+
+    def fwd(s_prev, p_t):
+        _, _, alpha, beta = soft_gates(p_t, p_on, p_off, inv_tau)
+        return alpha * s_prev + beta, (s_prev, alpha)
+
+    _, (s_prev_t, alpha_t) = jax.lax.scan(fwd, jnp.ones((b,), dtype), p.T)
+
+    def bwd(carry, inp):
+        u_next, alpha_next = carry          # u_{t+1}, alpha_{t+1}
+        p_t, g_t, s_prev, alpha = inp
+        u = g_t + alpha_next * u_next
+        d_p, d_on, d_off, d_it = soft_gate_grad(p_t, s_prev, u, p_on,
+                                                p_off, inv_tau)
+        return (u, alpha), (d_p, d_on, d_off, d_it)
+
+    zeros = jnp.zeros((b,), dtype)
+    _, (d_p, d_on, d_off, d_it) = jax.lax.scan(
+        bwd, (zeros, zeros), (p.T, g.T, s_prev_t, alpha_t), reverse=True)
+    d_tau = -inv_tau ** 2 * jnp.sum(d_it)
+    return d_p.T, jnp.sum(d_on, axis=0), jnp.sum(d_off, axis=0), d_tau
+
+
 def soft_scan_ref(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
                   off_level: jax.Array, idle_frac: jax.Array, *,
                   tau: float) -> FleetScanOut:
@@ -107,9 +195,8 @@ def soft_scan_ref(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
 
     def step(carry, p_t):
         s_prev, acc = carry
-        a = jax.nn.sigmoid((p_on - p_t) * inv_tau)
-        off = jax.nn.sigmoid((p_t - p_off) * inv_tau)
-        s = a + (1.0 - a) * (1.0 - off) * s_prev
+        _, _, alpha, beta = soft_gates(p_t, p_on, p_off, inv_tau)
+        s = alpha * s_prev + beta
         start = s * (1.0 - s_prev)
         cap = off_level + (1.0 - off_level) * s
         draw = cap + idle_frac * (1.0 - cap)

@@ -22,8 +22,14 @@ the composition monoid of affine maps
 giving a single fused jitted pass over [B, T] with O(log T) depth — the
 whole tuning objective (soft scan + cost assembly + penalties) is one
 XLA computation, and JAX's native autodiff through the associative scan
-provides exact gradients of the relaxed objective (no custom_vjp
-needed: every primitive involved has a registered transpose).
+provides exact gradients of the relaxed objective. That native backward
+is also the expensive way to get them: it re-materialises the [B, T]
+affine intermediates at every level of the scan tree. ``fused=True``
+(what `repro.tune` runs) swaps in the checkpointed custom VJP of
+`repro.kernels.soft_scan_vjp` — same values and gradients to tight
+tolerance, O(B·T/block) residuals and a fraction of the backward cost;
+the native form stays the ground truth the fused path is tested
+against.
 
 Computation runs in the price dtype, so float64 inputs (under x64) give
 float64 gradients — the finite-difference checks in `tests/test_tune.py`
@@ -32,10 +38,12 @@ rely on this.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ref import FleetScanOut
+from repro.kernels.ref import FleetScanOut, soft_gates
 
 
 def _affine_compose(earlier, later):
@@ -46,12 +54,22 @@ def _affine_compose(earlier, later):
 
 
 def soft_state(prices: jax.Array, p_on: jax.Array, p_off: jax.Array, *,
-               tau) -> jax.Array:
+               tau, fused: bool = False, block_t: int = 256,
+               use_pallas: Optional[bool] = None) -> jax.Array:
     """Soft on-state trajectory s in [0, 1]^{B x T} via associative scan.
 
     prices: [B, T]; p_on/p_off: [B] (broadcastable). Initial state is 1
-    (running), matching `fleet_scan_ref`.
+    (running), matching `fleet_scan_ref`. ``fused=True`` routes through
+    `repro.kernels.soft_scan_vjp.soft_state_fused` — same values, but a
+    hand-written checkpointed VJP instead of native autodiff through the
+    associative scan (the tuner's fast path; `repro.tune` defaults to
+    it). The default here stays the native form: it is the
+    autodiff-ground-truth the fused path is tested against.
     """
+    if fused:
+        from repro.kernels.soft_scan_vjp import soft_state_fused
+        return soft_state_fused(prices, p_on, p_off, tau=tau,
+                                block_t=block_t, use_pallas=use_pallas)
     p = jnp.asarray(prices)
     dtype = p.dtype if jnp.issubdtype(p.dtype, jnp.floating) else jnp.float32
     p = p.astype(dtype)
@@ -60,10 +78,8 @@ def soft_state(prices: jax.Array, p_on: jax.Array, p_off: jax.Array, *,
     p_off = jnp.broadcast_to(jnp.asarray(p_off, dtype), (b,))
     inv_tau = 1.0 / jnp.asarray(tau, dtype)
 
-    a = jax.nn.sigmoid((p_on[:, None] - p) * inv_tau)      # [B, T]
-    off = jax.nn.sigmoid((p - p_off[:, None]) * inv_tau)   # [B, T]
-    alpha = (1.0 - a) * (1.0 - off)
-    beta = a
+    _, _, alpha, beta = soft_gates(p, p_on[:, None], p_off[:, None],
+                                   inv_tau)                 # [B, T]
     cum_a, cum_b = jax.lax.associative_scan(
         _affine_compose, (alpha, beta), axis=1)
     return cum_a * 1.0 + cum_b                              # s0 = 1
@@ -71,11 +87,16 @@ def soft_state(prices: jax.Array, p_on: jax.Array, p_off: jax.Array, *,
 
 def soft_scan_parts(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
                     off_level: jax.Array, idle_frac: jax.Array, *,
-                    tau) -> tuple[FleetScanOut, jax.Array]:
+                    tau, fused: bool = False, block_t: int = 256,
+                    use_pallas: Optional[bool] = None
+                    ) -> tuple[FleetScanOut, jax.Array]:
     """(FleetScanOut, per-sample draw [B, T]) of the relaxed scan.
 
     The draw trajectory is what fleet-coupling penalties (total-power
-    cap) integrate over; `soft_fleet_scan` discards it.
+    cap) integrate over; `soft_fleet_scan` discards it. ``fused``
+    selects the checkpointed custom-VJP state evaluation (see
+    `soft_state`); everything downstream of the state is plain autodiff
+    either way.
     """
     p = jnp.asarray(prices)
     dtype = p.dtype if jnp.issubdtype(p.dtype, jnp.floating) else jnp.float32
@@ -84,7 +105,8 @@ def soft_scan_parts(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
     off_level = jnp.broadcast_to(jnp.asarray(off_level, dtype), (b,))
     idle_frac = jnp.broadcast_to(jnp.asarray(idle_frac, dtype), (b,))
 
-    s = soft_state(p, p_on, p_off, tau=tau)                 # [B, T]
+    s = soft_state(p, p_on, p_off, tau=tau, fused=fused,
+                   block_t=block_t, use_pallas=use_pallas)  # [B, T]
     s_prev = jnp.concatenate([jnp.ones((b, 1), dtype), s[:, :-1]], axis=1)
     starts = s * (1.0 - s_prev)           # smooth 0->1 transition mass
     cap = off_level[:, None] + (1.0 - off_level[:, None]) * s
@@ -98,7 +120,8 @@ def soft_scan_parts(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
 
 def soft_fleet_scan(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
                     off_level: jax.Array, idle_frac: jax.Array, *,
-                    tau) -> FleetScanOut:
+                    tau, fused: bool = False, block_t: int = 256,
+                    use_pallas: Optional[bool] = None) -> FleetScanOut:
     """Differentiable counterpart of `repro.kernels.fleet_scan.fleet_scan`.
 
     Same contract ([B, T] prices, [B] broadcastable params, p_on <= p_off)
@@ -109,4 +132,5 @@ def soft_fleet_scan(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
     oracle) and against `fleet_scan_ref` in the tau -> 0 limit.
     """
     return soft_scan_parts(prices, p_on, p_off, off_level, idle_frac,
-                           tau=tau)[0]
+                           tau=tau, fused=fused, block_t=block_t,
+                           use_pallas=use_pallas)[0]

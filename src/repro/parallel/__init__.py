@@ -9,6 +9,7 @@ from repro.parallel.axes import (
     current_mesh,
     current_rules,
     logical_to_spec,
+    row_mesh,
     use_sharding,
 )
 
@@ -23,5 +24,6 @@ __all__ = [
     "current_mesh",
     "current_rules",
     "logical_to_spec",
+    "row_mesh",
     "use_sharding",
 ]

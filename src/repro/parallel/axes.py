@@ -180,3 +180,19 @@ def named_sharding(*logical_axes: Optional[str],
     if mesh is None:
         raise ValueError("no active mesh")
     return NamedSharding(mesh, logical_to_spec(logical_axes, rules))
+
+
+def row_mesh(n: int, axis: str = "rows") -> Mesh:
+    """1-D mesh over the first ``n`` local devices.
+
+    The batch-sharding mesh of data-parallel scenario work — the
+    tuner's `shard_map`-over-B hot loop (`repro.tune.optimizer`) splits
+    independent grid rows across it. Orthogonal to the logical-axis
+    model meshes above: rows are embarrassingly parallel, so no rule
+    set is involved.
+    """
+    import numpy as np
+    devices = jax.devices()
+    if n > len(devices):
+        raise ValueError(f"row_mesh({n}) but only {len(devices)} devices")
+    return Mesh(np.asarray(devices[:n]), (axis,))

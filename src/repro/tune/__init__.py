@@ -25,9 +25,10 @@ from repro.tune.objective import (PhysicalPolicy, PolicyParams, TuneProblem,
                                   inverse_transform, problem_from_grid,
                                   soft_costs, soft_objective, transform)
 from repro.tune.optimizer import (TuneConfig, TuneResult, cell_best_rows,
-                                  hard_cpc, optimize)
+                                  hard_cpc, optimize, tune_loop)
 
 __all__ = ["PhysicalPolicy", "PolicyParams", "TuneProblem", "TuneConfig",
            "TuneResult", "cell_best_rows", "cell_index", "hard_cpc",
            "init_from_grid", "inverse_transform", "problem_from_grid",
-           "soft_costs", "soft_objective", "transform", "optimize"]
+           "soft_costs", "soft_objective", "transform", "optimize",
+           "tune_loop"]

@@ -167,14 +167,19 @@ def init_from_grid(grid) -> PolicyParams:
         p_on=p_on, p_off=p_off, off_level=np.asarray(grid.off_level)))
 
 
-def soft_costs(raw: PolicyParams, problem: TuneProblem, tau):
+def soft_costs(raw: PolicyParams, problem: TuneProblem, tau, *,
+               fused: bool = True, block_t: int = 256):
     """(FleetCosts, per-sample draw [B, T]) of the relaxed scan at
     ``tau`` — the engine's cost assembly over the soft sufficient
-    statistics."""
+    statistics. ``fused`` selects the checkpointed custom-VJP soft-state
+    evaluation (`repro.kernels.soft_scan_vjp`) instead of native
+    autodiff through the associative scan — same gradients to tight
+    tolerance, a fraction of the backward cost and residual memory."""
     phys = transform(raw)
     p = problem.row_prices()                      # [B, T] gather, in-jit
     scan, draw = soft_scan_parts(p, phys.p_on, phys.p_off, phys.off_level,
-                                 problem.idle_frac, tau=tau)
+                                 problem.idle_frac, tau=tau, fused=fused,
+                                 block_t=block_t)
     costs = fleet_costs(
         scan, price_sum=problem.price_sum, fixed=problem.fixed,
         power=problem.power, period=problem.period,
@@ -186,7 +191,9 @@ def soft_costs(raw: PolicyParams, problem: TuneProblem, tau):
 def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
                    power_cap_mw: Optional[float] = None,
                    min_up_hours: Optional[float] = None,
-                   penalty_weight: float = 10.0):
+                   penalty_weight: float = 10.0,
+                   fused: bool = True, block_t: int = 256,
+                   reduction: str = "mean"):
     """Scalar tuning loss at temperature ``tau`` (lower is better).
 
     loss = mean_b CPC_b / CPC_AO_b  (+ fleet-coupling penalties)
@@ -194,10 +201,18 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
     The CPC ratio is dimensionless (Eq. 28), so rows with very different
     absolute costs contribute comparably and one learning rate serves
     the whole grid. Returns ``(loss, aux)`` with per-row diagnostics.
+
+    ``reduction="sum"`` (the tuner hot loop's setting) sums the per-row
+    ratios instead of averaging and scales the coupling penalties by B
+    to compensate: every per-row gradient is then *independent of which
+    other rows share the batch* (Adam normalizes the common factor
+    away), which is what lets the sharded / chunked `optimize` paths
+    reproduce the single-program trajectory bit for bit.
     """
-    costs, draw = soft_costs(raw, problem, tau)
+    costs, draw = soft_costs(raw, problem, tau, fused=fused,
+                             block_t=block_t)
     ratio = costs.cpc / costs.cpc_ao
-    loss = jnp.mean(ratio)
+    loss = jnp.sum(ratio) if reduction == "sum" else jnp.mean(ratio)
 
     # coupling terms weight each row by 1/|cell| so a K-policy grid
     # charges each physical site once (per-site candidate mean), not K
@@ -213,7 +228,8 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
         total_up = jnp.sum(w * costs.up_hours)
         deficit = jax.nn.relu(min_up_hours - total_up) / min_up_hours
         penalty = penalty + deficit ** 2
-    loss = loss + penalty_weight * penalty
+    scale = ratio.shape[0] if reduction == "sum" else 1.0
+    loss = loss + scale * penalty_weight * penalty
 
     aux = {"ratio": ratio, "cpc": costs.cpc, "up_hours": costs.up_hours,
            "penalty": penalty}

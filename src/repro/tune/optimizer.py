@@ -6,11 +6,33 @@ hysteresis gap, off-capacity level — reparameterized unconstrained, see
 `repro.tune.objective`) descend the temperature-relaxed CPC objective
 simultaneously, one jitted `lax.scan` over optimization steps with the
 whole [B]-row gradient computed in a single backward pass through the
-associative soft scan.
+soft scan — by default the fused, checkpointed custom VJP of
+`repro.kernels.soft_scan_vjp` (``TuneConfig.fused``), which replaces
+native autodiff through the associative scan with a block-local
+recompute and cuts both the backward's arithmetic and its residual
+memory.
 
 The update rule *is* `repro.optim.adamw.adamw_update` — the same code
 path that trains the models — vmapped over rows so each row carries its
 own Adam moments and (optionally) its own per-row gradient clip.
+
+The hot loop (`tune_loop`) is one compiled program: the τ-annealing
+schedule, every Adam step, and the final hard (τ → 0) re-evaluation all
+run inside a single jit with the raw-parameter carry donated, so a
+tuning run is one dispatch and the optimizer state never round-trips.
+Because the per-row gradients are batch-independent (sum-reduction, see
+`soft_objective`), the loop also scales out without changing results:
+
+  * row chunking — ``TuneConfig.chunk_rows`` tunes the grid in fixed
+    row slices (padded to one compile shape), bounding peak memory so
+    B ~ 10^5 grids tune on one host — *bit-identical* to the one-shot
+    program (every chunk compiles to the same shape);
+  * ``shard_map`` over B — with more than one device (including CPU
+    virtual devices via ``--xla_force_host_platform_device_count``),
+    rows are split across a 1-D `repro.parallel.row_mesh` and tuned in
+    parallel. Same math, but XLA codegen depends on the shard width, so
+    agreement with the single-device program is ULP-level rather than
+    bitwise (shards narrower than 2 rows are never created).
 
 Temperature annealing: the sigmoid temperature follows a geometric
 schedule from ``tau_start`` (smooth, wide basins — gradients see far
@@ -35,12 +57,16 @@ from repro.dispatch import (DispatchConfig, DispatchInfeasible,
                             build_problem)
 from repro.dispatch import dispatch as dispatch_solve
 from repro.fleet.engine import backtest, fleet_costs
+from repro.fleet.grid import concat_rows, row_chunks
 from repro.kernels.ref import fleet_scan_ref
 from repro.optim.adamw import AdamWConfig, AdamWState, adamw_update
+from repro.parallel.axes import SHARD_MAP_NOCHECK, row_mesh, shard_map
 from repro.tune.objective import (PhysicalPolicy, PolicyParams,
-                                  cell_index, init_from_grid,
+                                  TuneProblem, cell_index, init_from_grid,
                                   problem_from_grid, soft_objective,
                                   transform)
+
+from jax.sharding import PartitionSpec as P
 
 
 class TuneConfig(NamedTuple):
@@ -53,9 +79,25 @@ class TuneConfig(NamedTuple):
     b1: float = 0.9
     b2: float = 0.999
     eps: float = 1e-8
-    clip_norm: float = 0.0       # per-row grad clip; 0 disables
+    clip_norm: float = 0.0       # per-row grad clip; 0 disables. The
+                                 # clipped quantity is the row's
+                                 # gradient of its *own* CPC ratio
+                                 # (sum-reduction, B-independent);
+                                 # values calibrated against the PR-2/3
+                                 # mean-reduction loop scale by 1/B
     tau_start: float = 30.0      # EUR/MWh-scale smoothing at the start
     tau_end: float = 0.3         # nearly hard by the end
+    # hot-loop implementation knobs
+    fused: bool = True           # checkpointed custom-VJP soft scan
+                                 # (False: native autodiff — the PR-3
+                                 # baseline, kept for A/B benchmarks)
+    block_t: int = 256           # checkpoint block length (hours)
+    chunk_rows: int = 0          # tune the grid in row slices of this
+                                 # size (0 disables; >= 2) — bounds
+                                 # peak memory, bit-identical per row
+    shard: bool = True           # shard_map rows over available devices
+                                 # (auto: engages when >1 device and no
+                                 # coupling penalty; bit-identical)
     # fleet-coupling penalties (None disables)
     power_cap_mw: Optional[float] = None
     min_up_hours: Optional[float] = None
@@ -94,8 +136,34 @@ def _tau_schedule(cfg: TuneConfig) -> jnp.ndarray:
     return cfg.tau_start * (cfg.tau_end / cfg.tau_start) ** i
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _tune_loop(raw0: PolicyParams, problem, *, cfg: TuneConfig):
+def _hard_cpc_rows(p_on, p_off, off_level, problem: TuneProblem
+                   ) -> jnp.ndarray:
+    """Hard (tau -> 0) CPC of arbitrary per-row policy variables under
+    each row's own hardware parameters — the engine's exact scan + cost
+    path. Traced into `tune_loop` (and into the jitted `hard_cpc`)."""
+    p_rows = problem.row_prices()
+    scan = fleet_scan_ref(p_rows, p_on, p_off, off_level,
+                          problem.idle_frac)
+    return fleet_costs(
+        scan, price_sum=problem.price_sum, fixed=problem.fixed,
+        power=problem.power, period=problem.period,
+        restart_energy_mwh=problem.restart_energy_mwh,
+        restart_time_h=problem.restart_time_h,
+        n_samples=p_rows.shape[1]).cpc
+
+
+hard_cpc = jax.jit(_hard_cpc_rows)
+
+
+def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig):
+    """The tuner hot loop: annealed Adam scan + hard re-evaluation.
+
+    Traced under plain jit (single program), under `shard_map` (one
+    shard of rows), and per chunk — identical per-row math in all
+    three, which is what makes the scaled-out paths bit-consistent.
+    Returns ``(raw_f, history, cpc_tuned)``.
+    """
+    b = raw0.raw_off.shape[0]
     opt = AdamWConfig(lr=cfg.lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
                       weight_decay=0.0, clip_norm=cfg.clip_norm)
 
@@ -117,30 +185,131 @@ def _tune_loop(raw0: PolicyParams, problem, *, cfg: TuneConfig):
         (loss, aux), grads = grad_fn(
             raw, problem, tau, power_cap_mw=cfg.power_cap_mw,
             min_up_hours=cfg.min_up_hours,
-            penalty_weight=cfg.penalty_weight)
+            penalty_weight=cfg.penalty_weight,
+            fused=cfg.fused, block_t=cfg.block_t, reduction="sum")
         raw, st = vupdate(grads, st, raw)
-        return (raw, st), {"loss": loss, "tau": tau,
+        return (raw, st), {"loss": loss / b, "tau": tau,
                            "penalty": aux["penalty"]}
 
     (raw_f, _), hist = jax.lax.scan(step, (raw0, state0),
                                     _tau_schedule(cfg))
-    return raw_f, hist
+    tuned = transform(raw_f)
+    cpc_tuned = _hard_cpc_rows(tuned.p_on, tuned.p_off, tuned.off_level,
+                               problem)
+    return raw_f, hist, cpc_tuned
 
 
-@jax.jit
-def hard_cpc(p_on, p_off, off_level, problem) -> jnp.ndarray:
-    """Hard (tau -> 0) CPC of arbitrary per-row policy variables under
-    each row's own hardware parameters — the engine's exact scan + cost
-    path."""
-    p_rows = problem.row_prices()
-    scan = fleet_scan_ref(p_rows, p_on, p_off, off_level,
-                          problem.idle_frac)
-    return fleet_costs(
-        scan, price_sum=problem.price_sum, fixed=problem.fixed,
-        power=problem.power, period=problem.period,
-        restart_energy_mwh=problem.restart_energy_mwh,
-        restart_time_h=problem.restart_time_h,
-        n_samples=p_rows.shape[1]).cpc
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+def tune_loop(raw0: PolicyParams, problem: TuneProblem, *,
+              cfg: TuneConfig):
+    """One compiled tuning program: τ-annealed Adam over all rows plus
+    the hard re-evaluation, with the raw-parameter carry donated (the
+    Adam scan reuses its buffers instead of allocating fresh ones each
+    call). This is the object `benchmarks/bench_tune.py` times."""
+    return _loop_body(raw0, problem, cfg)
+
+
+_PROBLEM_ROW_FIELDS = tuple(f for f in TuneProblem._fields
+                            if f != "prices")
+
+
+def _take_problem(problem: TuneProblem, idx: np.ndarray) -> TuneProblem:
+    """Row-slice every [B] field of a `TuneProblem` (prices stay shared,
+    exactly like `ScenarioGrid.take_rows`)."""
+    return problem._replace(**{
+        f: jnp.asarray(getattr(problem, f))[idx]
+        for f in _PROBLEM_ROW_FIELDS})
+
+
+@functools.cache
+def _sharded_loop(n_dev: int, cfg: TuneConfig):
+    """jit(shard_map(loop)) over a 1-D row mesh, cached per (n_dev, cfg).
+
+    Per-shard histories come back stacked [n_dev, steps]; the caller
+    averages them (equal shard sizes)."""
+    mesh = row_mesh(n_dev)
+    rows = P("rows")
+
+    def body(raw0, problem):
+        raw_f, hist, cpc = _loop_body(raw0, problem, cfg)
+        return raw_f, {k: v[None] for k, v in hist.items()}, cpc
+
+    in_specs = (rows, TuneProblem(
+        prices=P(), **{f: rows for f in _PROBLEM_ROW_FIELDS}))
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=(rows, rows, rows), **SHARD_MAP_NOCHECK)
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
+              n_rows: int):
+    """Dispatch the hot loop over the single / sharded / chunked path.
+
+    Per-row math is identical in all three (sum-reduction makes each
+    row's gradient independent of its batch); chunking is bitwise, the
+    sharded path is ULP-equivalent (see the module docstring). Returns
+    ``(raw_f, history, cpc_tuned)`` with history arrays [steps].
+    """
+    coupled = (cfg.power_cap_mw is not None
+               or cfg.min_up_hours is not None)
+
+    if cfg.chunk_rows == 1:
+        raise ValueError(
+            "TuneConfig.chunk_rows must be >= 2: width-1 programs "
+            "scalarize on XLA:CPU and drift off the bit-identical "
+            "contract (same reason shards keep >= 2 rows)")
+
+    # an explicit chunk_rows is a memory bound the user asked for — it
+    # wins over auto-sharding (the two do not compose yet; a sharded
+    # host that also needs chunking should chunk)
+    if cfg.chunk_rows and not coupled and n_rows > cfg.chunk_rows:
+        # pad to one compile shape by repeating row 0: padded rows are
+        # tuned like any other and dropped afterwards — per-row math is
+        # batch-independent, so the real rows are unaffected (the loss
+        # *history*, a diagnostic, does average over the padding)
+        raws, cpcs, hists = [], [], []
+        for sl in row_chunks(n_rows, cfg.chunk_rows):
+            raw_j = jax.tree.map(lambda x: jnp.asarray(x)[sl], raw0)
+            r, h, cp = tune_loop(raw_j, _take_problem(problem, sl),
+                                 cfg=cfg)
+            raws.append(r)
+            hists.append(h)
+            cpcs.append(cp)
+        hist = {k: np.mean([np.asarray(h[k]) for h in hists], axis=0)
+                for k in hists[0]}
+        return (concat_rows(raws, n_rows), hist,
+                concat_rows(cpcs, n_rows))
+
+    if cfg.shard and not coupled:
+        n_avail = len(jax.devices())
+        # largest divisor of B that keeps >= 2 rows per shard: width-1
+        # shards scalarize on XLA:CPU and round a few ops differently
+        # (observed 1-ulp drift), breaking the bit-consistency contract
+        # — and a 1-row shard is degenerate parallelism anyway
+        n_dev = next((d for d in range(min(n_avail, n_rows // 2), 0, -1)
+                      if n_rows % d == 0), 1)
+        if n_dev > 1:
+            raw_f, hist, cpc = _sharded_loop(n_dev, cfg)(raw0, problem)
+            return raw_f, {k: np.asarray(v).mean(axis=0)
+                           for k, v in hist.items()}, cpc
+
+    raw_f, hist, cpc = tune_loop(raw0, problem, cfg=cfg)
+    return raw_f, {k: np.asarray(v) for k, v in hist.items()}, cpc
+
+
+def _hard_cpc_batched(p_on, p_off, off_level, problem: TuneProblem,
+                      chunk_rows: int) -> np.ndarray:
+    """`hard_cpc`, optionally evaluated in row chunks so the in-jit
+    [B, T] price gather never exceeds the chunk footprint."""
+    b = np.shape(p_on)[0]
+    if not chunk_rows or b <= chunk_rows:
+        return np.asarray(hard_cpc(p_on, p_off, off_level, problem),
+                          np.float64)
+    parts = [hard_cpc(jnp.asarray(p_on)[sl], jnp.asarray(p_off)[sl],
+                      jnp.asarray(off_level)[sl],
+                      _take_problem(problem, sl))
+             for sl in row_chunks(b, chunk_rows)]
+    return np.asarray(concat_rows(parts, b), np.float64)
 
 
 def cell_best_rows(grid, cpc: np.ndarray) -> np.ndarray:
@@ -207,26 +376,28 @@ def optimize(grid, cfg: TuneConfig = TuneConfig()) -> TuneResult:
     cell, the reported ``cpc`` therefore matches or beats the best swept
     policy on every row. With fleet-coupling penalties configured the
     swept fallback is disabled (swept policies ignore the constraints),
-    so ``cpc`` reports the tuned params unconditionally.
+    so ``cpc`` reports the tuned params unconditionally — and the
+    sharded / chunked paths are disabled too, since the penalties couple
+    rows across shards.
     """
     problem = problem_from_grid(grid)
     raw0 = init_from_grid(grid)
-    raw_f, hist = _tune_loop(raw0, problem, cfg=cfg)
+    raw_f, hist, cpc_tuned_dev = _run_loop(raw0, problem, cfg,
+                                           grid.n_rows)
+    cpc_tuned = np.asarray(cpc_tuned_dev, np.float64)
 
-    # hard re-evaluation at tau -> 0
-    swept = backtest(grid, use_pallas=False)
+    # hard re-evaluation of the swept baselines at tau -> 0
+    swept = backtest(grid, use_pallas=False, chunk_rows=cfg.chunk_rows)
     cpc_swept = np.asarray(swept.cpc, np.float64)
     best_row = cell_best_rows(grid, cpc_swept)
     cpc_swept_best = cpc_swept[best_row]
 
     tuned = transform(raw_f)
-    cpc_tuned = np.asarray(hard_cpc(tuned.p_on, tuned.p_off,
-                                     tuned.off_level, problem), np.float64)
     # cell-best swept params evaluated under *this* row's hardware
     cb = PhysicalPolicy(p_on=grid.p_on[best_row], p_off=grid.p_off[best_row],
                         off_level=grid.off_level[best_row])
-    cpc_cb = np.asarray(hard_cpc(cb.p_on, cb.p_off, cb.off_level, problem),
-                        np.float64)
+    cpc_cb = _hard_cpc_batched(cb.p_on, cb.p_off, cb.off_level, problem,
+                               cfg.chunk_rows)
 
     cand = np.stack([cpc_tuned, cpc_swept, cpc_cb])        # [3, B]
     if cfg.power_cap_mw is not None or cfg.min_up_hours is not None:
@@ -258,6 +429,4 @@ def optimize(grid, cfg: TuneConfig = TuneConfig()) -> TuneResult:
         cpc_swept=cpc_swept, cpc_swept_best=cpc_swept_best,
         improvement_vs_best=1.0 - cpc / cpc_swept_best,
         improvement_vs_own=1.0 - cpc / cpc_swept,
-        source=source,
-        history={k: np.asarray(v) for k, v in hist.items()},
-        dispatch=dispatch_out)
+        source=source, history=hist, dispatch=dispatch_out)
