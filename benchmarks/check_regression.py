@@ -38,7 +38,10 @@ LOW_WATER = 0.5           # --reset seeds baseline at median x this:
                           # gate, while de-fusing a hot path (the 5-30x
                           # effects this gate exists for) still trips it
 
-# name -> (runner, smoke kwargs, gated metric keys, recorded extras)
+# name -> (runner, smoke kwargs, gated metric keys, recorded extras[,
+# runs]) — `runs` overrides SMOKE_RUNS for suites whose gated metrics
+# are fixed-seed deterministic (medians of identical values only burn
+# CI time)
 def _suites():
     from benchmarks import bench_dispatch, bench_fleet, bench_tune
     return {
@@ -65,6 +68,19 @@ def _suites():
             ("speedup_fused_vs_native",),
             ("row_steps_per_s_fused", "row_steps_per_s_native", "rows",
              "steps", "temp_bytes_fused", "temp_bytes_native")),
+        # correctness gates, not speed: fd_grad_margin is 1e-3 over the
+        # worst FD-vs-autodiff relative error of the dispatch-aware
+        # objective in f64 (collapses by orders of magnitude if someone
+        # breaks the soft water-fill's implicit gradient), and
+        # dispatch_cpc_edge is the fixed-seed fleet-CPC advantage of
+        # tuning *through* dispatch over re-scoring after the fact
+        "bench_tune_dispatch": (
+            bench_tune.bench_tune_dispatch,
+            dict(n_markets=3, hours=512, steps=40),
+            ("fd_grad_margin", "dispatch_cpc_edge"),
+            ("cpc_rescore", "cpc_aware", "chosen_rescore",
+             "chosen_aware", "rows", "steps"),
+            1),   # fixed-seed deterministic: one run suffices
     }
 
 
@@ -73,8 +89,9 @@ def run_smoke() -> dict:
     of small smoke shapes are noisy (host scheduling, GC), and a flaky
     gate trains people to ignore it."""
     results = {}
-    for name, (fn, kwargs, gated, extras) in _suites().items():
-        outs = [fn(**kwargs) for _ in range(SMOKE_RUNS)]
+    for name, (fn, kwargs, gated, extras, *rest) in _suites().items():
+        runs = rest[0] if rest else SMOKE_RUNS
+        outs = [fn(**kwargs) for _ in range(runs)]
         results[name] = {
             "measured": {k: statistics.median(o[k] for o in outs)
                          for k in gated},

@@ -113,6 +113,12 @@ def _headline(name: str, out: dict) -> str:
             line += (f"; {out['rows_strictly_better']}/{out['rows']} "
                      f"rows beat best swept")
         return line
+    if name == "bench_tune_dispatch":
+        return (f"{out['rows']} sites x {out['hours']} h: fleet CPC "
+                f"aware {out['cpc_aware']:.2f} vs rescore "
+                f"{out['cpc_rescore']:.2f} "
+                f"(edge x{out['dispatch_cpc_edge']:.4f}), FD-grad "
+                f"margin {out['fd_grad_margin']:.0f}")
     if name == "step_time":
         return ", ".join(f"{k}: {v['s_per_step']:.2f}s"
                          for k, v in out.items())

@@ -12,7 +12,10 @@ newly placed load for a minimum dwell.
 The sweep below shows the thrash/price trade-off: free migration chases
 the hourly argmin price (cheapest possible energy, constant movement),
 while fees and dwell locks cut the move count by orders of magnitude for
-a small energy premium.
+a small energy premium. The final section swaps the constant demand for
+a diurnal [T] profile (`repro.dispatch.diurnal_demand`) — load peaking
+in the evening, bottoming out at night — which the dispatcher follows
+hour by hour (ramps are demand changes, not billed migrations).
 
   PYTHONPATH=src python examples/fleet_dispatch.py
 """
@@ -20,7 +23,7 @@ a small energy premium.
 import numpy as np
 
 from repro.core.tco import make_system
-from repro.dispatch import DispatchConfig
+from repro.dispatch import DispatchConfig, diurnal_demand
 from repro.energy.presets import region_params
 from repro.fleet import PolicySpec, backtest, build_grid, elastic_policy, \
     summarize
@@ -69,6 +72,24 @@ def main() -> None:
         print(f"  {name:10s} ({pol:12s}) {s:6.1%}")
     print(f"\nfloor slack {d.slack_floor_mwh:.0f} MWh, "
           f"power slack {d.slack_power_mw:.1f} MW")
+
+    # diurnal demand profile: same fleet, load that breathes with the
+    # day instead of a constant draw
+    n_mw = float(np.asarray(grid.power)[::grid.n_policies].sum())
+    prof = diurnal_demand(hours, base_mw=0.35 * n_mw,
+                          swing_mw=0.15 * n_mw, peak_hour=18.0)
+    cfg_d = DispatchConfig(demand_mw=prof, migrate_cost=5.0,
+                           min_dwell_h=4)
+    dd = summarize(grid, report, dispatch_cfg=cfg_d).dispatch
+    profile = np.asarray(prof)
+    print(f"\ndiurnal demand {profile.min():.1f}-{profile.max():.1f} MW "
+          f"(peak 18:00): fleet CPC {dd.cpc:.2f} "
+          f"(constant-demand CPC {d.cpc:.2f}), {dd.n_migrations} moves, "
+          f"cap slack {dd.slack_capacity_mw:.2f} MW")
+    night = profile.argmin() % 24
+    print(f"delivered follows the profile exactly: hour-{night:02d} "
+          f"trough {dd.alloc_mw.sum(axis=0)[profile.argmin()]:.2f} MW vs "
+          f"peak {dd.alloc_mw.sum(axis=0)[profile.argmax()]:.2f} MW")
 
 
 if __name__ == "__main__":

@@ -9,17 +9,24 @@ across sites hour by hour under *hard* constraints.
 
 The hot loop is `repro.kernels.dispatch_scan` (Pallas, time-innermost
 grid with the carry in VMEM), bit-identical to the sequential
-`repro.kernels.ref.dispatch_ref` oracle. `repro.fleet.summarize` exposes
-the result as `FleetSummary.dispatch`; `repro.tune.optimize` re-scores
-tuned policies on feasible dispatch via `TuneConfig.dispatch`.
+`repro.kernels.ref.dispatch_ref` oracle; its temperature-relaxed
+counterpart `repro.kernels.soft_dispatch` softmins over the same
+`segment_keys` so gradients flow through placement.
+`repro.fleet.summarize` exposes the result as `FleetSummary.dispatch`;
+`repro.tune.optimize` re-scores tuned policies on feasible dispatch via
+`TuneConfig.dispatch` and tunes *through* the relaxed dispatcher via
+`TuneConfig.dispatch_soft`.
 """
 
 from repro.dispatch.allocate import (DispatchConfig, DispatchInfeasible,
                                      DispatchProblem, DispatchResult,
-                                     build_problem, dispatch,
-                                     segment_rank, summarize_alloc)
+                                     build_problem, diurnal_demand,
+                                     dispatch, resolve_demand,
+                                     segment_keys, segment_rank,
+                                     summarize_alloc)
 from repro.dispatch.schedule import capacity_series, on_state_series
 
 __all__ = ["DispatchConfig", "DispatchInfeasible", "DispatchProblem",
-           "DispatchResult", "build_problem", "dispatch", "segment_rank",
+           "DispatchResult", "build_problem", "diurnal_demand",
+           "dispatch", "resolve_demand", "segment_keys", "segment_rank",
            "summarize_alloc", "capacity_series", "on_state_series"]

@@ -35,7 +35,7 @@ sequential oracle; both share the per-hour math and are bit-identical.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence
+from typing import NamedTuple, Optional, Sequence, Union
 
 import jax
 import numpy as np
@@ -55,16 +55,18 @@ class DispatchConfig(NamedTuple):
     """Operator-side dispatch constraints (hashable — nested in
     `repro.tune.TuneConfig` as a jit-static field).
 
-    ``demand_mw`` is the fleet-wide compute demand (scalar, every hour);
-    when None it defaults to ``demand_frac`` of the summed site ratings.
-    ``migrate_cost`` is EUR per MW moved between sites (charged on the
-    matched in/out flow, and used as the retention premium in the
-    greedy fill). ``min_dwell_h`` locks newly placed load for that many
-    hours. ``compute_floor_mwh`` is the aggregate compute the fleet must
-    deliver over the period.
+    ``demand_mw`` is the fleet-wide compute demand: a scalar (same MW
+    every hour) or a length-[T] *profile* — pass a tuple (e.g. from
+    `diurnal_demand`) so the config stays hashable; any other length
+    raises loudly in `build_problem`. When None it defaults to
+    ``demand_frac`` of the summed site ratings. ``migrate_cost`` is EUR
+    per MW moved between sites (charged on the matched in/out flow, and
+    used as the retention premium in the greedy fill). ``min_dwell_h``
+    locks newly placed load for that many hours. ``compute_floor_mwh``
+    is the aggregate compute the fleet must deliver over the period.
     """
 
-    demand_mw: Optional[float] = None
+    demand_mw: Optional[Union[float, tuple]] = None
     demand_frac: float = 0.5
     power_cap_mw: float = float("inf")
     migrate_cost: float = 0.0
@@ -106,25 +108,38 @@ class DispatchResult(NamedTuple):
     slack_floor_mwh: float    # delivered - compute floor
 
 
-def segment_rank(prices: np.ndarray, migrate_cost: float
-                 ) -> tuple[np.ndarray, np.ndarray]:
-    """Ascending sort permutation and rank ([T, 3S] int32 each) of every
-    site's three capacity segments.
+def segment_keys(prices: np.ndarray, migrate_cost: float) -> np.ndarray:
+    """[T, 3S] float64 sort keys of every site's three capacity
+    segments — the single source of the segment price model, shared by
+    the hard sort (`segment_rank`) and the soft water-fill
+    (`repro.kernels.soft_dispatch`, which softmins over these keys).
 
-    Keys (float64, so a class offset cannot swallow price differences):
-    locked segments sit below everything (offset by more than the price
+    Locked segments sit below everything (offset by more than the price
     span, price-ordered among themselves), retained load is priced at
     ``p - migrate_cost``, fresh capacity at ``p``. Keys depend only on
     prices and the premium — never on the running state — which is what
-    lets the kernel run sort-free (`repro.kernels.dispatch_scan`).
+    lets both kernels run sort-free.
+    """
+    p = np.asarray(prices, np.float64).T                      # [T, S]
+    span = float(np.max(p) - np.min(p)) + abs(migrate_cost) + 1.0
+    return np.concatenate([p - span, p - migrate_cost, p], axis=1)
+
+
+def segment_rank(prices: np.ndarray, migrate_cost: float, *,
+                 keys: Optional[np.ndarray] = None
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Ascending sort permutation and rank ([T, 3S] int32 each) of the
+    `segment_keys` (float64, so a class offset cannot swallow price
+    differences). A caller that already computed the keys (the soft
+    dispatch coupling needs them as data too) passes them instead of
+    paying `segment_keys` twice.
 
     Ties (equal keys) resolve by segment position — stable argsort —
     so a site's retained load wins over its own fresh capacity at
     ``migrate_cost = 0``; cross-site ties follow site order.
     """
-    p = np.asarray(prices, np.float64).T                      # [T, S]
-    span = float(np.max(p) - np.min(p)) + abs(migrate_cost) + 1.0
-    keys = np.concatenate([p - span, p - migrate_cost, p], axis=1)
+    if keys is None:
+        keys = segment_keys(prices, migrate_cost)
     order = np.argsort(keys, axis=1, kind="stable").astype(np.int32)
     rank = np.empty_like(order)
     np.put_along_axis(rank, order,
@@ -134,6 +149,44 @@ def segment_rank(prices: np.ndarray, migrate_cost: float
     return order, rank
 
 
+def diurnal_demand(t: int, *, base_mw: float, swing_mw: float,
+                   peak_hour: float = 17.0) -> tuple:
+    """Length-``t`` diurnal demand profile as a hashable tuple (so it
+    can sit in `DispatchConfig.demand_mw`, which `repro.tune` uses as a
+    jit-static field): ``base + swing * cos(2 pi (h - peak) / 24)`` —
+    load peaks at ``peak_hour`` local time and bottoms out 12 h later.
+    """
+    if swing_mw < 0 or swing_mw > base_mw:
+        raise ValueError("diurnal_demand needs 0 <= swing_mw <= base_mw "
+                         "(negative demand is not dispatchable)")
+    h = np.arange(t, dtype=np.float64) % 24.0
+    prof = base_mw + swing_mw * np.cos((h - peak_hour) * (2.0 * np.pi / 24.0))
+    return tuple(float(x) for x in prof)
+
+
+def resolve_demand(cfg: DispatchConfig, power: np.ndarray,
+                   t: int) -> np.ndarray:
+    """[T] demand profile of a `DispatchConfig`: a scalar ``demand_mw``
+    broadcasts, a sequence must have exactly ``t`` entries (anything
+    else raises — a profile built for the wrong horizon is a bug, not a
+    broadcast), and None defaults to ``demand_frac`` of the summed site
+    ratings. Shared by `build_problem` and the soft dispatch coupling
+    (`repro.tune.objective.dispatch_coupling_from_grid`)."""
+    if cfg.demand_mw is None:
+        demand = np.asarray(cfg.demand_frac
+                            * float(np.asarray(power, np.float64).sum()))
+    else:
+        demand = np.asarray(cfg.demand_mw, np.float64)
+    if demand.ndim == 0:
+        return np.broadcast_to(demand.astype(np.float32), (t,))
+    if demand.shape != (t,):
+        raise ValueError(
+            f"DispatchConfig.demand_mw profile has {demand.shape[0]} "
+            f"entries but the problem spans {t} hours — pass a scalar "
+            "or a length-T profile (e.g. repro.dispatch.diurnal_demand)")
+    return demand.astype(np.float32)
+
+
 def build_problem(prices, p_on, p_off, off_level, power,
                   cfg: DispatchConfig, *, fixed=None,
                   site_names: Sequence[str] = ()) -> DispatchProblem:
@@ -141,21 +194,20 @@ def build_problem(prices, p_on, p_off, off_level, power,
 
     prices: [S, T]; p_on/p_off/off_level/power (MW rating): [S].
     Availability is each site's materialised shutdown schedule times its
-    rating. Callers hold the site semantics: `repro.fleet.report` feeds
-    the best swept row per (market, system) cell, `repro.tune` the
-    gradient-tuned policies.
+    rating. ``cfg.demand_mw`` may be a scalar or a [T] profile
+    (`resolve_demand`). Callers hold the site semantics:
+    `repro.fleet.report` feeds the best swept row per (market, system)
+    cell, `repro.tune` the gradient-tuned policies.
     """
     prices = np.asarray(prices, np.float32)
     s, t = prices.shape
     power = np.broadcast_to(np.asarray(power, np.float32), (s,))
     cap = np.asarray(capacity_series(prices, p_on, p_off, off_level))
-    demand = cfg.demand_mw if cfg.demand_mw is not None \
-        else cfg.demand_frac * float(power.sum())
     order, rank = segment_rank(prices, float(cfg.migrate_cost))
     return DispatchProblem(
         prices=prices,
         avail_mw=power[:, None] * cap,
-        demand_mw=np.broadcast_to(np.asarray(demand, np.float32), (t,)),
+        demand_mw=resolve_demand(cfg, power, t),
         power_cap_mw=float(cfg.power_cap_mw),
         migrate_cost=float(cfg.migrate_cost),
         min_dwell_h=int(cfg.min_dwell_h),

@@ -60,8 +60,12 @@ class FleetSummary(NamedTuple):
     total_cost: float              # sum of TCO over the fleet
     total_up_hours: float
     # feasible cross-site dispatch over the best-policy sites (None
-    # unless summarize() was given a DispatchConfig)
+    # unless summarize() was given a DispatchConfig); dispatch_rows are
+    # the report-row indices the dispatcher operated (cube-ordered, one
+    # per covered (market, system) cell — indices follow the report's
+    # row order, the dispatch stats themselves are order-invariant)
     dispatch: Optional[DispatchResult] = None
+    dispatch_rows: Optional[np.ndarray] = None
 
 
 def oracle_reduction_grid(prices: jnp.ndarray,
@@ -109,8 +113,10 @@ def summarize(grid, report: FleetReport, *,
     With ``dispatch_cfg``, the feasible cross-site dispatcher runs over
     one site per covered (market, system) cell — each operating its best
     swept policy — and the result lands in `FleetSummary.dispatch`
-    (raises `repro.dispatch.DispatchInfeasible` when the configured
-    demand cannot be met; hard constraints are never clipped)."""
+    with the operated rows in `FleetSummary.dispatch_rows` (raises
+    `repro.dispatch.DispatchInfeasible` when the configured demand —
+    scalar or a [T] profile such as `repro.dispatch.diurnal_demand` —
+    cannot be met; hard constraints are never clipped)."""
     n, m, k = grid.n_markets, grid.n_systems, grid.n_policies
     mi = np.asarray(report.market_idx)
     si = np.asarray(report.system_idx)
@@ -146,6 +152,7 @@ def summarize(grid, report: FleetReport, *,
                                               jnp.asarray(psi_nm)))
 
     disp = None
+    rows = None
     if dispatch_cfg is not None:
         rows = dispatch_sites(grid, report, best_policy)
         markets = np.asarray(grid.market_idx)[rows]
@@ -171,4 +178,5 @@ def summarize(grid, report: FleetReport, *,
         total_cost=float(np.nansum(cube(report.tco))),
         total_up_hours=float(np.nansum(hours)),
         dispatch=disp,
+        dispatch_rows=rows,
     )

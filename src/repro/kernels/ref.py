@@ -255,7 +255,7 @@ def dispatch_alloc_hour(prev: jax.Array, dwell: jax.Array,
     fill = jnp.clip(demand - before, 0.0, widths)
     alloc = fill[:s] + fill[s:2 * s] + fill[2 * s:]
     if min_dwell > 0:
-        dwell = jnp.where(alloc > prev + 1e-6, float(min_dwell),
+        dwell = jnp.where(alloc > prev + DWELL_EVENT_MW, float(min_dwell),
                           jnp.maximum(dwell - 1.0, 0.0))
     return alloc, dwell
 
@@ -285,6 +285,186 @@ def dispatch_ref(avail: jax.Array, order: jax.Array, rank: jax.Array,
         step, (zeros, zeros),
         (a.T, jnp.asarray(order, jnp.int32), jnp.asarray(rank, jnp.int32),
          jnp.asarray(demand, jnp.float32)))
+    return alloc_t.T
+
+
+DWELL_EVENT_MW = 1e-3  # allocation increase (MW) that counts as a
+                       # fresh placement and rearms the dwell lock.
+                       # Shared by the hard fill and its soft
+                       # relaxation: 1 kW is far above both paths' f32
+                       # rounding (so a site whose load merely *rounds*
+                       # differently never rearms) and far below any
+                       # real cross-site move, which is what lets the
+                       # soft dwell dynamics converge to the hard ones
+                       # as tau -> 0 instead of flipping locks on noise.
+
+_WL_TINY = 1e-30      # absolute floor for water-level denominators
+_WL_SIGMA_SPAN = 40.0  # sigmoid(±40) saturates in f32 *and* f64: the
+                       # soft water level lives within ±40 tau of the
+                       # hard one (see `soft_water_level`)
+_DWELL_CNT_SCALE = 0.05  # dwell-count temperature per price-unit tau:
+                         # the hard countdown parks the counter exactly
+                         # on the min(d, 1) / relu(d - 1) kinks, so the
+                         # soft path smooths both at tau_cnt =
+                         # tau * this (sigmoid lock gate, softplus
+                         # decrement) — co-annealed, FD-checkable
+                         # gradients at every tau, hard counters in the
+                         # limit
+
+
+def soft_water_level(keys: jax.Array, widths: jax.Array, demand,
+                     lam0, inv_tau, *, n_bisect: int = 30) -> jax.Array:
+    """Level ``lam`` of the entropic water-fill: the root of
+
+        f(lam) = sum_j widths_j sigmoid((lam - keys_j) / tau) = demand
+
+    f is monotone in lam, so the root is unique whenever it exists;
+    ``lam0`` must be the *hard* water level (the marginal segment's key
+    from the precomputed sort), which brackets the soft root within
+    ``±40 tau`` (sigmoid(40) == 1 in f32: every segment cheaper than the
+    hard level is full at lam0 + 40 tau, so f covers the demand there,
+    and only the below-marginal mass — at most the demand — survives at
+    lam0 - 40 tau). Fixed-count bisection under ``stop_gradient`` finds
+    the root; one *differentiable* Newton step from the stop-gradded
+    solution then supplies the exact first-order implicit gradient
+    (d lam = (d demand - sum_j sigma_j d w_j - ...) / f'(lam)) without
+    backpropagating through the solver iterations. The correction is
+    clipped to the bracket radius so an infeasible hour (demand above
+    total width: f' -> 0 at the saturated bracket edge) degrades to
+    "everything full" instead of emitting huge levels; callers
+    renormalise the fill mass, so the clip never distorts feasible
+    hours, where the correction is O(bracket / 2^n_bisect).
+    """
+    span = _WL_SIGMA_SPAN / inv_tau
+
+    def f(lam):
+        return jnp.sum(widths * jax.nn.sigmoid((lam - keys) * inv_tau))
+
+    def bisect(_, lo_hi):
+        lo, hi = lo_hi
+        mid = 0.5 * (lo + hi)
+        below = f(mid) < demand
+        return jnp.where(below, mid, lo), jnp.where(below, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(
+        0, n_bisect, bisect, (lam0 - span, lam0 + span))
+    lam_hat = jax.lax.stop_gradient(0.5 * (lo + hi))
+
+    sig = jax.nn.sigmoid((lam_hat - keys) * inv_tau)
+    denom = jnp.maximum(
+        jax.lax.stop_gradient(jnp.sum(widths * sig * (1.0 - sig))
+                              * inv_tau), _WL_TINY)
+    step = (demand - jnp.sum(widths * sig)) / denom
+    return lam_hat + jnp.clip(step, -span, span)
+
+
+def soft_dispatch_hour(prev: jax.Array, dwell: jax.Array,
+                       avail: jax.Array, keys: jax.Array,
+                       order: jax.Array, demand, *, inv_tau, inv_tau_mw,
+                       min_dwell: int,
+                       n_bisect: int = 30) -> tuple[jax.Array, jax.Array]:
+    """One hour of the temperature-``tau`` softmin water-fill — the
+    relaxation of `dispatch_alloc_hour`.
+
+    Shared *verbatim* by `soft_dispatch_ref` and the Pallas kernel
+    (`repro.kernels.soft_dispatch`), exactly like `dispatch_alloc_hour`,
+    so the two soft paths are bit-identical. Same segment model (locked
+    / retain / fresh), but every hard choice is smoothed:
+
+      * the greedy fill becomes the entropic water-fill
+        ``x_j = w_j sigmoid((lam - key_j) / tau)`` with ``lam`` from
+        `soft_water_level` — a softmin over the (price − migrate
+        premium) keys that spreads marginal mass across nearby segments
+        and converges to the exact clip-fill as tau -> 0;
+      * the dwell lock becomes a smooth discount: lock strength
+        ``sigmoid((dwell - 1/2) / tau_cnt)`` of the held mass (the hard
+        ``dwell > 0`` gate on the integer-valued limit), the countdown
+        ``relu(dwell - 1)`` becomes its softplus at the same count
+        temperature (the hard chain parks the counter exactly on both
+        kinks — smoothing them is what makes the gradients
+        finite-difference-checkable), and the fresh-placement reset
+        becomes a sigmoid of the allocation *increase* at MW
+        temperature ``tau_mw = 1 / inv_tau_mw``.
+
+    ``keys`` are the host-precomputed [3S] segment keys of
+    `repro.dispatch.segment_keys` and ``order`` their ascending sort —
+    reused to seed the water-level bracket with the hard level (count
+    the sorted widths' cumulative mass past the demand). The fill is
+    renormalised to sum exactly to the demand (scale -> 1 as tau -> 0),
+    which also zeroes allocation on zero-demand padded hours.
+    prev/dwell/avail: [S]; keys: [3S]; order: [3S] int32.
+    Returns ``(alloc [S], dwell' [S])``.
+    """
+    s = prev.shape[0]
+    held = jnp.minimum(prev, avail)
+    if min_dwell > 0:
+        inv_tau_cnt = inv_tau / _DWELL_CNT_SCALE
+        locked = jax.nn.sigmoid((dwell - 0.5) * inv_tau_cnt) * held
+    else:
+        locked = jnp.zeros_like(held)
+    widths = jnp.concatenate([locked, held - locked, avail - held])
+
+    sorted_w = jnp.take(widths, order)
+    cums = jnp.cumsum(sorted_w)
+    marginal = jnp.minimum(jnp.sum((cums < demand).astype(jnp.int32)),
+                           3 * s - 1)
+    lam0 = jax.lax.stop_gradient(
+        jnp.take(jnp.take(keys, order), marginal))
+    lam = soft_water_level(keys, widths, demand, lam0, inv_tau,
+                           n_bisect=n_bisect)
+
+    fill = widths * jax.nn.sigmoid((lam - keys) * inv_tau)
+    fill = fill * (demand / jnp.maximum(jnp.sum(fill),
+                                        1e-9 * demand + _WL_TINY))
+    alloc = fill[:s] + fill[s:2 * s] + fill[2 * s:]
+    if min_dwell > 0:
+        moved_in = jax.nn.sigmoid((alloc - prev - DWELL_EVENT_MW)
+                                  * inv_tau_mw)
+        count_down = jax.nn.softplus((dwell - 1.0) * inv_tau_cnt) \
+            / inv_tau_cnt
+        dwell = moved_in * min_dwell + (1.0 - moved_in) * count_down
+    return alloc, dwell
+
+
+def soft_dispatch_ref(avail: jax.Array, keys: jax.Array, order: jax.Array,
+                      demand: jax.Array, *, tau, min_dwell: int = 0,
+                      mw_scale: float = 0.05,
+                      n_bisect: int = 30) -> jax.Array:
+    """Sequential oracle for the soft (differentiable) dispatch scan.
+
+    avail: [S, T] available MW; keys/order: [T, 3S] precomputed segment
+    keys (`repro.dispatch.segment_keys`) and their ascending sort
+    permutation; demand: [T] MW. Returns the relaxed allocation [S, T],
+    differentiable in ``avail``, ``demand``, ``keys`` and ``tau``, and
+    converging to `dispatch_ref`'s hard allocation as tau -> 0 (at
+    problems whose segment keys are distinct). ``mw_scale`` sets the MW
+    temperature of the dwell reset gate as ``tau * mw_scale`` — it
+    co-anneals with ``tau``. Computation runs in the availability dtype
+    (float64 under x64 — the FD gradient checks rely on this), exactly
+    like `soft_scan_ref`.
+    """
+    a = jnp.asarray(avail)
+    dtype = a.dtype if jnp.issubdtype(a.dtype, jnp.floating) else jnp.float32
+    a = a.astype(dtype)
+    s = a.shape[0]
+    keys = jnp.asarray(keys, dtype)
+    demand = jnp.asarray(demand, dtype)
+    inv_tau = 1.0 / jnp.asarray(tau, dtype)
+    inv_tau_mw = inv_tau / jnp.asarray(mw_scale, dtype)
+
+    def step(carry, inp):
+        prev, dwell = carry
+        a_t, k_t, o_t, d_t = inp
+        alloc, dwell = soft_dispatch_hour(
+            prev, dwell, a_t, k_t, o_t, d_t, inv_tau=inv_tau,
+            inv_tau_mw=inv_tau_mw, min_dwell=min_dwell,
+            n_bisect=n_bisect)
+        return (alloc, dwell), alloc
+
+    zeros = jnp.zeros((s,), dtype)
+    _, alloc_t = jax.lax.scan(
+        step, (zeros, zeros),
+        (a.T, keys, jnp.asarray(order, jnp.int32), demand))
     return alloc_t.T
 
 

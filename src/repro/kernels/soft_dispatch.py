@@ -1,0 +1,183 @@
+"""Differentiable (temperature-relaxed) cross-site dispatch.
+
+`repro.kernels.dispatch_scan` answers "where does the load run under
+these schedules?" but its greedy water-fill allocates through argsort
+comparisons and clips, so per-site policy parameters can shape the
+dispatch only through zero-measure kinks — a site that never receives
+load gets no gradient at all. This module relaxes the per-hour greedy
+fill with the *entropic* water-fill at temperature ``tau``:
+
+    x_j = w_j sigmoid((lam - key_j) / tau),   sum_j x_j = demand
+
+the unique optimum of  min_x sum key_j x_j + tau * H(x; w)  over the
+capacity box — a softmin over the (price − migrate-premium) segment
+keys. As tau -> 0 the sigmoids harden into the exact greedy clip-fill
+(`repro.kernels.ref.dispatch_alloc_hour`), and for tau > 0 every
+segment carries allocation mass proportional to how close its key sits
+to the water level, so gradients see *all* sites — the signal that lets
+`repro.tune` teach each site its fleet role (the swing-site effect).
+Dwell locks are discounted smoothly (lock strength ``min(dwell, 1)``,
+sigmoid fresh-placement reset at a co-annealed MW temperature), so the
+hour-to-hour recurrence stays differentiable end to end.
+
+The water level ``lam`` has no closed form; it is found by fixed-count
+bisection seeded from the *hard* water level — which the
+host-precomputed `repro.dispatch.segment_rank` sort yields in O(S) —
+under ``stop_gradient``, with one differentiable Newton step providing
+the exact first-order implicit gradient (`repro.kernels.ref.
+soft_water_level`). Per-hour math is `repro.kernels.ref.
+soft_dispatch_hour`, shared *verbatim* with the sequential
+`soft_dispatch_ref` oracle, so kernel and reference are bit-identical.
+
+Layout mirrors `dispatch_scan`: off-TPU the public entry point runs the
+jitted sequential-in-time `lax.scan` form (dtype-following, so float64
+FD gradient checks are exact); on TPU a Pallas kernel with grid =
+(n_time_blocks,), time innermost, [block_t, S] time-major blocks and
+the (prev alloc, dwell) carry in VMEM scratch — zero HBM round-trips
+for state. T-padding needs no masking: padded hours carry zero demand,
+and the renormalised fill is exactly zero there. Validated in
+interpret mode against `soft_dispatch_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import soft_dispatch_hour, soft_dispatch_ref
+
+
+def _soft_dispatch_kernel(a_ref, keys_ref, order_ref, d_ref,  # time-major
+                          itau_ref, itaumw_ref,               # (1,) scalars
+                          out_ref,                            # [block_t, S]
+                          prev_scr, dwell_scr,                # [S] VMEM carry
+                          *, block_t: int, min_dwell: int, n_bisect: int):
+    ti = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        prev_scr[...] = jnp.zeros_like(prev_scr)     # start empty
+        dwell_scr[...] = jnp.zeros_like(dwell_scr)
+
+    inv_tau = itau_ref[0]
+    inv_tau_mw = itaumw_ref[0]
+
+    def hour(h, carry):
+        alloc, dwell = soft_dispatch_hour(
+            prev_scr[...], dwell_scr[...], a_ref[h, :], keys_ref[h, :],
+            order_ref[h, :], d_ref[h], inv_tau=inv_tau,
+            inv_tau_mw=inv_tau_mw, min_dwell=min_dwell,
+            n_bisect=n_bisect)
+        out_ref[h, :] = alloc
+        prev_scr[...] = alloc
+        dwell_scr[...] = dwell
+        return carry
+
+    jax.lax.fori_loop(0, block_t, hour, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "min_dwell",
+                                             "n_bisect", "interpret"))
+def _soft_dispatch_padded(a_tm: jax.Array, keys: jax.Array,
+                          order: jax.Array, demand: jax.Array,
+                          itau: jax.Array, itaumw: jax.Array, *,
+                          block_t: int, min_dwell: int, n_bisect: int,
+                          interpret: bool) -> jax.Array:
+    """Core pallas_call over padded, time-major inputs.
+
+    a_tm: [T*, S]; keys/order: [T*, 3S]; demand: [T*]; itau/itaumw:
+    (1,) (T* a block_t multiple). Returns the allocation [T*, S].
+    """
+    t_pad, s = a_tm.shape
+    nt = t_pad // block_t
+
+    kernel = functools.partial(_soft_dispatch_kernel, block_t=block_t,
+                               min_dwell=min_dwell, n_bisect=n_bisect)
+    return pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((block_t, s), lambda ti: (ti, 0)),
+            pl.BlockSpec((block_t, 3 * s), lambda ti: (ti, 0)),
+            pl.BlockSpec((block_t, 3 * s), lambda ti: (ti, 0)),
+            pl.BlockSpec((block_t,), lambda ti: (ti,)),
+            pl.BlockSpec((1,), lambda ti: (0,)),
+            pl.BlockSpec((1,), lambda ti: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_t, s), lambda ti: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, s), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((s,), jnp.float32),
+                        pltpu.VMEM((s,), jnp.float32)],
+        interpret=interpret,
+    )(a_tm, keys, order, demand, itau, itaumw)
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def soft_dispatch_pallas(avail: jax.Array, keys: jax.Array,
+                         order: jax.Array, demand: jax.Array, *,
+                         tau, min_dwell: int = 0, mw_scale: float = 0.05,
+                         n_bisect: int = 30, block_t: int = 512,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """Pallas form of the soft dispatch scan (f32; forward only — the
+    differentiable path is the XLA scan in `soft_dispatch`). Same
+    contract as `repro.kernels.ref.soft_dispatch_ref`; bit-identical to
+    it (asserted in `tests/test_soft_dispatch.py`)."""
+    a = jnp.asarray(avail, jnp.float32)
+    s, t = a.shape
+    block_t = max(min(block_t, t), 1)
+    pad_t = (-t) % block_t
+
+    a_tm = jnp.pad(a.T, ((0, pad_t), (0, 0)))        # [T*, S] time-major
+    keys_p = jnp.pad(jnp.asarray(keys, jnp.float32), ((0, pad_t), (0, 0)))
+    order_p = jnp.pad(jnp.asarray(order, jnp.int32), ((0, pad_t), (0, 0)))
+    d_p = jnp.pad(jnp.asarray(demand, jnp.float32), (0, pad_t))
+    itau = (1.0 / jnp.asarray(tau, jnp.float32)).reshape(1)
+    itaumw = itau / jnp.float32(mw_scale)
+    out = _soft_dispatch_padded(a_tm, keys_p, order_p, d_p, itau, itaumw,
+                                block_t=block_t, min_dwell=int(min_dwell),
+                                n_bisect=int(n_bisect),
+                                interpret=_auto_interpret(interpret))
+    return out[:t].T
+
+
+_soft_dispatch_ref_jit = jax.jit(
+    soft_dispatch_ref, static_argnames=("min_dwell", "n_bisect"))
+
+
+def soft_dispatch(avail: jax.Array, keys: jax.Array, order: jax.Array,
+                  demand: jax.Array, *, tau, min_dwell: int = 0,
+                  mw_scale: float = 0.05, n_bisect: int = 30,
+                  block_t: int = 512,
+                  use_pallas: Optional[bool] = None) -> jax.Array:
+    """Differentiable fleet dispatch allocation at temperature ``tau``.
+
+    avail: [S, T] MW; keys/order: [T, 3S] precomputed segment keys and
+    sort (`repro.dispatch.segment_keys` / `segment_rank`); demand: [T]
+    MW. Returns the relaxed allocation [S, T], converging to
+    `repro.kernels.ref.dispatch_ref` as tau -> 0.
+
+    ``use_pallas=None`` auto-selects like `repro.dispatch.dispatch`:
+    the Pallas kernel on TPU, the jitted sequential scan elsewhere.
+    Called *inside* a jit (the tuner's soft objective) it traces the
+    scan form directly, which is the path gradients flow through.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return soft_dispatch_pallas(avail, keys, order, demand, tau=tau,
+                                    min_dwell=min_dwell,
+                                    mw_scale=mw_scale, n_bisect=n_bisect,
+                                    block_t=block_t)
+    return _soft_dispatch_ref_jit(avail, keys, order, demand, tau=tau,
+                                  min_dwell=min_dwell, mw_scale=mw_scale,
+                                  n_bisect=n_bisect)

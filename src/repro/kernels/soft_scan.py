@@ -89,12 +89,15 @@ def soft_scan_parts(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
                     off_level: jax.Array, idle_frac: jax.Array, *,
                     tau, fused: bool = False, block_t: int = 256,
                     use_pallas: Optional[bool] = None
-                    ) -> tuple[FleetScanOut, jax.Array]:
-    """(FleetScanOut, per-sample draw [B, T]) of the relaxed scan.
+                    ) -> tuple[FleetScanOut, jax.Array, jax.Array]:
+    """(FleetScanOut, per-sample draw [B, T], capacity [B, T]) of the
+    relaxed scan.
 
     The draw trajectory is what fleet-coupling penalties (total-power
-    cap) integrate over; `soft_fleet_scan` discards it. ``fused``
-    selects the checkpointed custom-VJP state evaluation (see
+    cap) integrate over; the capacity trajectory is what the soft
+    dispatch coupling offers as availability (the relaxed analogue of
+    `repro.dispatch.capacity_series`); `soft_fleet_scan` discards both.
+    ``fused`` selects the checkpointed custom-VJP state evaluation (see
     `soft_state`); everything downstream of the state is plain autodiff
     either way.
     """
@@ -115,7 +118,7 @@ def soft_scan_parts(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
         draw_price_sum=jnp.sum(draw * p, axis=1),
         up_units=jnp.sum(cap, axis=1),
         n_starts=jnp.sum(starts, axis=1),
-        restart_price_sum=jnp.sum(starts * p, axis=1)), draw
+        restart_price_sum=jnp.sum(starts * p, axis=1)), draw, cap
 
 
 def soft_fleet_scan(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,

@@ -17,18 +17,29 @@ hardware parameters (idle draw, restart costs) are uniform within the
 cell, since the cell-best fallback is re-priced under each row's own
 hardware.
 
+Dispatch-aware tuning (`TuneConfig.dispatch_soft`) goes one level up:
+the relaxed schedules feed the temperature-relaxed water-fill
+dispatcher (`repro.kernels.soft_dispatch`), so gradients flow through
+*placement* and per-site thresholds learn their fleet role — the
+designated swing site emerges instead of being hand-assigned. The
+final set is still re-scored on feasible `repro.dispatch.dispatch`.
+
   quickstart:  PYTHONPATH=src python examples/tune_policies.py
 """
 
-from repro.tune.objective import (PhysicalPolicy, PolicyParams, TuneProblem,
-                                  cell_index, init_from_grid,
-                                  inverse_transform, problem_from_grid,
-                                  soft_costs, soft_objective, transform)
+from repro.tune.objective import (DispatchCoupling, PhysicalPolicy,
+                                  PolicyParams, TuneProblem, cell_index,
+                                  dispatch_coupling_from_grid,
+                                  init_from_grid, inverse_transform,
+                                  problem_from_grid, soft_costs,
+                                  soft_dispatch_ratio, soft_objective,
+                                  transform)
 from repro.tune.optimizer import (TuneConfig, TuneResult, cell_best_rows,
                                   hard_cpc, optimize, tune_loop)
 
-__all__ = ["PhysicalPolicy", "PolicyParams", "TuneProblem", "TuneConfig",
-           "TuneResult", "cell_best_rows", "cell_index", "hard_cpc",
+__all__ = ["DispatchCoupling", "PhysicalPolicy", "PolicyParams",
+           "TuneProblem", "TuneConfig", "TuneResult", "cell_best_rows",
+           "cell_index", "dispatch_coupling_from_grid", "hard_cpc",
            "init_from_grid", "inverse_transform", "problem_from_grid",
-           "soft_costs", "soft_objective", "transform", "optimize",
-           "tune_loop"]
+           "soft_costs", "soft_dispatch_ratio", "soft_objective",
+           "transform", "optimize", "tune_loop"]

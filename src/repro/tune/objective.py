@@ -29,6 +29,18 @@ is comparable with the O(1) CPC ratio term; both weight each row by
 1 / |its (market, system) cell| so a grid carrying K candidate policies
 per site charges the site's mean dispatch once rather than summing K
 copies (exact with one row per site).
+
+Dispatch-aware tuning goes further than penalties: with a
+`DispatchCoupling` (built by `dispatch_coupling_from_grid` from a
+`repro.dispatch.DispatchConfig`), the soft objective blends in the
+fleet CPC of the *dispatched* load — the relaxed schedules offer soft
+availability, the softmin water-fill (`repro.kernels.soft_dispatch`)
+places the demand over it at the same annealed temperature, and the
+realized (fixed + energy-at-allocation + migration) cost per delivered
+MWh flows gradients back into every site's thresholds. Sites then learn
+their *fleet role*: a site whose prices are usually undercut elsewhere
+is pushed toward aggressive shutdown (the designated swing site),
+which isolated tuning cannot discover.
 """
 
 from __future__ import annotations
@@ -39,7 +51,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dispatch import (DispatchConfig, resolve_demand, segment_keys,
+                            segment_rank)
 from repro.fleet.engine import fleet_costs
+from repro.kernels.soft_dispatch import soft_dispatch
 from repro.kernels.soft_scan import soft_scan_parts
 
 
@@ -90,6 +105,95 @@ class TuneProblem(NamedTuple):
         """[B, T] per-row gather — call inside jit so the duplication is
         a compiler-managed temporary, not a live buffer."""
         return self.prices[self.market_idx]
+
+
+_FEAS_MARGIN_SCALE = 1.05  # the soft feasibility term defends demand
+                           # plus 5%: the annealed capacity slightly
+                           # overstates the hard schedules near the
+                           # thresholds, and the hard re-evaluation has
+                           # no tolerance at all
+
+_SEL_SCALE = 0.01   # per-cell candidate-selection temperature per unit
+                    # tau: the dispatched fleet runs ONE policy per
+                    # (market, system) site, so candidate rows of a
+                    # cell are blended by a softmax over their own soft
+                    # CPC ratio at tau * this — uniform-ish while the
+                    # scan is smooth, converging to the hard
+                    # re-evaluation's per-cell argmin as tau anneals
+                    # (ratio differences are O(1e-2), so the end-tau
+                    # 0.3 * 0.01 = 3e-3 is decisively sharp). A
+                    # single-candidate cell reduces to weight 1 exactly.
+
+
+class DispatchCoupling(NamedTuple):
+    """Static (non-tuned) data of the soft fleet-dispatch term.
+
+    The dispatched fleet deploys one policy per (market, system) cell —
+    the physical site. A grid carrying K candidate policies per site is
+    aggregated by a *soft selection*: each candidate's availability is
+    weighted by a per-cell softmax over the candidates' own soft CPC
+    ratios (temperature ``tau * _SEL_SCALE``, co-annealed), which
+    converges to the per-cell argmin the hard re-evaluation deploys —
+    so the fleet the gradient sees is the fleet that will actually run,
+    and the feasibility shortfall guards the *selected* set, not a
+    candidate mean an always-on also-ran could prop up. Everything here
+    is data, not parameters — gradients reach the rows through the soft
+    availability they offer and through the selection itself
+    (candidates compete). ``keys``/``order`` are the host-precomputed
+    `repro.dispatch.segment_keys` sort reused by the softmin water-fill
+    (`repro.kernels.soft_dispatch`); ``cpc_ref`` is a constant
+    O(fleet-CPC) normalizer that makes the dispatch term dimensionless
+    like the per-row CPC ratios.
+    """
+
+    cell_id: jax.Array       # [B] int32 row -> covered cell (site)
+    prices: jax.Array        # [C, T] site prices
+    keys: jax.Array          # [T, 3C] segment keys (f64 on the host)
+    order: jax.Array         # [T, 3C] int32 ascending key sort
+    demand: jax.Array        # [T] fleet demand profile (MW)
+    fixed: jax.Array         # [B] per-row fixed cost (selection-blended)
+    power: jax.Array         # [B] per-row site rating (MW)
+    migrate_cost: jax.Array  # [] EUR per MW moved
+    cpc_ref: jax.Array       # [] constant fleet-CPC normalizer
+
+
+def dispatch_coupling_from_grid(grid, dcfg: DispatchConfig
+                                ) -> DispatchCoupling:
+    """Build the soft-dispatch coupling data for a `ScenarioGrid` under
+    a `repro.dispatch.DispatchConfig` (same demand semantics as
+    `build_problem`: scalar, [T] profile, or ``demand_frac`` of the
+    summed per-site ratings)."""
+    _, inverse, counts = np.unique(cell_index(grid), return_inverse=True,
+                                   return_counts=True)
+    c = len(counts)
+    t = grid.n_hours
+    cell_market = np.zeros(c, np.int64)
+    cell_market[inverse] = np.asarray(grid.market_idx, np.int64)
+    prices_c = np.asarray(grid.prices, np.float64)[cell_market]  # [C, T]
+
+    # per-site rating for the demand_frac default: candidate rows of a
+    # cell share the site, so average their (normally equal) ratings
+    w = 1.0 / counts[inverse]                                    # [B]
+    power_c = np.zeros(c)
+    np.add.at(power_c, inverse, w * np.asarray(grid.power, np.float64))
+
+    demand = np.asarray(resolve_demand(dcfg, power_c, t), np.float64)
+    keys = segment_keys(prices_c, float(dcfg.migrate_cost))
+    order, _ = segment_rank(prices_c, float(dcfg.migrate_cost),
+                            keys=keys)
+    fixed_c = np.zeros(c)
+    np.add.at(fixed_c, inverse, w * np.asarray(grid.fixed, np.float64))
+    cpc_ref = (fixed_c.sum()
+               + float((demand * prices_c.mean(axis=0)).sum())) \
+        / max(float(demand.sum()), 1e-9)
+    return DispatchCoupling(
+        cell_id=jnp.asarray(inverse, jnp.int32),
+        prices=jnp.asarray(prices_c), keys=jnp.asarray(keys),
+        order=jnp.asarray(order, jnp.int32), demand=jnp.asarray(demand),
+        fixed=jnp.asarray(np.asarray(grid.fixed, np.float64)),
+        power=jnp.asarray(np.asarray(grid.power, np.float64)),
+        migrate_cost=jnp.asarray(float(dcfg.migrate_cost)),
+        cpc_ref=jnp.asarray(cpc_ref))
 
 
 _LVL_SCALE = 1.0 - 1e-6   # keeps off_level < 1 even when the f32
@@ -169,29 +273,101 @@ def init_from_grid(grid) -> PolicyParams:
 
 def soft_costs(raw: PolicyParams, problem: TuneProblem, tau, *,
                fused: bool = True, block_t: int = 256):
-    """(FleetCosts, per-sample draw [B, T]) of the relaxed scan at
-    ``tau`` — the engine's cost assembly over the soft sufficient
-    statistics. ``fused`` selects the checkpointed custom-VJP soft-state
-    evaluation (`repro.kernels.soft_scan_vjp`) instead of native
-    autodiff through the associative scan — same gradients to tight
-    tolerance, a fraction of the backward cost and residual memory."""
+    """(FleetCosts, per-sample draw [B, T], capacity [B, T]) of the
+    relaxed scan at ``tau`` — the engine's cost assembly over the soft
+    sufficient statistics. ``fused`` selects the checkpointed
+    custom-VJP soft-state evaluation (`repro.kernels.soft_scan_vjp`)
+    instead of native autodiff through the associative scan — same
+    gradients to tight tolerance, a fraction of the backward cost and
+    residual memory."""
     phys = transform(raw)
     p = problem.row_prices()                      # [B, T] gather, in-jit
-    scan, draw = soft_scan_parts(p, phys.p_on, phys.p_off, phys.off_level,
-                                 problem.idle_frac, tau=tau, fused=fused,
-                                 block_t=block_t)
+    scan, draw, cap = soft_scan_parts(p, phys.p_on, phys.p_off,
+                                      phys.off_level, problem.idle_frac,
+                                      tau=tau, fused=fused,
+                                      block_t=block_t)
     costs = fleet_costs(
         scan, price_sum=problem.price_sum, fixed=problem.fixed,
         power=problem.power, period=problem.period,
         restart_energy_mwh=problem.restart_energy_mwh,
         restart_time_h=problem.restart_time_h, n_samples=p.shape[1])
-    return costs, draw
+    return costs, draw, cap
+
+
+def soft_dispatch_ratio(cap: jax.Array, row_ratio: jax.Array,
+                        coupling: DispatchCoupling, tau, *,
+                        min_dwell: int = 0, mw_scale: float = 0.05
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Fleet-level dispatched-CPC ratio of the relaxed schedules.
+
+    ``cap`` is the [B, T] soft capacity trajectory and ``row_ratio``
+    the per-row soft CPC ratio (both from `soft_costs`). Candidate
+    rows are blended onto their sites by the per-cell soft selection
+    (softmax over ``-row_ratio`` at temperature ``tau * _SEL_SCALE`` —
+    see `DispatchCoupling`), the softmin water-fill
+    (`repro.kernels.soft_dispatch`) places the demand profile over the
+    resulting soft availability at the *same* temperature as the scan
+    relaxation — co-annealed end to end — and the realized fleet cost
+    (selected fixed + energy at the allocation + matched migration
+    flow, the accounting of `repro.dispatch.summarize_alloc`) is
+    normalised by ``coupling.cpc_ref`` to a dimensionless O(1) ratio.
+    Returns ``(ratio, shortfall)`` where ``shortfall`` is the *sum*
+    over hours of the squared relative availability deficit of the
+    selected fleet against a 5%-margined demand — the smooth
+    feasibility term that keeps gradient steps from shutting the fleet
+    below the demand it must serve (the hard re-evaluation raises
+    `DispatchInfeasible` there, so even one deficient hour must carry a
+    loss-scale cost: a sum does, a per-hour mean would dilute it by T,
+    and the margin covers the soft capacity slightly overstating the
+    hard schedules near thresholds).
+    """
+    dtype = cap.dtype
+    c = coupling.prices.shape[0]
+
+    # per-cell soft selection over candidates (stabilised softmax)
+    score = -row_ratio / jnp.maximum(tau * _SEL_SCALE, 1e-12)
+    peak = jax.ops.segment_max(score, coupling.cell_id, num_segments=c)
+    expw = jnp.exp(score - peak[coupling.cell_id])
+    norm = jax.ops.segment_sum(expw, coupling.cell_id, num_segments=c)
+    sel = expw / norm[coupling.cell_id]                         # [B]
+
+    avail = (sel * coupling.power.astype(dtype))[:, None] * cap  # [B, T]
+    avail_c = jax.ops.segment_sum(avail, coupling.cell_id,
+                                  num_segments=c)               # [C, T]
+    fixed_fleet = jnp.sum(sel * coupling.fixed.astype(dtype))
+    demand = coupling.demand.astype(dtype)
+    alloc = soft_dispatch(avail_c, coupling.keys.astype(dtype),
+                          coupling.order, demand, tau=tau,
+                          min_dwell=min_dwell, mw_scale=mw_scale,
+                          use_pallas=False)                     # [C, T]
+
+    energy = jnp.sum(alloc * coupling.prices.astype(dtype))
+    prev = jnp.concatenate([jnp.zeros_like(alloc[:, :1]),
+                            alloc[:, :-1]], axis=1)
+    delta = alloc - prev
+    inflow = jnp.sum(jax.nn.relu(delta), axis=0)                # [T]
+    outflow = jnp.sum(jax.nn.relu(-delta), axis=0)
+    # matched cross-site flow min(in, out): demand ramps are not moves
+    moved = 0.5 * (inflow + outflow - jnp.abs(inflow - outflow))
+    migration = coupling.migrate_cost.astype(dtype) * jnp.sum(moved)
+    delivered = jnp.maximum(jnp.sum(alloc), 1e-9)
+    cpc_fleet = (fixed_fleet + energy + migration) / delivered
+    ratio = cpc_fleet / coupling.cpc_ref.astype(dtype)
+
+    short = jax.nn.relu(_FEAS_MARGIN_SCALE * demand
+                        - jnp.sum(avail_c, axis=0)) \
+        / jnp.maximum(demand, 1e-9)
+    return ratio, jnp.sum(short ** 2)
 
 
 def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
                    power_cap_mw: Optional[float] = None,
                    min_up_hours: Optional[float] = None,
                    penalty_weight: float = 10.0,
+                   dispatch: Optional[DispatchCoupling] = None,
+                   dispatch_blend: float = 0.5,
+                   dispatch_min_dwell: int = 0,
+                   dispatch_mw_scale: float = 0.05,
                    fused: bool = True, block_t: int = 256,
                    reduction: str = "mean"):
     """Scalar tuning loss at temperature ``tau`` (lower is better).
@@ -202,17 +378,31 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
     absolute costs contribute comparably and one learning rate serves
     the whole grid. Returns ``(loss, aux)`` with per-row diagnostics.
 
+    With ``dispatch`` (a `DispatchCoupling`), the isolated-site term is
+    *blended* with the fleet-level dispatched-CPC ratio of the relaxed
+    schedules (`soft_dispatch_ratio`, co-annealed at the same ``tau``):
+
+        loss = (1 - blend) mean_b ratio_b + blend ratio_fleet + ...
+
+    plus an availability-shortfall penalty under ``penalty_weight``, so
+    gradients cannot park the fleet below the demand it must serve. The
+    dispatch term couples every row through the shared water level —
+    this objective is then *not* batch-separable (the chunked/sharded
+    tuner paths refuse it).
+
     ``reduction="sum"`` (the tuner hot loop's setting) sums the per-row
-    ratios instead of averaging and scales the coupling penalties by B
-    to compensate: every per-row gradient is then *independent of which
-    other rows share the batch* (Adam normalizes the common factor
-    away), which is what lets the sharded / chunked `optimize` paths
-    reproduce the single-program trajectory bit for bit.
+    ratios instead of averaging and scales the coupling penalties (and
+    the dispatch term) by B to compensate: without coupling terms,
+    every per-row gradient is then *independent of which other rows
+    share the batch* (Adam normalizes the common factor away), which is
+    what lets the sharded / chunked `optimize` paths reproduce the
+    single-program trajectory bit for bit.
     """
-    costs, draw = soft_costs(raw, problem, tau, fused=fused,
-                             block_t=block_t)
+    costs, draw, cap = soft_costs(raw, problem, tau, fused=fused,
+                                  block_t=block_t)
     ratio = costs.cpc / costs.cpc_ao
     loss = jnp.sum(ratio) if reduction == "sum" else jnp.mean(ratio)
+    scale = ratio.shape[0] if reduction == "sum" else 1.0
 
     # coupling terms weight each row by 1/|cell| so a K-policy grid
     # charges each physical site once (per-site candidate mean), not K
@@ -228,9 +418,17 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
         total_up = jnp.sum(w * costs.up_hours)
         deficit = jax.nn.relu(min_up_hours - total_up) / min_up_hours
         penalty = penalty + deficit ** 2
-    scale = ratio.shape[0] if reduction == "sum" else 1.0
+
+    dratio = jnp.zeros((), ratio.dtype)
+    if dispatch is not None:
+        dratio, shortfall = soft_dispatch_ratio(
+            cap, ratio, dispatch, tau, min_dwell=dispatch_min_dwell,
+            mw_scale=dispatch_mw_scale)
+        loss = (1.0 - dispatch_blend) * loss \
+            + dispatch_blend * scale * dratio
+        penalty = penalty + shortfall
     loss = loss + scale * penalty_weight * penalty
 
     aux = {"ratio": ratio, "cpc": costs.cpc, "up_hours": costs.up_hours,
-           "penalty": penalty}
+           "penalty": penalty, "dispatch_ratio": dratio}
     return loss, aux

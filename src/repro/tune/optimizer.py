@@ -61,10 +61,11 @@ from repro.fleet.grid import concat_rows, row_chunks
 from repro.kernels.ref import fleet_scan_ref
 from repro.optim.adamw import AdamWConfig, AdamWState, adamw_update
 from repro.parallel.axes import SHARD_MAP_NOCHECK, row_mesh, shard_map
-from repro.tune.objective import (PhysicalPolicy, PolicyParams,
-                                  TuneProblem, cell_index, init_from_grid,
-                                  problem_from_grid, soft_objective,
-                                  transform)
+from repro.tune.objective import (DispatchCoupling, PhysicalPolicy,
+                                  PolicyParams, TuneProblem, cell_index,
+                                  dispatch_coupling_from_grid,
+                                  init_from_grid, problem_from_grid,
+                                  soft_objective, transform)
 
 from jax.sharding import PartitionSpec as P
 
@@ -107,6 +108,18 @@ class TuneConfig(NamedTuple):
     # under `repro.dispatch` — hard constraints, not the soft penalties
     # above — and report both (TuneResult.dispatch)
     dispatch: Optional[DispatchConfig] = None
+    # dispatch-AWARE tuning (None disables): differentiate through the
+    # temperature-relaxed water-fill dispatcher
+    # (`repro.kernels.soft_dispatch`, co-annealed with the scan tau) so
+    # per-site thresholds learn their fleet role; the final hard
+    # re-evaluation is still scored on feasible `dispatch()` (under
+    # ``dispatch`` if also set, else under this config). Couples every
+    # row through the shared water level: the chunked path refuses it
+    # loudly and sharding is disabled.
+    dispatch_soft: Optional[DispatchConfig] = None
+    dispatch_blend: float = 0.5      # fleet-dispatch share of the loss
+    dispatch_mw_scale: float = 0.05  # MW temperature of the dwell reset
+                                     # gate per unit tau
 
 
 class TuneResult(NamedTuple):
@@ -122,9 +135,11 @@ class TuneResult(NamedTuple):
     improvement_vs_own: np.ndarray    # 1 - cpc / cpc_swept
     source: np.ndarray           # 0 = tuned, 1 = own swept, 2 = cell best
     history: dict                # per-step arrays: loss, tau, penalty
-    # feasible-dispatch re-evaluation (None unless cfg.dispatch given):
-    # {"cpc_tuned", "cpc_swept", "chosen", "tuned", "swept"} where the
-    # last two are repro.dispatch.DispatchResult
+    # feasible-dispatch re-evaluation (None unless cfg.dispatch or
+    # cfg.dispatch_soft given): {"cpc_tuned", "cpc_swept", "chosen",
+    # "tuned", "swept", "rows", "site_names", "infeasible_*"} where
+    # "tuned"/"swept" are repro.dispatch.DispatchResult and "rows" the
+    # grid rows operated as sites
     dispatch: Optional[dict] = None
 
 
@@ -155,12 +170,14 @@ def _hard_cpc_rows(p_on, p_off, off_level, problem: TuneProblem
 hard_cpc = jax.jit(_hard_cpc_rows)
 
 
-def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig):
+def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
+               coupling: Optional[DispatchCoupling] = None):
     """The tuner hot loop: annealed Adam scan + hard re-evaluation.
 
     Traced under plain jit (single program), under `shard_map` (one
     shard of rows), and per chunk — identical per-row math in all
-    three, which is what makes the scaled-out paths bit-consistent.
+    three, which is what makes the scaled-out paths bit-consistent
+    (``coupling`` is only ever non-None in the single program).
     Returns ``(raw_f, history, cpc_tuned)``.
     """
     b = raw0.raw_off.shape[0]
@@ -179,6 +196,8 @@ def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig):
     state0 = AdamWState(step=jnp.zeros((), jnp.int32),
                         mu=jax.tree.map(jnp.zeros_like, raw0),
                         nu=jax.tree.map(jnp.zeros_like, raw0))
+    min_dwell = cfg.dispatch_soft.min_dwell_h \
+        if cfg.dispatch_soft is not None else 0
 
     def step(carry, tau):
         raw, st = carry
@@ -186,10 +205,14 @@ def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig):
             raw, problem, tau, power_cap_mw=cfg.power_cap_mw,
             min_up_hours=cfg.min_up_hours,
             penalty_weight=cfg.penalty_weight,
+            dispatch=coupling, dispatch_blend=cfg.dispatch_blend,
+            dispatch_min_dwell=min_dwell,
+            dispatch_mw_scale=cfg.dispatch_mw_scale,
             fused=cfg.fused, block_t=cfg.block_t, reduction="sum")
         raw, st = vupdate(grads, st, raw)
         return (raw, st), {"loss": loss / b, "tau": tau,
-                           "penalty": aux["penalty"]}
+                           "penalty": aux["penalty"],
+                           "dispatch_ratio": aux["dispatch_ratio"]}
 
     (raw_f, _), hist = jax.lax.scan(step, (raw0, state0),
                                     _tau_schedule(cfg))
@@ -200,13 +223,16 @@ def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
-def tune_loop(raw0: PolicyParams, problem: TuneProblem, *,
+def tune_loop(raw0: PolicyParams, problem: TuneProblem,
+              coupling: Optional[DispatchCoupling] = None, *,
               cfg: TuneConfig):
     """One compiled tuning program: τ-annealed Adam over all rows plus
     the hard re-evaluation, with the raw-parameter carry donated (the
     Adam scan reuses its buffers instead of allocating fresh ones each
-    call). This is the object `benchmarks/bench_tune.py` times."""
-    return _loop_body(raw0, problem, cfg)
+    call). ``coupling`` (from `dispatch_coupling_from_grid`) switches
+    on the dispatch-aware fleet term. This is the object
+    `benchmarks/bench_tune.py` times."""
+    return _loop_body(raw0, problem, cfg, coupling)
 
 
 _PROBLEM_ROW_FIELDS = tuple(f for f in TuneProblem._fields
@@ -242,7 +268,8 @@ def _sharded_loop(n_dev: int, cfg: TuneConfig):
 
 
 def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
-              n_rows: int):
+              n_rows: int,
+              coupling: Optional[DispatchCoupling] = None):
     """Dispatch the hot loop over the single / sharded / chunked path.
 
     Per-row math is identical in all three (sum-reduction makes each
@@ -251,18 +278,30 @@ def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
     ``(raw_f, history, cpc_tuned)`` with history arrays [steps].
     """
     coupled = (cfg.power_cap_mw is not None
-               or cfg.min_up_hours is not None)
+               or cfg.min_up_hours is not None
+               or coupling is not None)
 
     if cfg.chunk_rows == 1:
         raise ValueError(
             "TuneConfig.chunk_rows must be >= 2: width-1 programs "
             "scalarize on XLA:CPU and drift off the bit-identical "
             "contract (same reason shards keep >= 2 rows)")
+    if cfg.chunk_rows and coupled:
+        # loud, not silent: a chunked water level / penalty over a
+        # partial fleet is a different objective, and quietly dropping
+        # the chunking instead would drop the memory bound the user
+        # asked for
+        raise ValueError(
+            "TuneConfig.chunk_rows cannot be combined with fleet "
+            "coupling (power_cap_mw / min_up_hours / dispatch_soft): "
+            "coupled terms see every row at once, so a row chunk would "
+            "optimize against a fleet that does not exist — tune "
+            "unchunked (one program) or drop the coupling")
 
     # an explicit chunk_rows is a memory bound the user asked for — it
     # wins over auto-sharding (the two do not compose yet; a sharded
     # host that also needs chunking should chunk)
-    if cfg.chunk_rows and not coupled and n_rows > cfg.chunk_rows:
+    if cfg.chunk_rows and n_rows > cfg.chunk_rows:
         # pad to one compile shape by repeating row 0: padded rows are
         # tuned like any other and dropped afterwards — per-row math is
         # batch-independent, so the real rows are unaffected (the loss
@@ -280,7 +319,11 @@ def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
         return (concat_rows(raws, n_rows), hist,
                 concat_rows(cpcs, n_rows))
 
-    if cfg.shard and not coupled:
+    # an explicit chunk_rows wins over auto-sharding even when the grid
+    # is small enough to skip the chunked branch above: the user opted
+    # into the bitwise chunk contract, and the shard path is only
+    # ULP-equivalent
+    if cfg.shard and not coupled and not cfg.chunk_rows:
         n_avail = len(jax.devices())
         # largest divisor of B that keeps >= 2 rows per shard: width-1
         # shards scalarize on XLA:CPU and round a few ops differently
@@ -293,7 +336,7 @@ def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
             return raw_f, {k: np.asarray(v).mean(axis=0)
                            for k, v in hist.items()}, cpc
 
-    raw_f, hist, cpc = tune_loop(raw0, problem, cfg=cfg)
+    raw_f, hist, cpc = tune_loop(raw0, problem, coupling, cfg=cfg)
     return raw_f, {k: np.asarray(v) for k, v in hist.items()}, cpc
 
 
@@ -359,8 +402,13 @@ def _dispatch_reeval(grid, params: PhysicalPolicy, cpc: np.ndarray,
     cpc_s = swept.cpc if swept is not None else float("inf")
     chosen = None if tuned is None and swept is None else \
         ("tuned" if cpc_t <= cpc_s else "swept")
+    names = tuple(f"{grid.market_names[n]}/{grid.system_names[m]}"
+                  for n, m in zip(np.asarray(grid.market_idx)[rows],
+                                  np.asarray(grid.system_idx)[rows])) \
+        if grid.market_names and grid.system_names else ()
     return {"cpc_tuned": cpc_t, "cpc_swept": cpc_s, "chosen": chosen,
-            "tuned": tuned, "swept": swept,
+            "tuned": tuned, "swept": swept, "rows": rows,
+            "site_names": names,
             "infeasible_tuned": why_t, "infeasible_swept": why_s}
 
 
@@ -376,14 +424,25 @@ def optimize(grid, cfg: TuneConfig = TuneConfig()) -> TuneResult:
     cell, the reported ``cpc`` therefore matches or beats the best swept
     policy on every row. With fleet-coupling penalties configured the
     swept fallback is disabled (swept policies ignore the constraints),
-    so ``cpc`` reports the tuned params unconditionally — and the
-    sharded / chunked paths are disabled too, since the penalties couple
-    rows across shards.
+    so ``cpc`` reports the tuned params unconditionally — sharding is
+    disabled too, and an explicit ``chunk_rows`` raises, since coupled
+    terms see every row at once.
+
+    With ``cfg.dispatch_soft`` the annealed objective additionally
+    differentiates through the relaxed water-fill dispatcher
+    (`repro.tune.objective.soft_dispatch_ratio`), the per-row swept
+    fallback is disabled for the same reason as above, and the final
+    policy set is re-scored on *feasible* `repro.dispatch.dispatch`
+    (under ``cfg.dispatch`` if also given, else under the same config)
+    against the best-swept set — so the reported fleet CPC under hard
+    dispatch is never worse than the swept baseline's.
     """
     problem = problem_from_grid(grid)
     raw0 = init_from_grid(grid)
+    coupling = dispatch_coupling_from_grid(grid, cfg.dispatch_soft) \
+        if cfg.dispatch_soft is not None else None
     raw_f, hist, cpc_tuned_dev = _run_loop(raw0, problem, cfg,
-                                           grid.n_rows)
+                                           grid.n_rows, coupling)
     cpc_tuned = np.asarray(cpc_tuned_dev, np.float64)
 
     # hard re-evaluation of the swept baselines at tau -> 0
@@ -400,10 +459,15 @@ def optimize(grid, cfg: TuneConfig = TuneConfig()) -> TuneResult:
                                cfg.chunk_rows)
 
     cand = np.stack([cpc_tuned, cpc_swept, cpc_cb])        # [3, B]
-    if cfg.power_cap_mw is not None or cfg.min_up_hours is not None:
+    if (cfg.power_cap_mw is not None or cfg.min_up_hours is not None
+            or cfg.dispatch_soft is not None):
         # fleet-coupling constraints: the swept baselines ignore them, so
         # falling back to a lower-CPC swept policy would silently violate
         # the constraint the user asked for — keep the tuned params.
+        # (Dispatch-aware runs likewise: a per-row swept fallback judged
+        # on *isolated* CPC would undo the fleet-role specialisation the
+        # dispatch term just taught; the swept set still competes, as a
+        # whole fleet, in the hard dispatch re-scoring below.)
         source = np.zeros(cand.shape[1], np.int64)
     else:
         source = np.argmin(cand, axis=0)
@@ -420,9 +484,11 @@ def optimize(grid, cfg: TuneConfig = TuneConfig()) -> TuneResult:
         off_level=pick(tuned.off_level, grid.off_level, cb.off_level))
 
     dispatch_out = None
-    if cfg.dispatch is not None:
+    reeval_cfg = cfg.dispatch if cfg.dispatch is not None \
+        else cfg.dispatch_soft
+    if reeval_cfg is not None:
         dispatch_out = _dispatch_reeval(grid, params, cpc, best_row,
-                                        cfg.dispatch)
+                                        reeval_cfg)
 
     return TuneResult(
         params=params, raw=raw_f, cpc=cpc, cpc_tuned=cpc_tuned,

@@ -1,7 +1,9 @@
 """Cross-site dispatch subsystem tests: Pallas kernel vs sequential
 oracle (bit-identical), site-permutation invariance, hard-constraint
 feasibility at the extremes, schedule consistency with the fleet scan,
-and the `summarize` round-trip with the new dispatch block."""
+the `summarize` round-trip with the dispatch block, [T] demand
+profiles end to end, and property-based invariants of the hard
+water-fill over random feasible problems."""
 
 import numpy as np
 import pytest
@@ -9,11 +11,14 @@ import pytest
 from repro.core.tco import make_system
 from repro.dispatch import (DispatchConfig, DispatchInfeasible,
                             DispatchProblem, build_problem,
-                            capacity_series, dispatch, segment_rank)
+                            capacity_series, dispatch, diurnal_demand,
+                            resolve_demand, segment_keys, segment_rank)
 from repro.energy.markets import MarketParams
 from repro.fleet import PolicySpec, backtest, build_grid, summarize
 from repro.kernels.dispatch_scan import dispatch_scan
 from repro.kernels.ref import dispatch_ref, fleet_scan_ref
+
+from tests._hypothesis_compat import given, settings, st
 
 rng = np.random.default_rng(17)
 
@@ -159,6 +164,131 @@ def test_min_dwell_holds_load_in_place():
     moves = np.abs(np.diff(held.alloc_mw, axis=1)).sum(axis=0)
     move_hours = np.flatnonzero(moves > 1e-6)
     assert np.all(np.diff(move_hours) >= 4)
+
+
+# ---------------------------------------------------------------------------
+# (b2) [T] demand profiles end to end
+# ---------------------------------------------------------------------------
+
+def test_demand_profile_is_followed_hour_by_hour():
+    s, t = 5, 240
+    prices, avail, _ = _random_case(s, t)
+    base = 0.4 * float(avail.sum(axis=0).min())
+    profile = np.asarray(diurnal_demand(t, base_mw=base,
+                                        swing_mw=0.5 * base),
+                         np.float32)
+    assert profile.min() > 0.0 and profile.max() <= avail.sum(axis=0).min()
+    res = dispatch(_problem(prices, avail, profile, migrate_cost=2.0),
+                   use_pallas=False)
+    np.testing.assert_allclose(res.alloc_mw.sum(axis=0), profile,
+                               rtol=1e-4, atol=1e-4)
+    # ramps are demand changes, not migrations: the billed volume is
+    # the matched in/out flow, strictly below the total |delta| the
+    # hourly ramps produce
+    delta = np.abs(np.diff(res.alloc_mw, axis=1)).sum()
+    assert 0.0 < res.migration_mw < delta
+
+
+def test_dispatch_config_profile_through_build_problem():
+    t = 96
+    grid_prices = rng.normal(80, 30, (3, t)).astype(np.float32)
+    prof = diurnal_demand(t, base_mw=1.0, swing_mw=0.4)
+    cfg = DispatchConfig(demand_mw=prof, migrate_cost=1.0)
+    prob = build_problem(grid_prices, np.full(3, 60.0), np.full(3, 70.0),
+                         np.full(3, 0.5), np.full(3, 1.0), cfg)
+    np.testing.assert_allclose(prob.demand_mw, np.asarray(prof),
+                               rtol=1e-6)
+    assert isinstance(hash(cfg), int)   # tuple profile stays hashable
+
+
+def test_demand_profile_wrong_length_raises():
+    cfg = DispatchConfig(demand_mw=tuple(np.ones(50)))
+    with pytest.raises(ValueError, match="50 entries"):
+        resolve_demand(cfg, np.ones(3), 96)
+    with pytest.raises(ValueError, match="swing_mw"):
+        diurnal_demand(24, base_mw=1.0, swing_mw=2.0)
+
+
+def test_summarize_dispatch_with_diurnal_profile():
+    grid = _fleet_grid()
+    rep = backtest(grid, use_pallas=False)
+    # peak must clear the worst-case fleet hour (all three best-policy
+    # sites at off_level 0.3 -> 0.9 MW): peak 0.84 MW stays feasible
+    prof = diurnal_demand(T, base_mw=0.2 * grid.n_markets,
+                          swing_mw=0.08 * grid.n_markets)
+    summ = summarize(grid, rep, dispatch_cfg=DispatchConfig(
+        demand_mw=prof, migrate_cost=4.0, min_dwell_h=3))
+    d = summ.dispatch
+    np.testing.assert_allclose(d.alloc_mw.sum(axis=0), np.asarray(prof),
+                               rtol=1e-4)
+    assert summ.dispatch_rows is not None
+    assert len(summ.dispatch_rows) == grid.n_markets
+
+
+# ---------------------------------------------------------------------------
+# (b3) property-based invariants of the hard water-fill
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000),
+       s=st.integers(1, 12),
+       mc=st.floats(0.0, 30.0),
+       dwell=st.integers(0, 10),
+       frac=st.floats(0.05, 0.95))
+def test_dispatch_invariants_on_random_feasible_problems(
+        seed, s, mc, dwell, frac):
+    """For any feasible problem: allocations meet demand exactly, never
+    exceed availability, stay non-negative, and dwell-locked load is
+    held (a site that just gained load does not shed it within the
+    lock, capacity permitting)."""
+    t = 150
+    prices, avail, demand = _random_case(s, t, demand_frac=frac,
+                                         seed_shift=seed)
+    res = dispatch(_problem(prices, avail, demand, migrate_cost=mc,
+                            min_dwell=dwell), use_pallas=False)
+    alloc = res.alloc_mw
+    np.testing.assert_allclose(alloc.sum(axis=0), demand, rtol=1e-4,
+                               atol=1e-4)
+    assert np.all(alloc <= np.asarray(avail, np.float64) + 1e-4)
+    assert np.all(alloc >= 0.0)
+    if dwell > 0:
+        # replay the lock ledger: after an allocation *increase* a
+        # site's load may not drop for `dwell` hours unless its own
+        # availability drops below the held level (physics beats
+        # contract) or the fleet demand sinks below the sum of locks
+        ledger = np.zeros(s)
+        prev = np.zeros(s)
+        for h in range(t):
+            locked = ledger > 0
+            can_hold = np.minimum(prev, avail[:, h])
+            if demand[h] >= can_hold[locked].sum() - 1e-4:
+                assert np.all(alloc[:, h][locked]
+                              >= can_hold[locked] - 1e-3), f"hour {h}"
+            gained = alloc[:, h] > prev + 1e-3
+            ledger = np.where(gained, dwell, np.maximum(ledger - 1, 0))
+            prev = alloc[:, h]
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), s=st.integers(2, 10),
+       mc=st.floats(0.5, 25.0))
+def test_dispatch_total_cost_monotone_in_migrate_cost(seed, s, mc):
+    """The zero-fee dispatch is the per-hour cost optimum, so any
+    positive fee can only cost more in total (energy + migration); and
+    along an increasing fee ladder the *billed migration volume* never
+    grows (more friction, fewer MW moved)."""
+    t = 200
+    prices, avail, demand = _random_case(s, t, seed_shift=seed)
+    free = dispatch(_problem(prices, avail, demand), use_pallas=False)
+    free_total = free.energy_cost       # no fee -> no migration bill
+    moved_prev = free.migration_mw
+    for fee in (0.5 * mc, mc, 2.0 * mc):
+        res = dispatch(_problem(prices, avail, demand, migrate_cost=fee),
+                       use_pallas=False)
+        total = res.energy_cost + res.migration_cost
+        assert total >= free_total - 1e-6 * max(1.0, abs(free_total))
+        assert res.migration_mw <= moved_prev * (1.0 + 1e-6) + 1e-6
+        moved_prev = res.migration_mw
 
 
 # ---------------------------------------------------------------------------
