@@ -47,14 +47,22 @@ def _grid(n_markets: int, n_systems: int, hours: int):
     return build_grid(markets, systems, policies)
 
 
-def _time_variant(problem, raw0_np, cfg: TuneConfig, repeats: int):
+def _time_variant(problem, raw0_np, cfg: TuneConfig, repeats: int, *,
+                  telemetry: bool = False, label: str | None = None):
     """Median warm wall time of the full jitted loop + compiled peak
     temp bytes. Compiles exactly once (the timed calls run the lowered
     executable directly — also the object `memory_analysis` reads);
     ``tune_loop`` donates its parameter carry, so every call rebuilds
-    the (tiny) raw-parameter arrays from host copies."""
+    the (tiny) raw-parameter arrays from host copies. ``telemetry``
+    compiles the variant with the `repro.obs` side-outputs; ``label``
+    records the compiled program's XLA cost/memory analysis into the
+    active trace (`repro.obs.profiling.record_compiled`)."""
     raw0 = jax.tree.map(jax.numpy.asarray, raw0_np)
-    compiled = tune_loop.lower(raw0, problem, cfg=cfg).compile()
+    compiled = tune_loop.lower(raw0, problem, cfg=cfg,
+                               telemetry=telemetry).compile()
+    if label is not None:
+        from repro.obs.profiling import record_compiled
+        record_compiled(label, compiled)
     mem = compiled.memory_analysis()
     temp_bytes = None if mem is None else int(mem.temp_size_in_bytes)
 
@@ -78,9 +86,23 @@ def bench_tune(n_markets: int = 8, n_systems: int = 4,
     row_steps = grid.n_rows * steps
 
     fused_s, fused_tmp = _time_variant(
-        problem, raw0_np, TuneConfig(steps=steps), repeats)
+        problem, raw0_np, TuneConfig(steps=steps), repeats,
+        label="tune_loop.fused")
     native_s, native_tmp = _time_variant(
-        problem, raw0_np, TuneConfig(steps=steps, fused=False), repeats)
+        problem, raw0_np, TuneConfig(steps=steps, fused=False), repeats,
+        label="tune_loop.native")
+    # telemetry A/B: the same fused program with the `repro.obs`
+    # side-outputs compiled in, timed under a live (throwaway) trace
+    # run — this measures the <10% wall-clock overhead the telemetry
+    # subsystem promises, and `check_regression` gates the ratio
+    import tempfile
+
+    from repro import obs
+    with tempfile.TemporaryDirectory() as td:
+        with obs.capture(td, run_id="bench_tune_telemetry"):
+            tel_s, _ = _time_variant(
+                problem, raw0_np, TuneConfig(steps=steps), repeats,
+                telemetry=True, label="tune_loop.telemetry")
 
     out = {
         "rows": grid.n_rows,
@@ -92,6 +114,9 @@ def bench_tune(n_markets: int = 8, n_systems: int = 4,
         "row_steps_per_s_fused": row_steps / fused_s,
         "row_steps_per_s_native": row_steps / native_s,
         "speedup_fused_vs_native": native_s / fused_s,
+        "wall_s_telemetry": tel_s,
+        "telemetry_overhead_frac": tel_s / fused_s - 1.0,
+        "telemetry_speed_ratio": fused_s / tel_s,
         "temp_bytes_fused": fused_tmp,
         "temp_bytes_native": native_tmp,
         "temp_reduction": (native_tmp / fused_tmp

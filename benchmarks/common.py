@@ -37,9 +37,18 @@ def timed(fn, *args, repeats: int = 3, stat: str = "min", **kw):
 
 
 def write_artifact(name: str, payload: dict) -> Path:
+    """Write one artifact JSON, stamped with run metadata (git sha,
+    jax/jaxlib versions, device kind, timestamp — `repro.obs
+    .run_metadata`) under ``run_meta`` so every BENCH_*.json number is
+    attributable to the code and machine that produced it."""
+    from repro.obs import run_metadata, trace_event
+
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
     path = ARTIFACTS / f"{name}.json"
+    if isinstance(payload, dict) and "run_meta" not in payload:
+        payload = {**payload, "run_meta": run_metadata()}
     path.write_text(json.dumps(payload, indent=1, default=_np_default))
+    trace_event("bench.artifact", {"name": name, "path": str(path)})
     return path
 
 

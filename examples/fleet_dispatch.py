@@ -18,10 +18,15 @@ in the evening, bottoming out at night — which the dispatcher follows
 hour by hour (ramps are demand changes, not billed migrations).
 
   PYTHONPATH=src python examples/fleet_dispatch.py
+  PYTHONPATH=src python examples/fleet_dispatch.py --trace out/dispatch
 """
+
+import argparse
+from pathlib import Path
 
 import numpy as np
 
+from repro import obs
 from repro.core.tco import make_system
 from repro.dispatch import DispatchConfig, diurnal_demand
 from repro.energy.presets import region_params
@@ -30,6 +35,26 @@ from repro.fleet import PolicySpec, backtest, build_grid, elastic_policy, \
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="record a repro.obs telemetry run into DIR "
+                    "(trace.jsonl + metrics.json + digest.md)")
+    args = ap.parse_args()
+    if args.trace:
+        obs.enable(args.trace, run_id="fleet_dispatch")
+    try:
+        _main()
+    finally:
+        if args.trace:
+            obs.disable()
+            from repro.obs.report import render_digest
+            Path(args.trace, "digest.md").write_text(
+                render_digest(args.trace))
+            print(f"\ntelemetry run -> {args.trace} (digest.md, "
+                  "trace.jsonl, metrics.json)")
+
+
+def _main() -> None:
     hours = 8760
     n_markets = 8
     markets = [region_params("germany", seed=s) for s in range(n_markets)]

@@ -21,6 +21,7 @@ threshold far from its isolated optimum.
   PYTHONPATH=src python examples/tune_policies.py           # full demo
   PYTHONPATH=src python examples/tune_policies.py --smoke   # tiny CI run
   PYTHONPATH=src python examples/tune_policies.py --dispatch-soft
+  PYTHONPATH=src python examples/tune_policies.py --smoke --trace out/run
 """
 
 import argparse
@@ -29,6 +30,8 @@ from pathlib import Path
 
 import numpy as np
 
+from repro import obs
+from repro.obs.profiling import profiled
 from repro.core.tco import make_system
 from repro.dispatch import DispatchConfig
 from repro.energy.ensemble import block_bootstrap
@@ -157,8 +160,27 @@ def main() -> int:
                     help="dispatch-aware tuning demo: gradients through "
                     "the relaxed water-fill vs re-score-only, with the "
                     "swing-site threshold table")
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="record a repro.obs telemetry run into DIR "
+                    "(trace.jsonl + metrics.json + digest.md) — numeric "
+                    "results are bit-identical with or without it")
     args = ap.parse_args()
 
+    if args.trace:
+        obs.enable(args.trace, run_id="tune_policies")
+    try:
+        return _main(args)
+    finally:
+        if args.trace:
+            obs.disable()
+            from repro.obs.report import render_digest
+            digest = render_digest(args.trace)
+            Path(args.trace, "digest.md").write_text(digest)
+            print(f"telemetry run -> {args.trace} (digest.md, "
+                  "trace.jsonl, metrics.json)")
+
+
+def _main(args) -> int:
     if args.dispatch_soft:
         return dispatch_soft_demo(args)
 
@@ -170,7 +192,8 @@ def main() -> int:
           f"tau {cfg.tau_start} -> {cfg.tau_end}, "
           f"{'fused' if cfg.fused else 'native'} VJP")
 
-    res = optimize(grid, cfg)
+    with profiled("tune.optimize", rows=grid.n_rows, steps=cfg.steps):
+        res = optimize(grid, cfg)
     print(f"soft loss {res.history['loss'][0]:.4f} -> "
           f"{res.history['loss'][-1]:.4f}")
     print(f"improvement vs best swept policy per row: "

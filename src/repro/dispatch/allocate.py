@@ -40,11 +40,14 @@ from typing import NamedTuple, Optional, Sequence, Union
 import jax
 import numpy as np
 
+from repro import obs
 from repro.dispatch.schedule import capacity_series
 from repro.kernels.dispatch_scan import dispatch_scan
 from repro.kernels.ref import dispatch_ref
 
 _MOVE_TOL = 1e-6     # MW below which an hour's net move is not an event
+_NEAR_FRAC = 0.05    # capacity slack below this fraction of demand is
+                     # "near-infeasible" in the telemetry margin count
 
 
 class DispatchInfeasible(ValueError):
@@ -217,30 +220,39 @@ def build_problem(prices, p_on, p_off, off_level, power,
         order=order, rank=rank)
 
 
+def _infeasible(reason: str, **detail) -> DispatchInfeasible:
+    obs.trace_event("dispatch.infeasible", {"reason": reason, **detail})
+    obs.counter("dispatch.infeasible").inc()
+    return DispatchInfeasible(reason)
+
+
 def _check_feasible(problem: DispatchProblem) -> None:
     d = np.asarray(problem.demand_mw, np.float64)
     cap = problem.power_cap_mw
     if float(d.max()) > cap:
         worst = int(d.argmax())
-        raise DispatchInfeasible(
+        raise _infeasible(
             f"fleet power cap {cap:.3f} MW is below the demand "
             f"{d.max():.3f} MW (first binding hour {worst}) — the cap "
-            "can never be met by reallocating; raise it or shed demand")
+            "can never be met by reallocating; raise it or shed demand",
+            constraint="power_cap", hour=worst)
     avail = np.asarray(problem.avail_mw, np.float64).sum(axis=0)   # [T]
     short = d - avail
     if float(short.max()) > 1e-6:
         worst = int(short.argmax())
         n_bad = int((short > 1e-6).sum())
-        raise DispatchInfeasible(
+        raise _infeasible(
             f"fleet availability covers demand in only {len(d) - n_bad}/"
             f"{len(d)} hours: worst hour {worst} offers {avail[worst]:.3f} "
             f"MW against {d[worst]:.3f} MW demanded — site schedules shut "
-            "down too much capacity for this demand")
+            "down too much capacity for this demand",
+            constraint="capacity", hour=worst, n_short_hours=n_bad)
     if float(d.sum()) < problem.compute_floor_mwh:
-        raise DispatchInfeasible(
+        raise _infeasible(
             f"aggregate compute floor {problem.compute_floor_mwh:.3f} MWh "
             f"exceeds the total demanded {d.sum():.3f} MWh — the floor "
-            "cannot be reached even at full delivery")
+            "cannot be reached even at full delivery",
+            constraint="compute_floor")
 
 
 _dispatch_ref_jit = jax.jit(dispatch_ref, static_argnames=("min_dwell",))
@@ -283,24 +295,32 @@ def summarize_alloc(problem: DispatchProblem,
     Hour 0 places the fleet's load from empty; migration counts only the
     *matched* in/out flow (load that left one site and arrived at
     another), so demand ramps are not billed as moves.
+
+    All totals are sums of float64 per-hour [T] aggregates — the same
+    arrays emitted as the ``dispatch.hourly`` trace event — so
+    `repro.obs.report` reproduces ``cpc`` and ``n_migrations`` from the
+    trace alone, bit for bit.
     """
     alloc = np.asarray(alloc, np.float64)
     prices = np.asarray(problem.prices, np.float64)
     demand = np.asarray(problem.demand_mw, np.float64)
 
-    energy_cost = float((alloc * prices).sum())
+    energy_t = (alloc * prices).sum(axis=0)               # [T]
+    delivered_t = alloc.sum(axis=0)                       # [T]
     prev = np.concatenate([np.zeros_like(alloc[:, :1]), alloc[:, :-1]],
                           axis=1)
     delta = alloc - prev
     inflow = np.clip(delta, 0.0, None).sum(axis=0)        # [T]
     outflow = np.clip(-delta, 0.0, None).sum(axis=0)
     moved = np.minimum(inflow, outflow)
+    energy_cost = float(energy_t.sum())
     migration_mw = float(moved.sum())
     migration_cost = problem.migrate_cost * migration_mw
-    delivered = float(alloc.sum())
+    delivered = float(delivered_t.sum())
 
     avail_total = np.asarray(problem.avail_mw, np.float64).sum(axis=0)
-    return DispatchResult(
+    slack_cap_t = avail_total - demand                    # [T]
+    result = DispatchResult(
         alloc_mw=alloc,
         cpc=(problem.fixed_cost + energy_cost + migration_cost)
         / max(delivered, 1e-9),
@@ -311,6 +331,33 @@ def summarize_alloc(problem: DispatchProblem,
         delivered_mwh=delivered,
         site_mwh=alloc.sum(axis=1),
         slack_power_mw=float(problem.power_cap_mw - demand.max()),
-        slack_capacity_mw=float((avail_total - demand).min()),
+        slack_capacity_mw=float(slack_cap_t.min()),
         slack_floor_mwh=delivered - problem.compute_floor_mwh,
     )
+    if obs.enabled():
+        near = int((slack_cap_t < _NEAR_FRAC * demand).sum())
+        obs.trace_event("dispatch.hourly", {
+            "delivered_mwh": delivered_t, "energy_cost": energy_t,
+            "moved_mw": moved, "slack_capacity_mw": slack_cap_t,
+            "demand_mw": demand, "move_tol": _MOVE_TOL,
+            "fixed_cost": problem.fixed_cost,
+            "migrate_cost": problem.migrate_cost,
+        })
+        obs.trace_event("dispatch.result", {
+            "cpc": result.cpc, "energy_cost": energy_cost,
+            "migration_cost": migration_cost, "migration_mw": migration_mw,
+            "n_migrations": result.n_migrations,
+            "delivered_mwh": delivered,
+            "slack_power_mw": result.slack_power_mw,
+            "slack_capacity_mw": result.slack_capacity_mw,
+            "slack_floor_mwh": result.slack_floor_mwh,
+            "near_infeasible_hours": near, "near_frac": _NEAR_FRAC,
+            "n_sites": int(alloc.shape[0]), "hours": int(alloc.shape[1]),
+            "site_names": list(problem.site_names),
+        })
+        obs.counter("dispatch.calls").inc()
+        obs.counter("dispatch.moves").inc(result.n_migrations)
+        obs.gauge("dispatch.slack_capacity_mw").set(result.slack_capacity_mw)
+        obs.gauge("dispatch.slack_power_mw").set(result.slack_power_mw)
+        obs.gauge("dispatch.cpc").set(result.cpc)
+    return result

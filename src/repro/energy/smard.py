@@ -23,6 +23,8 @@ from typing import NamedTuple
 
 import numpy as np
 
+from repro import obs
+
 
 class LoadStats(NamedTuple):
     """Row accounting of one CSV load."""
@@ -43,19 +45,37 @@ class LoadStats(NamedTuple):
                 f"({self.skip_frac:.1%} bad)")
 
 
+def _emit_load_event(stats: LoadStats, path, what: str,
+                     action: str) -> None:
+    """Structured telemetry mirror of the loader's warn/raise paths —
+    one ``loader.skipped_rows`` event whose payload is exactly the
+    `LoadStats` fields (pinned in tests/test_obs.py) plus the loader
+    name and the action taken."""
+    obs.trace_event("loader.skipped_rows", {
+        "loader": what, "path": str(path), "n_rows": stats.n_rows,
+        "n_parsed": stats.n_parsed, "n_skipped": stats.n_skipped,
+        "n_nan": stats.n_nan, "skip_frac": stats.skip_frac,
+        "action": action})
+    obs.counter("loader.skipped_rows").inc(stats.n_skipped + stats.n_nan)
+
+
 def _finalize(values: list, stats: LoadStats, path, what: str,
               max_skip_frac: float, return_stats: bool):
     arr = np.asarray(values, dtype=np.float64)
     arr = arr[~np.isnan(arr)]
     if stats.n_rows and stats.n_parsed == 0:
+        _emit_load_event(stats, path, what, "raise")
         raise ValueError(
             f"{what}: no {path} row parsed ({stats}) — "
             "wrong column index or not a price CSV?")
     if stats.skip_frac > max_skip_frac:
+        _emit_load_event(stats, path, what, "warn")
         warnings.warn(
             f"{what}: skipped rows of {path} ({stats}; over the "
             f"{max_skip_frac:.0%} threshold) — "
             "check the column index / file format", stacklevel=3)
+    elif stats.n_skipped or stats.n_nan:
+        _emit_load_event(stats, path, what, "ok")
     return (arr, stats) if return_stats else arr
 
 
@@ -127,6 +147,10 @@ def load_price_csv(path: str | Path, *, max_skip_frac: float = 0.05,
             continue
         n_rows += 1
     if not vals and (n_rows or n_header):
+        _emit_load_event(
+            LoadStats(n_rows=n_rows + n_header, n_parsed=0,
+                      n_skipped=n_skipped + n_header, n_nan=0),
+            path, "load_price_csv", "raise")
         raise ValueError(
             f"load_price_csv: no {path} line parsed "
             f"({n_header} non-numeric lines) — not a price CSV?")

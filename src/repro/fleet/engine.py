@@ -27,10 +27,11 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.fleet.grid import ScenarioGrid, concat_rows, row_chunks
 from repro.fleet.report import FleetReport
 from repro.kernels.fleet_scan import fleet_scan
-from repro.kernels.ref import FleetScanOut, fleet_scan_ref
+from repro.kernels.ref import FleetScanOut, fleet_hourly_ref, fleet_scan_ref
 
 
 class FleetCosts(NamedTuple):
@@ -65,12 +66,12 @@ def fleet_costs(scan: FleetScanOut, *, price_sum, fixed, power, period,
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "block_b",
-                                             "block_t"))
+                                             "block_t", "telemetry"))
 def _backtest_jit(prices, market_idx, system_idx, policy_idx,
                   fixed, power, period, p_on, p_off, off_level, idle_frac,
                   restart_energy_mwh, restart_time_h, *,
-                  use_pallas: bool, block_b: int, block_t: int
-                  ) -> FleetReport:
+                  use_pallas: bool, block_b: int, block_t: int,
+                  telemetry: bool = False) -> FleetReport:
     t = prices.shape[1]
     p_rows = prices[market_idx]                       # [B, T] gather
 
@@ -79,6 +80,18 @@ def _backtest_jit(prices, market_idx, system_idx, policy_idx,
                           block_b=block_b, block_t=block_t)
     else:
         scan = fleet_scan_ref(p_rows, p_on, p_off, off_level, idle_frac)
+
+    if telemetry:
+        # per-hour decision records: a *companion* scan over the same
+        # state machine (`hard_hour_step`), aggregated on-device to [T]
+        # and drained once per call — it reads the report's inputs and
+        # feeds nothing back, so the FleetReport bits cannot change
+        # (pinned in tests/test_obs.py)
+        hourly = fleet_hourly_ref(p_rows, p_on, p_off, off_level,
+                                  idle_frac, power)
+        obs.drain("fleet.hourly", on_mw=hourly.on_mw,
+                  draw_price=hourly.draw_price, starts=hourly.starts,
+                  stops=hourly.stops)
 
     price_sum = jnp.sum(prices, axis=1)[market_idx]   # [B] sum_t p_t
     costs = fleet_costs(scan, price_sum=price_sum, fixed=fixed, power=power,
@@ -118,9 +131,19 @@ def backtest(grid: ScenarioGrid, *, use_pallas: Optional[bool] = None,
         return concat_rows(parts, grid.n_rows)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-    return _backtest_jit(
+    telemetry = obs.enabled()
+    report = _backtest_jit(
         grid.prices, grid.market_idx, grid.system_idx, grid.policy_idx,
         grid.fixed, grid.power, grid.period, grid.p_on, grid.p_off,
         grid.off_level, grid.idle_frac, grid.restart_energy_mwh,
         grid.restart_time_h, use_pallas=bool(use_pallas),
-        block_b=block_b, block_t=block_t)
+        block_b=block_b, block_t=block_t, telemetry=telemetry)
+    if telemetry:
+        obs.counter("fleet.backtests").inc()
+        obs.trace_event("fleet.backtest", {
+            "rows": int(grid.n_rows), "hours": int(grid.prices.shape[1]),
+            "use_pallas": bool(use_pallas),
+            "n_starts_total": float(jnp.sum(report.n_starts)),
+            "cpc_mean": float(jnp.mean(report.cpc)),
+            "reduction_mean": float(jnp.mean(report.cpc_reduction))})
+    return report

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.price_model import price_variability
 from repro.core.tco import cpc_reduction
 from repro.dispatch import (DispatchConfig, DispatchResult, build_problem,
@@ -167,7 +168,7 @@ def summarize(grid, report: FleetReport, *,
             dispatch_cfg, fixed=np.asarray(grid.fixed)[rows],
             site_names=names))
 
-    return FleetSummary(
+    summary = FleetSummary(
         reduction=red,
         best_policy=best_policy,
         best_reduction=best_reduction,
@@ -180,3 +181,35 @@ def summarize(grid, report: FleetReport, *,
         dispatch=disp,
         dispatch_rows=rows,
     )
+    if obs.enabled():
+        obs.trace_event("fleet.summary", {
+            "total_cost": summary.total_cost,
+            "total_up_hours": summary.total_up_hours,
+            "best_reduction": np.where(np.isnan(best_reduction), None,
+                                       best_reduction).tolist(),
+            "top_regret": _top_regret(grid, summary, k=10)})
+        obs.gauge("fleet.total_cost").set(summary.total_cost)
+    return summary
+
+
+def _top_regret(grid, summary: FleetSummary, k: int) -> list:
+    """Worst-regret covered cube cells, largest first — the "where is
+    this fleet leaving money on the table" rows of the operator digest
+    (``fleet.summary`` event / `repro.obs.report`)."""
+    regret = summary.regret
+    flat = regret.ravel()
+    idx = np.flatnonzero(~np.isnan(flat))
+    idx = idx[np.argsort(-flat[idx], kind="stable")][:k]
+    rows = []
+    for i in idx:
+        n, m, p = np.unravel_index(i, regret.shape)
+        rows.append({
+            "market": (grid.market_names[n] if grid.market_names
+                       else int(n)),
+            "system": (grid.system_names[m] if grid.system_names
+                       else int(m)),
+            "policy": (grid.policy_names[p] if grid.policy_names
+                       else int(p)),
+            "regret": float(regret[n, m, p]),
+            "reduction": float(summary.reduction[n, m, p])})
+    return rows

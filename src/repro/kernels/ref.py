@@ -30,6 +30,58 @@ class FleetScanOut(NamedTuple):
     restart_price_sum: jax.Array  # sum_t start_t * p_t          [B]
 
 
+def hard_hour_step(on_prev, p_t, p_on, p_off, off_level, idle_frac):
+    """One hour of the hard shutdown state machine — the single source
+    of the per-hour update, shared (elementwise, broadcasting) by
+    `fleet_scan_ref` and the telemetry companion `fleet_hourly_ref` so
+    the per-hour records aggregate exactly the trajectory the backtest
+    scores. Returns ``(on, start, cap, draw)``."""
+    on = jnp.where(p_t > p_off, 0.0,
+                   jnp.where(p_t <= p_on, 1.0, on_prev))
+    start = jnp.maximum(on - on_prev, 0.0)
+    cap = off_level + (1.0 - off_level) * on
+    draw = cap + idle_frac * (1.0 - cap)
+    return on, start, cap, draw
+
+
+class FleetHourly(NamedTuple):
+    """Per-hour fleet aggregates ([T] each) of a batched backtest — the
+    payload of the ``fleet.hourly`` telemetry drain. Reductions run
+    on-device inside the scan, so only 4T floats ever cross to the
+    host."""
+
+    on_mw: jax.Array       # sum_b weight_b * cap_bt (weighted capacity)
+    draw_price: jax.Array  # sum_b weight_b * draw_bt * p_bt (EUR-rate)
+    starts: jax.Array      # off->on transitions across rows
+    stops: jax.Array       # on->off transitions across rows
+
+
+def fleet_hourly_ref(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
+                     off_level: jax.Array, idle_frac: jax.Array,
+                     weight: jax.Array) -> FleetHourly:
+    """Hour-indexed companion of `fleet_scan_ref`: same state machine
+    (via `hard_hour_step`), but emitting [T]-shaped fleet aggregates
+    instead of per-row sums. ``weight`` ([B], e.g. each row's MW rating)
+    scales capacity and draw into fleet-level MW; transition counts are
+    unweighted."""
+    p = jnp.asarray(prices, jnp.float32)
+    b = p.shape[0]
+    p_on, p_off, off_level, idle_frac, weight = (
+        jnp.broadcast_to(jnp.asarray(v, jnp.float32), (b,))
+        for v in (p_on, p_off, off_level, idle_frac, weight))
+
+    def step(on_prev, p_t):
+        on, start, cap, draw = hard_hour_step(on_prev, p_t, p_on, p_off,
+                                              off_level, idle_frac)
+        stop = jnp.maximum(on_prev - on, 0.0)
+        ys = (jnp.sum(weight * cap), jnp.sum(weight * draw * p_t),
+              jnp.sum(start), jnp.sum(stop))
+        return on, ys
+
+    _, ys = jax.lax.scan(step, jnp.ones((b,), jnp.float32), p.T)
+    return FleetHourly(*ys)
+
+
 def fleet_scan_ref(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
                    off_level: jax.Array, idle_frac: jax.Array
                    ) -> FleetScanOut:
@@ -58,11 +110,8 @@ def fleet_scan_ref(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
 
     def step(carry, p_t):
         on_prev, acc = carry
-        on = jnp.where(p_t > p_off, 0.0,
-                       jnp.where(p_t <= p_on, 1.0, on_prev))
-        start = jnp.maximum(on - on_prev, 0.0)
-        cap = off_level + (1.0 - off_level) * on
-        draw = cap + idle_frac * (1.0 - cap)
+        on, start, cap, draw = hard_hour_step(on_prev, p_t, p_on, p_off,
+                                              off_level, idle_frac)
         acc = (acc[0] + draw * p_t, acc[1] + cap,
                acc[2] + start, acc[3] + start * p_t)
         return (on, acc), None

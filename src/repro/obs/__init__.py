@@ -1,0 +1,32 @@
+"""Fleet telemetry: zero-perturbation instrumentation of the
+tune/dispatch/backtest hot loops, structured JSONL run traces, and a
+report CLI (``python -m repro.obs.report <run-dir>``).
+
+See `repro.obs.registry` for the off-means-off / bit-identity contract
+and `repro.obs.schema` for the event catalogue.
+"""
+
+from .registry import (  # noqa: F401
+    SCHEMA_VERSION,
+    Counter,
+    Gauge,
+    Histogram,
+    Run,
+    capture,
+    counter,
+    current,
+    disable,
+    drain,
+    enable,
+    enabled,
+    gauge,
+    histogram,
+    run_metadata,
+    trace_event,
+)
+
+__all__ = [
+    "SCHEMA_VERSION", "Counter", "Gauge", "Histogram", "Run",
+    "capture", "counter", "current", "disable", "drain", "enable",
+    "enabled", "gauge", "histogram", "run_metadata", "trace_event",
+]

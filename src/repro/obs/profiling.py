@@ -1,0 +1,83 @@
+"""Profiling capture for kernel callers: wall-clock spans, XLA
+cost/memory analyses of compiled programs, and `jax.profiler.trace`
+wrapping — all landing in the same run trace (and therefore the same
+artifact schema `benchmarks/` writes).
+
+Everything here degrades to a no-op when no run is active, so call
+sites never need their own guards.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from pathlib import Path
+
+from .registry import current, trace_event
+
+
+@contextmanager
+def profiled(label: str, **attrs):
+    """Time a block and emit a ``profile.span`` event. Extra keyword
+    attributes ride along in the payload (e.g. rows=..., steps=...)."""
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        trace_event("profile.span",
+                    {"label": label,
+                     "seconds": time.perf_counter() - t0, **attrs})
+
+
+@contextmanager
+def xla_trace(label: str):
+    """Wrap a block in `jax.profiler.trace`, writing the device trace
+    under ``<run-dir>/profile/<label>/`` (TensorBoard/Perfetto
+    loadable) and emitting a ``profile.trace`` pointer event. Yields
+    the trace directory, or None when no run is active (in which case
+    no profiler is started — profiling is never free, so it only runs
+    inside an explicit telemetry run)."""
+    run = current()
+    if run is None:
+        yield None
+        return
+    import jax
+
+    trace_dir = run.dir / "profile" / label.replace("/", "_")
+    trace_dir.mkdir(parents=True, exist_ok=True)
+    try:
+        with jax.profiler.trace(str(trace_dir)):
+            yield trace_dir
+    finally:
+        trace_event("profile.trace", {"label": label, "dir": trace_dir})
+
+
+def record_compiled(label: str, compiled) -> dict:
+    """Capture `cost_analysis` + `memory_analysis` of a lowered-and-
+    compiled jax program into a ``profile.xla`` event; returns the
+    payload so benchmark code can also fold it into its artifact JSON.
+    Works whether or not a run is active."""
+    from repro.launch.hlo_analysis import raw_cost_analysis
+
+    payload: dict = {"label": label}
+    try:
+        ca = raw_cost_analysis(compiled)
+    except Exception:
+        ca = {}
+    for key, out in (("flops", "flops"),
+                     ("bytes accessed", "bytes_accessed"),
+                     ("transcendentals", "transcendentals")):
+        if key in ca:
+            payload[out] = float(ca[key])
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        mem = None
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            val = getattr(mem, attr, None)
+            if val is not None:
+                payload[attr.replace("_size_in_bytes", "_bytes")] = int(val)
+    trace_event("profile.xla", payload)
+    return payload

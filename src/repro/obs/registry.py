@@ -1,0 +1,321 @@
+"""Telemetry core: counters/gauges/histograms, a schema-versioned JSONL
+trace emitter, and the jit-side `drain` that ships on-device summaries
+to the host.
+
+Design contract (asserted in `tests/test_obs.py`):
+
+  * **Off means off.** With no run active (`enabled()` is False) the
+    instrumented call sites stage *no host callbacks at all* — `drain`
+    is a plain no-op at trace time and every hot path passes
+    ``telemetry=False`` into its jit, so `repro.fleet.backtest`,
+    `repro.tune.tune_loop` and `repro.dispatch.dispatch` compile to the
+    exact programs they were before this module existed (inspectable:
+    ``io_callback`` never appears in their jaxprs).
+  * **On means bit-identical.** Telemetry only ever *reads* values the
+    hot loops already compute: metrics ride side-outputs of the
+    existing scans plus `io_callback`-drained buffers aggregated
+    on-device into [T]-shaped summaries, never feeding back into the
+    math. Enabling a run changes zero output bits of the instrumented
+    programs (`tests/test_obs.py` compares them byte for byte).
+
+A *run* is a directory: ``trace.jsonl`` (one JSON event per line, first
+line is the ``run.meta`` stamp — run id, git sha, jax/jaxlib versions,
+device kind, timestamp, schema version) plus ``metrics.json`` (final
+counter/gauge/histogram snapshot, written on `disable`). Use the
+`capture` context manager in tests and the ``--trace out/`` flags of
+`examples/tune_policies.py` / `examples/fleet_dispatch.py` in demos;
+render any run dir with ``python -m repro.obs.report <run-dir>``.
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import threading
+import time
+from contextlib import contextmanager
+from datetime import datetime, timezone
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+SCHEMA_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# run metadata
+# ---------------------------------------------------------------------------
+
+_GIT_SHA: Optional[str] = None
+
+
+def _git_sha() -> Optional[str]:
+    """Commit sha of the working tree (cached per process; None outside
+    a git checkout — the stamp must never make telemetry fail)."""
+    global _GIT_SHA
+    if _GIT_SHA is None:
+        try:
+            _GIT_SHA = subprocess.run(
+                ["git", "rev-parse", "HEAD"],
+                cwd=Path(__file__).resolve().parent, capture_output=True,
+                text=True, timeout=5, check=True).stdout.strip()
+        except Exception:
+            _GIT_SHA = ""
+    return _GIT_SHA or None
+
+
+def run_metadata() -> dict:
+    """Attribution stamp shared by trace runs and benchmark artifacts
+    (`benchmarks.common.write_artifact`): enough to answer "what code,
+    what jax, what machine produced this number?"."""
+    import platform
+
+    import jax
+    import jaxlib
+
+    dev = jax.devices()[0]
+    return {
+        "git_sha": _git_sha(),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "n_devices": jax.device_count(),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "timestamp": datetime.now(timezone.utc).isoformat(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# metric instruments (host-side, summary statistics only)
+# ---------------------------------------------------------------------------
+
+class Counter:
+    """Monotone event count (e.g. dispatch moves)."""
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+    def snapshot(self):
+        return self.value
+
+
+class Gauge:
+    """Last-written value (e.g. minimum capacity slack of the last
+    dispatch)."""
+
+    def __init__(self) -> None:
+        self.value: Optional[float] = None
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def snapshot(self):
+        return self.value
+
+
+class Histogram:
+    """Streaming summary (count/sum/min/max) — enough for an operator
+    digest without storing every observation twice (the trace already
+    has the series)."""
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.sum += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def snapshot(self):
+        if not self.count:
+            return {"count": 0}
+        return {"count": self.count, "sum": self.sum, "min": self.min,
+                "max": self.max, "mean": self.sum / self.count}
+
+
+# ---------------------------------------------------------------------------
+# the run (one trace file + live instruments)
+# ---------------------------------------------------------------------------
+
+def _json_default(o):
+    if isinstance(o, (np.floating, np.integer)):
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    if isinstance(o, Path):
+        return str(o)
+    return str(o)
+
+
+class Run:
+    """One telemetry run: a directory with ``trace.jsonl`` and (after
+    `close`) ``metrics.json``. Event writes are lock-serialized so
+    io_callback drains from the runtime thread interleave cleanly with
+    host-side emitters (the 8-virtual-device CI leg exercises this)."""
+
+    def __init__(self, run_dir, run_id: Optional[str] = None) -> None:
+        self.dir = Path(run_dir)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.run_id = run_id or f"run-{int(time.time() * 1e3):x}"
+        self.trace_path = self.dir / "trace.jsonl"
+        self._lock = threading.Lock()
+        self._seq = 0
+        self._fh = self.trace_path.open("w", encoding="utf-8")
+        self.counters: dict[str, Counter] = {}
+        self.gauges: dict[str, Gauge] = {}
+        self.histograms: dict[str, Histogram] = {}
+        self.meta = {"run_id": self.run_id,
+                     "schema_version": SCHEMA_VERSION, **run_metadata()}
+        self.event("run.meta", self.meta)
+
+    def event(self, kind: str, payload: dict) -> None:
+        rec = {"schema": SCHEMA_VERSION, "kind": kind, "ts": time.time()}
+        rec.update(payload)
+        line = json.dumps(rec, default=_json_default)
+        with self._lock:
+            rec["seq"] = self._seq
+            self._seq += 1
+            # re-dump with the lock-assigned seq so lines stay ordered
+            self._fh.write(json.dumps(rec, default=_json_default) + "\n")
+            self._fh.flush()
+
+    def metrics_snapshot(self) -> dict:
+        return {
+            "counters": {k: c.snapshot()
+                         for k, c in sorted(self.counters.items())},
+            "gauges": {k: g.snapshot()
+                       for k, g in sorted(self.gauges.items())},
+            "histograms": {k: h.snapshot()
+                           for k, h in sorted(self.histograms.items())},
+        }
+
+    def close(self) -> None:
+        snap = self.metrics_snapshot()
+        self.event("run.close", {"n_events": self._seq,
+                                 "metrics": snap})
+        (self.dir / "metrics.json").write_text(
+            json.dumps(snap, indent=1, default=_json_default) + "\n")
+        with self._lock:
+            self._fh.close()
+
+
+# ---------------------------------------------------------------------------
+# module-level switch (the instrumented call sites only ever touch this)
+# ---------------------------------------------------------------------------
+
+_CURRENT: list = [None]          # 1-slot box; writes are rebinding-free
+
+
+def current() -> Optional[Run]:
+    return _CURRENT[0]
+
+
+def enabled() -> bool:
+    """The global telemetry switch. Every instrumented jit passes this
+    as its static ``telemetry`` argument, so toggling selects a
+    different compile-cache entry — the disabled entry stages no host
+    callbacks and computes no side-outputs at all."""
+    return _CURRENT[0] is not None
+
+
+def enable(run_dir, run_id: Optional[str] = None) -> Run:
+    """Start a telemetry run writing into ``run_dir`` (created if
+    missing). Only one run is active at a time; enabling over an active
+    run closes it first."""
+    if _CURRENT[0] is not None:
+        disable()
+    _CURRENT[0] = Run(run_dir, run_id=run_id)
+    return _CURRENT[0]
+
+
+def disable() -> None:
+    """Close the active run (flushes ``metrics.json``); no-op if none."""
+    run, _CURRENT[0] = _CURRENT[0], None
+    if run is not None:
+        run.close()
+
+
+@contextmanager
+def capture(run_dir, run_id: Optional[str] = None):
+    """``with capture(tmpdir) as run: ...`` — enable for a block, close
+    on exit even on error."""
+    run = enable(run_dir, run_id=run_id)
+    try:
+        yield run
+    finally:
+        if _CURRENT[0] is run:
+            disable()
+        else:                     # someone re-enabled inside the block
+            run.close()
+
+
+def trace_event(kind: str, payload: dict) -> None:
+    """Emit one structured event; silent no-op when disabled."""
+    run = _CURRENT[0]
+    if run is not None:
+        run.event(kind, payload)
+
+
+def counter(name: str) -> Counter:
+    run = _CURRENT[0]
+    if run is None:
+        return Counter()          # throwaway: off means off
+    return run.counters.setdefault(name, Counter())
+
+
+def gauge(name: str) -> Gauge:
+    run = _CURRENT[0]
+    if run is None:
+        return Gauge()
+    return run.gauges.setdefault(name, Gauge())
+
+
+def histogram(name: str) -> Histogram:
+    run = _CURRENT[0]
+    if run is None:
+        return Histogram()
+    return run.histograms.setdefault(name, Histogram())
+
+
+# ---------------------------------------------------------------------------
+# jit-side drain
+# ---------------------------------------------------------------------------
+
+def drain(kind: str, **arrays) -> None:
+    """Ship named on-device arrays to the trace as one event — callable
+    *inside* a jitted function.
+
+    When a run is active at trace time this stages one unordered
+    `jax.experimental.io_callback` (kept by its IO effect, executed
+    once per call of the compiled program); the callback looks up the
+    run again at *call* time, so a program compiled while enabled goes
+    quiet — without retracing — the moment the run closes. When no run
+    is active this is a plain no-op: nothing is staged, the jaxpr is
+    untouched. Call sites gate on a static ``telemetry`` argument fed
+    from `enabled()`, which keeps the compile cache keyed consistently
+    with the switch.
+    """
+    if not enabled():
+        return
+    from jax.experimental import io_callback
+
+    names = tuple(arrays)
+
+    def _sink(*vals):
+        run = _CURRENT[0]
+        if run is not None:
+            run.event(kind, {n: np.asarray(v)
+                             for n, v in zip(names, vals)})
+
+    io_callback(_sink, None, *arrays.values(), ordered=False)

@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.dispatch import (DispatchConfig, DispatchInfeasible,
                             build_problem)
 from repro.dispatch import dispatch as dispatch_solve
@@ -99,6 +100,14 @@ class TuneConfig(NamedTuple):
     shard: bool = True           # shard_map rows over available devices
                                  # (auto: engages when >1 device and no
                                  # coupling penalty; bit-identical)
+    eval_stages: int = 4         # hard (tau -> 0) re-evaluations spread
+                                 # over the anneal: the scan splits into
+                                 # this many segments (same per-step
+                                 # ops; trajectories agree to float
+                                 # round-off across stage counts) with
+                                 # a hard CPC re-eval at each boundary
+                                 # -> TuneResult.stage_cpc; clamped to
+                                 # [1, steps]
     # fleet-coupling penalties (None disables)
     power_cap_mw: Optional[float] = None
     min_up_hours: Optional[float] = None
@@ -135,6 +144,10 @@ class TuneResult(NamedTuple):
     improvement_vs_own: np.ndarray    # 1 - cpc / cpc_swept
     source: np.ndarray           # 0 = tuned, 1 = own swept, 2 = cell best
     history: dict                # per-step arrays: loss, tau, penalty
+    # mean hard CPC at each anneal-stage boundary ([cfg.eval_stages],
+    # last entry == mean(cpc_tuned)) — the convergence curve the soft
+    # loss cannot show (chunked runs report the mean over row chunks)
+    stage_cpc: Optional[np.ndarray] = None
     # feasible-dispatch re-evaluation (None unless cfg.dispatch or
     # cfg.dispatch_soft given): {"cpc_tuned", "cpc_swept", "chosen",
     # "tuned", "swept", "rows", "site_names", "infeasible_*"} where
@@ -170,14 +183,35 @@ def _hard_cpc_rows(p_on, p_off, off_level, problem: TuneProblem
 hard_cpc = jax.jit(_hard_cpc_rows)
 
 
+def _stage_bounds(cfg: TuneConfig) -> list:
+    """Step indices of the anneal-stage boundaries: ``eval_stages``
+    near-equal segments of [0, steps] (strictly increasing — clamped to
+    at most one stage per step)."""
+    stages = max(1, min(int(cfg.eval_stages), cfg.steps))
+    return [(i * cfg.steps) // stages for i in range(stages + 1)]
+
+
 def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
-               coupling: Optional[DispatchCoupling] = None):
-    """The tuner hot loop: annealed Adam scan + hard re-evaluation.
+               coupling: Optional[DispatchCoupling] = None,
+               telemetry: bool = False):
+    """The tuner hot loop: annealed Adam scan + hard re-evaluations.
 
     Traced under plain jit (single program), under `shard_map` (one
     shard of rows), and per chunk — identical per-row math in all
     three, which is what makes the scaled-out paths bit-consistent
     (``coupling`` is only ever non-None in the single program).
+
+    The step scan runs as ``cfg.eval_stages`` back-to-back `lax.scan`
+    segments over the one tau schedule — the per-step ops are the same,
+    so trajectories agree across stage counts to float round-off
+    (segment boundaries change XLA fusion, hence ULP-level rather than
+    bitwise) — with the *hard* (tau -> 0)
+    CPC re-evaluated at each boundary (``history["stage_cpc"]``,
+    [stages]; its last entry is the final hard re-eval, so the stage
+    curve is free). ``telemetry`` adds per-step grad-norm / clip-
+    fraction side-outputs to the history — observers of values the
+    update already computes, never inputs to it, keeping the tuned
+    parameters bit-identical (asserted in tests/test_obs.py).
     Returns ``(raw_f, history, cpc_tuned)``.
     """
     b = raw0.raw_off.shape[0]
@@ -209,30 +243,54 @@ def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
             dispatch_min_dwell=min_dwell,
             dispatch_mw_scale=cfg.dispatch_mw_scale,
             fused=cfg.fused, block_t=cfg.block_t, reduction="sum")
+        out = {"loss": loss / b, "tau": tau,
+               "penalty": aux["penalty"],
+               "dispatch_ratio": aux["dispatch_ratio"]}
+        if telemetry:
+            # observers only: read the gradients the update consumes,
+            # feed nothing back
+            norm = jnp.sqrt(grads.raw_off ** 2 + grads.raw_gap ** 2
+                            + grads.raw_lvl ** 2)            # [B]
+            out["grad_norm"] = jnp.mean(norm)
+            out["clip_frac"] = (
+                jnp.mean((norm > cfg.clip_norm).astype(norm.dtype))
+                if cfg.clip_norm else jnp.zeros((), norm.dtype))
         raw, st = vupdate(grads, st, raw)
-        return (raw, st), {"loss": loss / b, "tau": tau,
-                           "penalty": aux["penalty"],
-                           "dispatch_ratio": aux["dispatch_ratio"]}
+        return (raw, st), out
 
-    (raw_f, _), hist = jax.lax.scan(step, (raw0, state0),
-                                    _tau_schedule(cfg))
-    tuned = transform(raw_f)
-    cpc_tuned = _hard_cpc_rows(tuned.p_on, tuned.p_off, tuned.off_level,
-                               problem)
-    return raw_f, hist, cpc_tuned
+    taus = _tau_schedule(cfg)
+    bounds = _stage_bounds(cfg)
+    carry = (raw0, state0)
+    hists, stage_cpc = [], []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        carry, h = jax.lax.scan(step, carry, taus[lo:hi])
+        hists.append(h)
+        ph = transform(carry[0])
+        cpc_rows = _hard_cpc_rows(ph.p_on, ph.p_off, ph.off_level,
+                                  problem)
+        stage_cpc.append(jnp.mean(cpc_rows))
+    raw_f = carry[0]
+    hist = hists[0] if len(hists) == 1 else \
+        jax.tree.map(lambda *xs: jnp.concatenate(xs), *hists)
+    hist["stage_cpc"] = jnp.stack(stage_cpc)
+    # cpc_rows from the last stage IS the final hard re-evaluation
+    return raw_f, hist, cpc_rows
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0,))
+@functools.partial(jax.jit, static_argnames=("cfg", "telemetry"),
+                   donate_argnums=(0,))
 def tune_loop(raw0: PolicyParams, problem: TuneProblem,
               coupling: Optional[DispatchCoupling] = None, *,
-              cfg: TuneConfig):
+              cfg: TuneConfig, telemetry: bool = False):
     """One compiled tuning program: τ-annealed Adam over all rows plus
-    the hard re-evaluation, with the raw-parameter carry donated (the
-    Adam scan reuses its buffers instead of allocating fresh ones each
-    call). ``coupling`` (from `dispatch_coupling_from_grid`) switches
-    on the dispatch-aware fleet term. This is the object
-    `benchmarks/bench_tune.py` times."""
-    return _loop_body(raw0, problem, cfg, coupling)
+    the staged hard re-evaluations, with the raw-parameter carry donated
+    (the Adam scan reuses its buffers instead of allocating fresh ones
+    each call). ``coupling`` (from `dispatch_coupling_from_grid`)
+    switches on the dispatch-aware fleet term. ``telemetry`` is static:
+    False (the default, and whenever `repro.obs` is disabled) compiles
+    the exact pre-telemetry program with no extra side-outputs. This is
+    the object `benchmarks/bench_tune.py` times."""
+    return _loop_body(raw0, problem, cfg, coupling, telemetry)
 
 
 _PROBLEM_ROW_FIELDS = tuple(f for f in TuneProblem._fields
@@ -248,8 +306,9 @@ def _take_problem(problem: TuneProblem, idx: np.ndarray) -> TuneProblem:
 
 
 @functools.cache
-def _sharded_loop(n_dev: int, cfg: TuneConfig):
-    """jit(shard_map(loop)) over a 1-D row mesh, cached per (n_dev, cfg).
+def _sharded_loop(n_dev: int, cfg: TuneConfig, telemetry: bool = False):
+    """jit(shard_map(loop)) over a 1-D row mesh, cached per
+    (n_dev, cfg, telemetry).
 
     Per-shard histories come back stacked [n_dev, steps]; the caller
     averages them (equal shard sizes)."""
@@ -257,7 +316,8 @@ def _sharded_loop(n_dev: int, cfg: TuneConfig):
     rows = P("rows")
 
     def body(raw0, problem):
-        raw_f, hist, cpc = _loop_body(raw0, problem, cfg)
+        raw_f, hist, cpc = _loop_body(raw0, problem, cfg,
+                                      telemetry=telemetry)
         return raw_f, {k: v[None] for k, v in hist.items()}, cpc
 
     in_specs = (rows, TuneProblem(
@@ -269,7 +329,8 @@ def _sharded_loop(n_dev: int, cfg: TuneConfig):
 
 def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
               n_rows: int,
-              coupling: Optional[DispatchCoupling] = None):
+              coupling: Optional[DispatchCoupling] = None,
+              telemetry: bool = False):
     """Dispatch the hot loop over the single / sharded / chunked path.
 
     Per-row math is identical in all three (sum-reduction makes each
@@ -310,7 +371,7 @@ def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
         for sl in row_chunks(n_rows, cfg.chunk_rows):
             raw_j = jax.tree.map(lambda x: jnp.asarray(x)[sl], raw0)
             r, h, cp = tune_loop(raw_j, _take_problem(problem, sl),
-                                 cfg=cfg)
+                                 cfg=cfg, telemetry=telemetry)
             raws.append(r)
             hists.append(h)
             cpcs.append(cp)
@@ -332,11 +393,13 @@ def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
         n_dev = next((d for d in range(min(n_avail, n_rows // 2), 0, -1)
                       if n_rows % d == 0), 1)
         if n_dev > 1:
-            raw_f, hist, cpc = _sharded_loop(n_dev, cfg)(raw0, problem)
+            raw_f, hist, cpc = _sharded_loop(n_dev, cfg,
+                                             telemetry)(raw0, problem)
             return raw_f, {k: np.asarray(v).mean(axis=0)
                            for k, v in hist.items()}, cpc
 
-    raw_f, hist, cpc = tune_loop(raw0, problem, coupling, cfg=cfg)
+    raw_f, hist, cpc = tune_loop(raw0, problem, coupling, cfg=cfg,
+                                 telemetry=telemetry)
     return raw_f, {k: np.asarray(v) for k, v in hist.items()}, cpc
 
 
@@ -437,12 +500,15 @@ def optimize(grid, cfg: TuneConfig = TuneConfig()) -> TuneResult:
     against the best-swept set — so the reported fleet CPC under hard
     dispatch is never worse than the swept baseline's.
     """
+    telemetry = obs.enabled()
     problem = problem_from_grid(grid)
     raw0 = init_from_grid(grid)
     coupling = dispatch_coupling_from_grid(grid, cfg.dispatch_soft) \
         if cfg.dispatch_soft is not None else None
     raw_f, hist, cpc_tuned_dev = _run_loop(raw0, problem, cfg,
-                                           grid.n_rows, coupling)
+                                           grid.n_rows, coupling,
+                                           telemetry)
+    stage_cpc = np.asarray(hist.pop("stage_cpc"), np.float64)
     cpc_tuned = np.asarray(cpc_tuned_dev, np.float64)
 
     # hard re-evaluation of the swept baselines at tau -> 0
@@ -490,9 +556,46 @@ def optimize(grid, cfg: TuneConfig = TuneConfig()) -> TuneResult:
         dispatch_out = _dispatch_reeval(grid, params, cpc, best_row,
                                         reeval_cfg)
 
-    return TuneResult(
+    result = TuneResult(
         params=params, raw=raw_f, cpc=cpc, cpc_tuned=cpc_tuned,
         cpc_swept=cpc_swept, cpc_swept_best=cpc_swept_best,
         improvement_vs_best=1.0 - cpc / cpc_swept_best,
         improvement_vs_own=1.0 - cpc / cpc_swept,
-        source=source, history=hist, dispatch=dispatch_out)
+        source=source, history=hist, stage_cpc=stage_cpc,
+        dispatch=dispatch_out)
+    if telemetry:
+        _emit_tune_events(cfg, result)
+    return result
+
+
+def _emit_tune_events(cfg: TuneConfig, res: TuneResult) -> None:
+    """Stream the finished run's history into the trace: one
+    ``tune.step`` per optimization step (loss / tau / penalty, plus
+    grad-norm and clip-fraction — present because the loop ran with its
+    telemetry side-outputs), one ``tune.stage`` per hard re-eval
+    boundary, one ``tune.result``."""
+    hist = res.history
+    step_keys = [k for k in ("loss", "tau", "penalty", "dispatch_ratio",
+                             "grad_norm", "clip_frac") if k in hist]
+    for i in range(len(hist["loss"])):
+        obs.trace_event("tune.step",
+                        {"step": i,
+                         **{k: float(hist[k][i]) for k in step_keys}})
+        if "grad_norm" in hist:
+            obs.histogram("tune.grad_norm").observe(hist["grad_norm"][i])
+    bounds = _stage_bounds(cfg)
+    for k, v in enumerate(res.stage_cpc):
+        obs.trace_event("tune.stage", {"stage": k,
+                                       "through_step": bounds[k + 1],
+                                       "cpc_hard_mean": float(v)})
+    src_names = ("tuned", "own_swept", "cell_best")
+    obs.trace_event("tune.result", {
+        "rows": int(res.cpc.shape[0]), "steps": cfg.steps,
+        "cpc_mean": float(np.mean(res.cpc)),
+        "cpc_tuned_mean": float(np.mean(res.cpc_tuned)),
+        "cpc_swept_best_mean": float(np.mean(res.cpc_swept_best)),
+        "improvement_vs_best_mean": float(np.mean(res.improvement_vs_best)),
+        "source_counts": {src_names[s]: int(n) for s, n in
+                          zip(*np.unique(res.source, return_counts=True))}})
+    obs.gauge("tune.cpc_mean").set(float(np.mean(res.cpc)))
+    obs.counter("tune.runs").inc()

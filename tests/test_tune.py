@@ -245,6 +245,36 @@ def test_tuned_matches_or_beats_best_swept_on_every_row():
                   <= np.asarray(res.params.p_off) + 1e-6)
     lvl = np.asarray(res.params.off_level)
     assert np.all((lvl >= 0.0) & (lvl < 1.0))
+    # staged hard re-evaluations ride along whether or not telemetry is
+    # on: [eval_stages] finite means, the last being the final hard
+    # re-eval itself
+    assert res.stage_cpc.shape == (TuneConfig().eval_stages,)
+    assert np.isfinite(res.stage_cpc).all()
+    np.testing.assert_allclose(res.stage_cpc[-1],
+                               np.asarray(res.cpc_tuned).mean(),
+                               rtol=1e-5)
+
+
+def test_stage_cpc_staging_leaves_trajectory_unchanged():
+    """Splitting the Adam scan into eval_stages segments runs the same
+    per-step ops in the same order — trajectories agree to float32
+    round-off for any stage count (segment boundaries change XLA fusion,
+    so agreement is ULP-level rather than bitwise) and the stage curve's
+    last entry is the final hard re-eval."""
+    grid = build_grid([MarketParams(n_hours=300, seed=5)],
+                      [make_system(0.8 * 300 * 1.0 * 80.0, 1.0, 300.0)],
+                      [PolicySpec("x5", x=0.05), PolicySpec("x20", x=0.2)])
+    res1 = optimize(grid, TuneConfig(steps=24, eval_stages=1, shard=False))
+    res3 = optimize(grid, TuneConfig(steps=24, eval_stages=3, shard=False))
+    assert res1.stage_cpc.shape == (1,)
+    assert res3.stage_cpc.shape == (3,)
+    for field in res1.raw._fields:
+        np.testing.assert_allclose(np.asarray(getattr(res1.raw, field)),
+                                   np.asarray(getattr(res3.raw, field)),
+                                   rtol=1e-6, atol=1e-6, err_msg=field)
+    np.testing.assert_allclose(res1.cpc_tuned, res3.cpc_tuned, rtol=1e-6)
+    np.testing.assert_allclose(res1.stage_cpc[-1], res3.stage_cpc[-1],
+                               rtol=1e-6)
 
 
 def test_min_up_hours_penalty_shifts_optimum():
