@@ -43,7 +43,8 @@ LOW_WATER = 0.5           # --reset seeds baseline at median x this:
 # are fixed-seed deterministic (medians of identical values only burn
 # CI time)
 def _suites():
-    from benchmarks import bench_dispatch, bench_fleet, bench_tune
+    from benchmarks import (bench_dispatch, bench_fleet, bench_live,
+                            bench_tune)
     return {
         # shapes sized so the fused calls take tens of ms: smaller smoke
         # runs time nothing but host jitter and the gate flakes
@@ -88,6 +89,19 @@ def _suites():
             ("cpc_rescore", "cpc_aware", "chosen_rescore",
              "chosen_aware", "rows", "steps"),
             1),   # fixed-seed deterministic: one run suffices
+        # gates the live controller's batched-scan edge over the
+        # per-hour Python re-plan loop (both re-solve families in the
+        # baseline, weighted by the sweep mix) — the number that makes
+        # a controller-design sweep affordable; it collapses if the
+        # outer scan is ever unrolled back to host steps
+        "bench_live": (
+            bench_live.bench_live,
+            dict(n_markets=2, hours=1024, baseline_hours=128,
+                 repeats=2),
+            ("speedup_live",),
+            ("controller_hours_per_s_jitted",
+             "controller_hours_per_s_python", "rows",
+             "frac_tuned_rows", "cpc_mean")),
     }
 
 

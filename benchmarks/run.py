@@ -10,8 +10,8 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (bench_dispatch, bench_fleet, bench_runtime,
-                        bench_tune, paper_figures)
+from benchmarks import (bench_dispatch, bench_fleet, bench_live,
+                        bench_runtime, bench_tune, paper_figures)
 from benchmarks.common import ARTIFACTS
 
 
@@ -27,6 +27,7 @@ def main() -> int:
         suites.update(bench_fleet.ALL)
         suites.update(bench_dispatch.ALL)
         suites.update(bench_tune.ALL)
+        suites.update(bench_live.ALL)
         suites.update(bench_runtime.ALL)
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}
@@ -119,6 +120,11 @@ def _headline(name: str, out: dict) -> str:
                 f"{out['cpc_rescore']:.2f} "
                 f"(edge x{out['dispatch_cpc_edge']:.4f}), FD-grad "
                 f"margin {out['fd_grad_margin']:.0f}")
+    if name == "bench_live":
+        return (f"{out['rows']} controllers x {out['hours']} h: "
+                f"{out['controller_hours_per_s_jitted']:.0f} ctrl-h/s "
+                f"jitted vs {out['controller_hours_per_s_python']:.0f} "
+                f"python re-plan (x{out['speedup_live']:.0f})")
     if name == "step_time":
         return ", ".join(f"{k}: {v['s_per_step']:.2f}s"
                          for k, v in out.items())

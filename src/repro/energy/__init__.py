@@ -10,6 +10,9 @@ paper's published statistics (see `repro.core.calibration`).
 """
 
 from repro.energy.ensemble import block_bootstrap
+from repro.energy.forecast import (mae, mase, seasonal_naive,
+                                   seasonal_naive_batch, similar_day_ar,
+                                   similar_day_ar_batch)
 from repro.energy.markets import MarketParams, generate_market, MarketData
 from repro.energy.stream import PriceStream
 from repro.energy.presets import region_params, REGION_PRESETS
@@ -22,4 +25,10 @@ __all__ = [
     "block_bootstrap",
     "region_params",
     "REGION_PRESETS",
+    "seasonal_naive",
+    "seasonal_naive_batch",
+    "similar_day_ar",
+    "similar_day_ar_batch",
+    "mae",
+    "mase",
 ]

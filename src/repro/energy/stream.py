@@ -4,9 +4,18 @@ A ``PriceStream`` replays a (real or synthetic) hourly series at an
 arbitrary simulated clock rate and exposes the trailing window the
 ``EnergyAwareScheduler`` needs to re-estimate the PV set online. It is
 plain Python (host-side control plane) — device code never sees prices.
+
+Lookahead follows the day-ahead market contract: the exchange clears
+once per day (EPEX SPOT / Nord Pool publish around 13:00) and the
+result covers all 24 hours of the *next* delivery day. Before
+``publish_hour`` the stream therefore only knows prices through the end
+of the current day; after it, through the end of the next day. ``peek``
+truncates to that boundary instead of leaking perfect foresight.
 """
 
 from __future__ import annotations
+
+from typing import Iterator, Optional
 
 import numpy as np
 
@@ -21,20 +30,34 @@ class PriceStream:
     window : int
         trailing window length used for online PV estimation.
     start : int
-        starting index into the series.
+        starting index into the series (index 0 is hour 0 of a day).
+    publish_hour : int or None
+        local hour at which the day-ahead auction result for the next
+        delivery day becomes visible (default 13, the EPEX/Nord Pool
+        gate-closure convention). ``None`` disables the publication
+        gate and restores unlimited lookahead (backtests that *want*
+        perfect foresight must now ask for it explicitly).
     """
 
-    def __init__(self, prices, window: int = 24 * 28, start: int = 0):
+    def __init__(self, prices, window: int = 24 * 28, start: int = 0,
+                 publish_hour: Optional[int] = 13):
         self.prices = np.asarray(prices, dtype=np.float64)
         if self.prices.ndim != 1 or self.prices.shape[0] < 2:
             raise ValueError("prices must be a 1-D series")
+        if publish_hour is not None and not 0 <= int(publish_hour) < 24:
+            raise ValueError("publish_hour must be in [0, 24) or None")
         self.window = int(window)
+        self.publish_hour = (None if publish_hour is None
+                             else int(publish_hour))
         self._start = int(start)
         self._hours = 0.0            # fractional hours accumulate exactly
 
     @property
     def pos(self) -> int:
         return self._start + int(self._hours)
+
+    def __len__(self) -> int:
+        return len(self.prices)
 
     def current(self) -> float:
         return float(self.prices[self.pos % len(self.prices)])
@@ -50,9 +73,44 @@ class PriceStream:
         (a 0.02 h serving tick still crosses hour boundaries on time)."""
         self._hours += float(hours)
 
+    def reset(self) -> None:
+        """Rewind to the construction position for deterministic replay."""
+        self._hours = 0.0
+
+    def published_through(self) -> int:
+        """Last absolute index whose price is published at the current
+        hour under the day-ahead contract: the end of today, plus all of
+        tomorrow once the auction result is out (``pos`` hour-of-day >=
+        ``publish_hour``)."""
+        if self.publish_hour is None:
+            return self.pos + len(self.prices)   # effectively unlimited
+        pos = self.pos
+        day_end = (pos // 24) * 24 + 23
+        if pos % 24 >= self.publish_hour:
+            day_end += 24
+        return day_end
+
+    @property
+    def available_lookahead(self) -> int:
+        """How many future samples ``peek`` can currently return."""
+        return max(0, self.published_through() - self.pos)
+
     def peek(self, horizon: int) -> np.ndarray:
-        """Day-ahead style lookahead (spot markets publish next-day prices
-        at ~13:00; the scheduler may use up to `horizon` future samples)."""
+        """Published future prices, up to ``horizon`` samples.
+
+        Returns *at most* ``min(horizon, available_lookahead)`` samples
+        — possibly zero-length early in the day. Callers needing a fixed
+        length should pad with a forecast (`repro.energy.forecast`).
+        """
         n = len(self.prices)
+        horizon = min(int(horizon), self.available_lookahead)
         idx = (np.arange(self.pos + 1, self.pos + 1 + horizon)) % n
         return self.prices[idx]
+
+    def __iter__(self) -> Iterator[float]:
+        """Yield one hourly sample per step from the current position,
+        advancing the stream — one full pass over the series. Does not
+        rewind first; call `reset` for replay from the start."""
+        for _ in range(len(self.prices)):
+            yield self.current()
+            self.advance(1.0)

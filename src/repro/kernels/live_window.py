@@ -1,0 +1,94 @@
+"""Horizon-windowed variants of the fleet/dispatch inner steps.
+
+The offline engines scan a *known* [T]-hour trace once. The live
+operator (`repro.live`) instead re-plans every simulated hour over an
+H-hour *forecast* window, then commits only the first hour — so it
+needs the same per-hour math (`hard_hour_step`, `dispatch_alloc_hour`,
+both shared verbatim with the offline kernels) orchestrated as short
+in-jit window scans that start from a carried state and run entirely on
+forecast data.
+
+These are pure-JAX (no new Pallas kernels): the windows are tens of
+hours, the outer live loop is already one jitted `lax.scan`, and the
+hot-path property the repo benchmarks is the jitted batched outer loop
+vs a per-hour Python re-plan (`benchmarks/bench_live.py`) — not an
+inner-window kernel. The segment sort moves in-jit here
+(`segment_keys_jnp`/`segment_rank_jnp`) because forecast prices only
+exist inside the scan; ordering is invariant to the span constant as
+long as it exceeds the price span plus the fee, so any host-side
+``span`` upper bound over the full trace keeps the in-jit order
+identical to the host `repro.dispatch.segment_rank` order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import dispatch_alloc_hour, hard_hour_step
+
+
+def segment_keys_jnp(p_t, migrate_cost, span):
+    """In-jit mirror of `repro.dispatch.segment_keys` for one hour:
+    ``p_t [..., S] -> keys [..., 3S]`` (locked below everything by
+    ``span``, retained at ``p - migrate_cost``, fresh at ``p``).
+    ``span`` must exceed the *global* price span plus ``|migrate_cost|``
+    (host-computed once over the full trace); the key ordering — the
+    only thing the fill consumes — is then independent of its value."""
+    return jnp.concatenate([p_t - span, p_t - migrate_cost, p_t], axis=-1)
+
+
+def segment_rank_jnp(keys):
+    """Ascending sort permutation and its inverse of one hour's segment
+    keys (in-jit counterpart of `repro.dispatch.segment_rank`). JAX's
+    argsort is stable, so ties resolve by segment position exactly like
+    the host path."""
+    order = jnp.argsort(keys, axis=-1).astype(jnp.int32)
+    return order, jnp.argsort(order, axis=-1).astype(jnp.int32)
+
+
+def plan_on_window(on0, prices_w, p_on, p_off, off_level, idle_frac):
+    """Roll the hard shutdown state machine over an H-hour (forecast)
+    window from the carried state ``on0`` — the windowed variant of the
+    `fleet_scan_ref` inner step, elementwise over any leading batch.
+
+    prices_w: [..., H]; on0 and the policy fields broadcast against its
+    leading shape. Returns ``(on_last, cap_w, draw_w)`` with cap/draw
+    shaped like ``prices_w`` — the planned capacity trajectory a
+    dispatch plan prices against.
+    """
+    def step(on, p_t):
+        on, _, cap, draw = hard_hour_step(on, p_t, p_on, p_off,
+                                          off_level, idle_frac)
+        return on, (cap, draw)
+
+    on_last, (cap_w, draw_w) = jax.lax.scan(
+        step, on0, jnp.moveaxis(prices_w, -1, 0))
+    return (on_last, jnp.moveaxis(cap_w, 0, -1),
+            jnp.moveaxis(draw_w, 0, -1))
+
+
+def dispatch_window(prev, dwell, avail_w, keys_w, demand_w, *,
+                    min_dwell: int):
+    """Greedy water-fill over an H-hour window from a carried dispatch
+    state — the windowed variant of the `dispatch_ref` scan, built on
+    the same `dispatch_alloc_hour` (so an H=1 window with a fresh carry
+    is exactly one offline fill hour; pinned in tests/test_live.py).
+
+    prev/dwell: [S] carried allocation and dwell locks entering the
+    window; avail_w: [S, H]; keys_w: [H, 3S] (from `segment_keys_jnp`
+    on forecast prices); demand_w: [H]. Returns ``(alloc_w [S, H],
+    prev', dwell')`` — the planned allocation and the state the *next*
+    window would start from if the whole plan were executed.
+    """
+    def step(carry, inp):
+        prev, dwell = carry
+        a_t, k_t, d_t = inp
+        order, rank = segment_rank_jnp(k_t)
+        alloc, dwell = dispatch_alloc_hour(prev, dwell, a_t, order, rank,
+                                           d_t, min_dwell=min_dwell)
+        return (alloc, dwell), alloc
+
+    (prev, dwell), alloc_h = jax.lax.scan(
+        step, (prev, dwell), (avail_w.T, keys_w, demand_w))
+    return alloc_h.T, prev, dwell

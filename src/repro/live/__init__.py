@@ -1,0 +1,47 @@
+"""Live fleet operator: batched rolling-horizon control under forecast
+uncertainty.
+
+Every offline result in this repo tunes and dispatches against a fully
+known price year — perfect-foresight numbers the paper never qualifies.
+This subsystem is the missing control plane: a receding-horizon
+controller that each simulated hour (1) forecasts the next H hours from
+the trailing published window (`repro.energy.forecast`, batched),
+(2) re-solves shutdown thresholds — and, via `repro.live.fleet`,
+cross-site dispatch — against the forecast at a configurable cadence,
+and (3) realizes costs on the *true* trace, carrying on/off state,
+dwell locks and restart overheads across the horizon boundary. The
+whole outer loop is one jitted `lax.scan` over hours, vectorized over
+thousands of controller instances (forecaster x horizon x cadence x
+policy-family x market grid rows), so a full controller-design sweep is
+a single program (`benchmarks/bench_live.py` gates its throughput edge
+over a per-hour Python re-plan loop).
+
+Two re-solve paths exist on purpose:
+
+  * the in-scan **families** (`LiveGrid.family_id`): quantile
+    re-resolution and a short warm-started Adam descent whose moments
+    live in the scan carry — fully batched, one program;
+  * the host-level path `repro.tune.optimize(warm_start=...)`, the full
+    annealed tuner re-entered from the previous tick's solution —
+    demonstrated by ``examples/live_operator.py --retune``, for when
+    one fleet's re-tune is worth a host round-trip per cadence tick.
+
+Scoring (`summarize_live`) reports realized CPC, regret vs the
+clairvoyant hindsight oracle and vs the offline-tuned policy, forecast
+MAE/MASE attribution, and decision churn; every hourly decision lands
+in the `repro.obs` trace as ``live.step`` / ``live.result`` events.
+
+  quickstart:  PYTHONPATH=src python examples/live_operator.py --smoke
+"""
+
+from repro.live.controller import (LiveConfig, LiveResult, live_backtest)
+from repro.live.fleet import LiveFleetResult, live_fleet_dispatch
+from repro.live.grid import (FAMILIES, FORECASTERS, LiveGrid,
+                             build_live_grid)
+from repro.live.report import (LiveSummary, hindsight_cpc, offline_cpc,
+                               summarize_live)
+
+__all__ = ["FAMILIES", "FORECASTERS", "LiveConfig", "LiveFleetResult",
+           "LiveGrid", "LiveResult", "LiveSummary", "build_live_grid",
+           "hindsight_cpc", "live_backtest", "live_fleet_dispatch",
+           "offline_cpc", "summarize_live"]

@@ -1,0 +1,278 @@
+"""The receding-horizon live controller: one jitted scan over hours,
+vectorized over every controller instance of a `LiveGrid`.
+
+Each simulated hour ``t`` (decision first, realization second — the
+day-ahead market has published prices through the current hour, so the
+trailing window ends *at* ``t`` and the forecast covers ``t+1..t+H``):
+
+  1. **Forecast.** The [N, season+1] trailing window of every market is
+     gathered (mod-``T``, circular trace semantics) and all four
+     forecasters run batched (`repro.energy.forecast` ``*_batch``
+     paths); each row then selects its own forecaster's view of its own
+     market with one advanced-indexing gather.
+  2. **Re-solve.** On the row's cadence tick, the committed thresholds
+     are re-solved against the forecast window: the *quantile* family
+     re-resolves the policy's shutdown fraction on the window's PV set
+     (a masked descending sort, exactly mirroring
+     `repro.fleet.grid._resolve_threshold` at n = horizon), the *tuned*
+     family runs ``inner_steps`` warm-started Adam steps on the relaxed
+     per-window CPC (the in-scan analog of
+     `repro.tune.optimize(warm_start=...)` — Adam moments and step
+     counts live in the scan carry, so every cadence tick continues the
+     previous descent instead of cold-starting). Rows with ``x <= 0``
+     never commit (offline control arms).
+  3. **Realize.** The committed thresholds drive one `hard_hour_step`
+     at the *true* price; on/off state, restart events and the four
+     `FleetScanOut` sums carry across the horizon boundary in the scan
+     state, so costs are realized exactly like the offline backtest.
+
+Cost assembly reuses `repro.fleet.engine.fleet_costs` with every
+period-extensive quantity scaled by ``hours / T`` — a live window that
+covers the full trace with a perfect forecaster therefore reproduces
+the offline `backtest` numbers bit for bit (pinned in
+tests/test_live.py).
+
+Telemetry follows the `repro.obs` contract: per-hour fleet aggregates
+are computed *only* when the static ``telemetry`` flag is set (off
+means off — the scan carries no extra outputs), drained as one
+``live.step`` io_callback after the scan, and feed nothing back, so
+results are bit-identical on vs off.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.energy.forecast import (seasonal_naive_batch,
+                                   similar_day_ar_batch)
+from repro.fleet.engine import fleet_costs
+from repro.kernels.ref import FleetScanOut, hard_hour_step
+from repro.live.grid import LiveGrid
+
+
+class LiveConfig(NamedTuple):
+    """Static controller configuration (hashable — a jit-static arg,
+    like `repro.tune.TuneConfig`).
+
+    ``start``/``hours`` select the live window of the trace;
+    ``season`` the forecasters' seasonal period (168 = weekly);
+    ``inner_*`` the tuned family's per-cadence-tick Adam budget;
+    ``churn_tol`` the threshold change (EUR/MWh) that counts as a
+    decision churn event."""
+
+    start: int = 0
+    hours: int = 336
+    season: int = 168
+    inner_steps: int = 4
+    inner_lr: float = 2.0
+    inner_tau: float = 5.0
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    churn_tol: float = 1e-3
+
+
+class LiveResult(NamedTuple):
+    """Per-controller-row outcome of a live run (all [B])."""
+
+    cpc: jax.Array            # realized cost-per-compute on the window
+    cpc_ao: jax.Array         # always-on baseline on the same window
+    tco: jax.Array
+    energy_cost: jax.Array
+    restart_cost: jax.Array
+    up_hours: jax.Array
+    n_starts: jax.Array
+    n_stops: jax.Array
+    x_realized: jax.Array     # realized shutdown fraction
+    p_off_final: jax.Array    # last committed threshold
+    threshold_updates: jax.Array  # commits that moved p_off > churn_tol
+    mae1: jax.Array           # one-step-ahead forecast MAE
+    mae_h: jax.Array          # mean MAE over the full horizon
+    mase1: jax.Array          # mae1 / seasonal-naive one-step MAE
+
+
+def _window_cpc_grad(p_off, fc, hmask, off_level, idle_frac, power,
+                     fixed_h, dt, inv_tau):
+    """Per-row gradient of the relaxed CPC on the forecast window.
+
+    The window objective is per-hour independent (no hysteresis memory
+    — a deliberate simplification of the offline soft scan that keeps
+    the in-scan re-tune one sigmoid deep), so grad-of-sum gives every
+    row its own gradient in one backward pass."""
+    def total(po):
+        s = jax.nn.sigmoid((po[:, None] - fc) * inv_tau)
+        cap = off_level[:, None] + (1.0 - off_level[:, None]) * s
+        draw = cap + idle_frac[:, None] * (1.0 - cap)
+        num = fixed_h + dt * power * jnp.sum(
+            jnp.where(hmask, draw * fc, 0.0), axis=1)
+        den = jnp.maximum(dt * jnp.sum(jnp.where(hmask, cap, 0.0),
+                                       axis=1), 1e-9)
+        return jnp.sum(num / den)
+
+    return jax.grad(total)(p_off)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "h_max", "telemetry"))
+def _live_scan(prices, market_idx, fixed, power, period, p_on0, p_off0,
+               off_level, idle_frac, forecaster_id, horizon, cadence,
+               family_id, x, hysteresis, *, cfg: LiveConfig, h_max: int,
+               telemetry: bool = False):
+    t_total = prices.shape[1]
+    b = market_idx.shape[0]
+    w = cfg.season + 1                      # window: one season + "now"
+    h = h_max
+    dt = period / t_total                   # hours per sample, per row
+    fixed_h = fixed * (horizon.astype(jnp.float32) / t_total)
+    inv_tau = 1.0 / jnp.float32(cfg.inner_tau)
+    p_max_rows = jnp.max(prices, axis=1)[market_idx]
+    resolvable = x > 0.0
+    tuned_row = resolvable & (family_id == 1)
+    hmask = (jnp.arange(h, dtype=jnp.int32)[None, :]
+             < horizon[:, None])            # [B, H]
+    # quantile index, mirroring _resolve_threshold at n = horizon
+    hf = horizon.astype(jnp.float32)
+    m_q = jnp.clip(jnp.round(x * hf), 1.0, hf - 1.0).astype(jnp.int32)
+
+    def step(carry, t):
+        (on, p_on_c, p_off_c, po_t, m_t, v_t, tc, acc) = carry
+
+        # --- 1. forecast: every forecaster, every market, batched -----
+        hist = prices[:, (t - w + 1 + jnp.arange(w)) % t_total]  # [N, W]
+        truth = prices[:, (t + 1 + jnp.arange(h)) % t_total]     # [N, H]
+        f_sn = seasonal_naive_batch(hist, h, cfg.season)
+        f_ar = similar_day_ar_batch(hist, h, cfg.season)
+        f_p = jnp.broadcast_to(hist[:, -1:], f_sn.shape)
+        f_all = jnp.stack([f_sn, f_ar, f_p, truth])      # [4, N, H]
+        fc = f_all[forecaster_id, market_idx]            # [B, H]
+        truth_rows = truth[market_idx]                   # [B, H]
+
+        # --- 2. re-solve on the cadence tick --------------------------
+        do_commit = (((t - cfg.start) % cadence) == 0) & resolvable
+
+        # quantile family: descending masked sort; -inf padding sinks
+        # beyond-horizon samples to the tail, so index m-1 < horizon
+        # always hits a real forecast sample
+        desc = -jnp.sort(-jnp.where(hmask, fc, -jnp.inf), axis=1)
+        q_thr = jnp.take_along_axis(desc, (m_q - 1)[:, None],
+                                    axis=1)[:, 0]
+
+        # tuned family: inner_steps warm-started Adam steps on the
+        # relaxed window CPC (moments/counters in the carry)
+        def inner(k, st):
+            po, m, v = st
+            g = _window_cpc_grad(po, fc, hmask, off_level, idle_frac,
+                                 power, fixed_h, dt, inv_tau)
+            g = jnp.where(tuned_row, g, 0.0)
+            m = cfg.adam_b1 * m + (1.0 - cfg.adam_b1) * g
+            v = cfg.adam_b2 * v + (1.0 - cfg.adam_b2) * g * g
+            tck = tc + (k + 1.0)
+            mhat = m / (1.0 - cfg.adam_b1 ** tck)
+            vhat = v / (1.0 - cfg.adam_b2 ** tck)
+            return (po - cfg.inner_lr * mhat
+                    / (jnp.sqrt(vhat) + cfg.adam_eps), m, v)
+
+        po_new, m_new, v_new = jax.lax.fori_loop(
+            0, cfg.inner_steps, inner, (po_t, m_t, v_t))
+        apply_t = do_commit & tuned_row
+        po_t = jnp.where(apply_t, po_new, po_t)
+        m_t = jnp.where(apply_t, m_new, m_t)
+        v_t = jnp.where(apply_t, v_new, v_t)
+        tc = jnp.where(apply_t, tc + cfg.inner_steps, tc)
+
+        cand = jnp.where(family_id == 1, po_t, q_thr)
+        p_off_new = jnp.where(do_commit, cand, p_off_c)
+        p_on_new = jnp.where(
+            do_commit,
+            p_off_new - (1.0 - hysteresis) * jnp.abs(p_off_new),
+            p_on_c)
+        churn = (do_commit
+                 & (jnp.abs(p_off_new - p_off_c) > cfg.churn_tol))
+
+        # --- 3. realize on the true trace -----------------------------
+        p_t = prices[:, t % t_total][market_idx]
+        on_new, st_, cap, draw = hard_hour_step(
+            on, p_t, p_on_new, p_off_new, off_level, idle_frac)
+        stop = jnp.maximum(on - on_new, 0.0)
+
+        err1 = jnp.abs(fc[:, 0] - truth_rows[:, 0])
+        err_h = (jnp.sum(jnp.where(hmask, jnp.abs(fc - truth_rows), 0.0),
+                         axis=1) / hf)
+        naive1 = jnp.abs(f_sn[:, 0] - truth[:, 0])[market_idx]
+
+        acc = (acc[0] + draw * p_t, acc[1] + cap, acc[2] + st_,
+               acc[3] + st_ * p_t, acc[4] + stop,
+               acc[5] + churn.astype(jnp.float32),
+               acc[6] + err1, acc[7] + err_h, acc[8] + naive1)
+        carry = (on_new, p_on_new, p_off_new, po_t, m_t, v_t, tc, acc)
+        if telemetry:
+            ys = (jnp.sum(power * cap), jnp.sum(power * draw * p_t),
+                  jnp.sum(st_) + jnp.sum(stop), jnp.mean(err1),
+                  jnp.sum(do_commit.astype(jnp.float32)))
+        else:
+            ys = None
+        return carry, ys
+
+    zeros = jnp.zeros((b,), jnp.float32)
+    po0 = jnp.where(jnp.isfinite(p_off0), p_off0, p_max_rows)
+    init = (jnp.ones((b,), jnp.float32), p_on0, p_off0, po0,
+            zeros, zeros, zeros, tuple(zeros for _ in range(9)))
+    ts = cfg.start + jnp.arange(cfg.hours, dtype=jnp.int32)
+    (on, p_on_f, p_off_f, *_rest), ys = jax.lax.scan(step, init, ts)
+    acc = _rest[-1]
+    if telemetry:
+        obs.drain("live.step", on_mw=ys[0], cost_rate=ys[1],
+                  transitions=ys[2], abs_err1=ys[3], commits=ys[4])
+    scan_out = FleetScanOut(draw_price_sum=acc[0], up_units=acc[1],
+                            n_starts=acc[2], restart_price_sum=acc[3])
+    return scan_out, acc[4:], p_off_f
+
+
+def live_backtest(lgrid: LiveGrid, cfg: LiveConfig = LiveConfig()
+                  ) -> LiveResult:
+    """Run every controller instance of ``lgrid`` over the live window
+    in one jitted scan and assemble realized costs.
+
+    Window accounting: every period-extensive quantity (fixed cost, the
+    accounting period itself) is scaled by ``hours / T``, so per-sample
+    hours ``dt = period / T`` match the offline backtest and a window
+    covering the whole trace reproduces `repro.fleet.engine.backtest`
+    exactly. Indices wrap mod ``T`` (circular trace): the trailing
+    window before hour ``season`` reads the end of the trace, which is
+    the periodic-boundary convention of the synthetic markets.
+    """
+    grid = lgrid.grid
+    if cfg.hours < 1:
+        raise ValueError("LiveConfig.hours must be >= 1")
+    telemetry = obs.enabled()
+    scan_out, extras, p_off_f = _live_scan(
+        grid.prices, grid.market_idx, grid.fixed, grid.power, grid.period,
+        grid.p_on, grid.p_off, grid.off_level, grid.idle_frac,
+        lgrid.forecaster_id, lgrid.horizon, lgrid.cadence,
+        lgrid.family_id, lgrid.x, lgrid.hysteresis,
+        cfg=cfg, h_max=lgrid.h_max, telemetry=telemetry)
+    n_stops, churn, err1, err_h, naive1 = extras
+
+    t_total = grid.n_hours
+    frac = cfg.hours / t_total
+    window = (cfg.start + jnp.arange(cfg.hours)) % t_total
+    price_sum = jnp.sum(grid.prices[:, window], axis=1)[grid.market_idx]
+    costs = fleet_costs(
+        scan_out, price_sum=price_sum, fixed=grid.fixed * frac,
+        power=grid.power, period=grid.period * frac,
+        restart_energy_mwh=grid.restart_energy_mwh,
+        restart_time_h=grid.restart_time_h, n_samples=cfg.hours)
+    mae1 = err1 / cfg.hours
+    return LiveResult(
+        cpc=costs.cpc, cpc_ao=costs.cpc_ao, tco=costs.tco,
+        energy_cost=costs.energy_cost, restart_cost=costs.restart_cost,
+        up_hours=costs.up_hours, n_starts=scan_out.n_starts,
+        n_stops=n_stops,
+        x_realized=1.0 - scan_out.up_units / cfg.hours,
+        p_off_final=p_off_f, threshold_updates=churn,
+        mae1=mae1, mae_h=err_h / cfg.hours,
+        mase1=mae1 / jnp.maximum(naive1 / cfg.hours, 1e-9))

@@ -1,0 +1,180 @@
+"""Live cross-site dispatch: commit the first hour, plan the rest.
+
+The offline dispatcher (`repro.dispatch`) water-fills a *known* [S, T]
+price block. The live loop instead, each hour: re-solves the per-site
+shutdown thresholds against the forecast window (quantile family, at
+the configured cadence), realizes each site's on/off state at the TRUE
+current price (day-ahead — the current hour is always published),
+commits one `dispatch_alloc_hour` fill on the true prices, then rolls a
+full forecast-horizon plan (`plan_on_window` + `dispatch_window`) from
+the committed state to measure *re-plan churn*: how much the committed
+allocation deviates from what the previous hour's plan promised for
+this hour. Dwell locks and the committed allocation carry across the
+horizon boundary in the scan state, exactly like the offline scan
+carry.
+
+Two deliberate divergences from the offline path, both forced by
+running inside jit:
+
+  * infeasibility cannot raise mid-scan — demand above fleet
+    availability is *shed* (the fill already caps at total width) and
+    reported as ``shed_mwh`` instead of `DispatchInfeasible`;
+  * the segment sort runs in-jit on the traced prices
+    (`segment_keys_jnp`); ordering matches the host sort whenever
+    prices are distinct at f32 (tests pin allocation agreement with
+    `dispatch_ref` on the never-re-solve path).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.energy.forecast import seasonal_naive_batch
+from repro.kernels.live_window import (dispatch_window, plan_on_window,
+                                       segment_keys_jnp, segment_rank_jnp)
+from repro.kernels.ref import dispatch_alloc_hour, hard_hour_step
+
+
+class LiveFleetResult(NamedTuple):
+    """Outcome of a live dispatch run over one fleet of S sites."""
+
+    alloc_mw: jax.Array       # [S, hours] committed allocation
+    cpc: jax.Array            # (fixed + energy + migration) / delivered
+    energy_cost: jax.Array
+    migration_cost: jax.Array
+    migration_mw: jax.Array   # matched in/out flow, like summarize_alloc
+    delivered_mwh: jax.Array
+    shed_mwh: jax.Array       # demand the fleet could not place
+    replan_mw: jax.Array      # sum_t |commit_t - plan_{t-1}(t)|
+    p_off_final: jax.Array    # [S] last committed thresholds
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "start", "hours", "horizon", "cadence", "season", "min_dwell"))
+def _live_fleet_scan(prices, power, p_on0, p_off0, off_level, idle_frac,
+                     x, demand, migrate_cost, span, *, start: int,
+                     hours: int, horizon: int, cadence: int, season: int,
+                     min_dwell: int):
+    s, t_total = prices.shape
+    w = season + 1
+    xq = jnp.asarray(x, jnp.float32)
+    resolvable = xq > 0.0
+    hq = float(horizon)
+    m_idx = jnp.clip(jnp.round(xq * hq), 1.0, hq - 1.0).astype(jnp.int32)
+
+    def step(carry, i):
+        on, p_on_c, p_off_c, prev, dwell, plan_next = carry
+        t = start + i
+        hist = prices[:, (t - w + 1 + jnp.arange(w)) % t_total]  # [S, W]
+        fc = seasonal_naive_batch(hist, horizon, season)         # [S, H]
+
+        do_commit = (i % cadence) == 0
+        desc = -jnp.sort(-fc, axis=1)
+        q_thr = jnp.take_along_axis(desc, (m_idx - 1)[:, None],
+                                    axis=1)[:, 0]
+        commit_thr = do_commit & resolvable
+        p_off_new = jnp.where(commit_thr, q_thr, p_off_c)
+        p_on_new = jnp.where(commit_thr, q_thr, p_on_c)
+
+        # realize site availability at the true (published) price
+        p_t = prices[:, t % t_total]
+        on_new, _, cap, _ = hard_hour_step(on, p_t, p_on_new, p_off_new,
+                                           off_level, idle_frac)
+        avail = power * cap
+        d_t = demand[i]
+
+        # commit this hour on true prices
+        order, rank = segment_rank_jnp(
+            segment_keys_jnp(p_t, migrate_cost, span))
+        alloc, dwell = dispatch_alloc_hour(prev, dwell, avail, order,
+                                           rank, d_t,
+                                           min_dwell=min_dwell)
+
+        # plan the forecast horizon from the committed state: planned
+        # availability rolls the same state machine over the forecast,
+        # planned demand repeats the profile (wrapping the live window)
+        _, cap_w, _ = plan_on_window(on_new, fc, p_on_new, p_off_new,
+                                     off_level, idle_frac)
+        avail_w = power[:, None] * cap_w
+        keys_w = segment_keys_jnp(fc.T, migrate_cost, span)      # [H, 3S]
+        d_w = demand[(i + 1 + jnp.arange(horizon)) % hours]
+        plan_w, _, _ = dispatch_window(alloc, dwell, avail_w, keys_w,
+                                       d_w, min_dwell=min_dwell)
+
+        replan = jnp.where(i == 0, 0.0,
+                           jnp.sum(jnp.abs(alloc - plan_next)))
+        ys = (alloc, jnp.sum(alloc * p_t), jnp.maximum(
+            d_t - jnp.sum(alloc), 0.0), replan)
+        return ((on_new, p_on_new, p_off_new, alloc, dwell,
+                 plan_w[:, 0]), ys)
+
+    zeros = jnp.zeros((s,), jnp.float32)
+    init = (jnp.ones((s,), jnp.float32), p_on0, p_off0, zeros, zeros,
+            zeros)
+    carry, (alloc_t, energy_t, shed_t, replan_t) = jax.lax.scan(
+        step, init, jnp.arange(hours, dtype=jnp.int32))
+    return (alloc_t.T, energy_t, shed_t, replan_t, carry[2])
+
+
+def live_fleet_dispatch(prices, power, p_on, p_off, off_level, idle_frac,
+                        x, demand, *, start: int = 0, hours: int = 168,
+                        horizon: int = 24, cadence: int = 1,
+                        season: int = 168, migrate_cost: float = 0.0,
+                        min_dwell: int = 0,
+                        fixed: float = 0.0) -> LiveFleetResult:
+    """Run the live dispatch loop over one fleet.
+
+    prices: [S, T] per-site market prices; power/p_on/p_off/off_level/
+    idle_frac/x: [S] per-site policy state (``x <= 0``: the site keeps
+    its offline thresholds — pass the full offline thresholds and
+    ``x = 0`` everywhere with ``cadence >= hours`` to reproduce the
+    offline `dispatch_ref` path); demand: scalar MW or [hours] profile.
+    Cost accounting mirrors `repro.dispatch.summarize_alloc` (matched
+    in/out migration flow; hour 0 placement is not a move).
+    """
+    prices = jnp.asarray(prices, jnp.float32)
+    s, t_total = prices.shape
+    if horizon < 2:
+        raise ValueError("horizon must be >= 2")
+    demand = np.asarray(demand, np.float32)
+    if demand.ndim == 0:
+        demand_h = np.broadcast_to(demand, (hours,))
+    elif demand.shape == (hours,):
+        demand_h = demand
+    else:
+        raise ValueError(f"demand must be a scalar or a length-{hours} "
+                         f"profile, got shape {demand.shape}")
+    span = float(jnp.max(prices) - jnp.min(prices)) \
+        + abs(float(migrate_cost)) + 1.0
+    bcast = lambda v: jnp.broadcast_to(  # noqa: E731
+        jnp.asarray(v, jnp.float32), (s,))
+    alloc, energy_t, shed_t, replan_t, p_off_f = _live_fleet_scan(
+        prices, bcast(power), bcast(p_on), bcast(p_off),
+        bcast(off_level), bcast(idle_frac), bcast(x),
+        jnp.asarray(demand_h), jnp.float32(migrate_cost),
+        jnp.float32(span), start=int(start), hours=int(hours),
+        horizon=int(horizon), cadence=int(cadence), season=int(season),
+        min_dwell=int(min_dwell))
+
+    a = alloc
+    prev = jnp.concatenate([jnp.zeros_like(a[:, :1]), a[:, :-1]], axis=1)
+    delta = a - prev
+    moved = jnp.minimum(jnp.sum(jnp.clip(delta, 0.0, None), axis=0),
+                        jnp.sum(jnp.clip(-delta, 0.0, None), axis=0))
+    migration_mw = jnp.sum(moved)
+    energy = jnp.sum(energy_t)
+    delivered = jnp.sum(a)
+    migration_cost = migrate_cost * migration_mw
+    return LiveFleetResult(
+        alloc_mw=alloc,
+        cpc=(fixed + energy + migration_cost)
+        / jnp.maximum(delivered, 1e-9),
+        energy_cost=energy, migration_cost=migration_cost,
+        migration_mw=migration_mw, delivered_mwh=delivered,
+        shed_mwh=jnp.sum(shed_t), replan_mw=jnp.sum(replan_t),
+        p_off_final=p_off_f)

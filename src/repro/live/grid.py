@@ -1,0 +1,123 @@
+"""LiveGrid — materialise a batched controller-design sweep.
+
+A live controller instance is one scenario row of the offline
+`ScenarioGrid` *plus* a controller design: which forecaster it trusts,
+how far ahead it plans (horizon), how often it re-solves (cadence), and
+which re-solve family it runs (quantile re-resolution of the policy's
+shutdown fraction, or a short warm-started gradient re-tune). The cross
+product — forecaster x horizon x cadence x family x base row — is
+flattened into one row-expanded `ScenarioGrid` (via `take_rows`, so
+every engine-facing field is already per-live-row) with the controller
+design carried as parallel [B] vectors, and the whole sweep runs as one
+jitted scan in `repro.live.controller`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fleet.grid import PolicySpec, ScenarioGrid
+
+# forecaster id -> name; ids are baked into the controller's stacked
+# forecast tensor, so the order here is contractual. "persistence"
+# repeats the last published price; "perfect" reads the true future
+# trace (the zero-forecast-error control arm of the regret sandwich).
+FORECASTERS = ("seasonal_naive", "similar_day_ar", "persistence",
+               "perfect")
+
+# family id -> name. "quantile" re-resolves the policy's shutdown
+# fraction x against the forecast window's own PV set (the live analog
+# of `repro.fleet.grid._resolve_threshold`); "tuned" descends the
+# relaxed CPC objective on the forecast window with a few warm-started
+# Adam steps per cadence tick (the in-scan analog of
+# `repro.tune.optimize(warm_start=...)`).
+FAMILIES = ("quantile", "tuned")
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveGrid:
+    """Row-expanded controller sweep, ordered
+    b = (((base*F + f)*H + h)*C + c)*FAM + fam."""
+
+    grid: ScenarioGrid          # one row per controller instance
+    base_row: np.ndarray        # [B] int64 row in the source grid
+    forecaster_id: jnp.ndarray  # [B] int32 index into FORECASTERS
+    horizon: jnp.ndarray        # [B] int32 planning horizon (hours)
+    cadence: jnp.ndarray        # [B] int32 re-solve period (hours)
+    family_id: jnp.ndarray      # [B] int32 index into FAMILIES
+    x: jnp.ndarray              # [B] shutdown fraction; <= 0: the row
+                                #     keeps its offline threshold
+    hysteresis: jnp.ndarray     # [B] resume back-off (PolicySpec)
+    forecaster_names: tuple = FORECASTERS
+    family_names: tuple = ()
+    horizons: tuple = ()
+    cadences: tuple = ()
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.base_row.shape[0])
+
+    @property
+    def h_max(self) -> int:
+        return int(np.max(np.asarray(self.horizon)))
+
+
+def build_live_grid(grid: ScenarioGrid, policies: Sequence[PolicySpec],
+                    *, forecasters: Sequence[str] = FORECASTERS,
+                    horizons: Sequence[int] = (24,),
+                    cadences: Sequence[int] = (1,),
+                    families: Sequence[str] = ("quantile",)) -> LiveGrid:
+    """Cross an offline `ScenarioGrid` with a controller-design sweep.
+
+    ``policies`` must be the same specs the grid was built from (the
+    grid itself stores only resolved thresholds; the live quantile
+    family needs each row's shutdown *fraction* back). Fixed-threshold
+    and always-on specs get ``x = 0`` — those rows never re-solve and
+    ride along as offline-policy control arms.
+    """
+    if len(policies) != grid.n_policies:
+        raise ValueError(f"grid has {grid.n_policies} policies but "
+                         f"{len(policies)} specs were given")
+    for f in forecasters:
+        if f not in FORECASTERS:
+            raise ValueError(f"unknown forecaster {f!r} "
+                             f"(have {FORECASTERS})")
+    for fam in families:
+        if fam not in FAMILIES:
+            raise ValueError(f"unknown family {fam!r} (have {FAMILIES})")
+    horizons = tuple(int(h) for h in horizons)
+    cadences = tuple(int(c) for c in cadences)
+    if any(h < 2 for h in horizons):
+        raise ValueError("horizons must be >= 2 (a 1-hour window has no "
+                         "interior quantile)")
+    if any(c < 1 for c in cadences):
+        raise ValueError("cadences must be >= 1")
+
+    b0 = grid.n_rows
+    f_ids = np.asarray([FORECASTERS.index(f) for f in forecasters],
+                       np.int32)
+    fam_ids = np.asarray([FAMILIES.index(f) for f in families], np.int32)
+    base, fi, hi, ci, gi = np.meshgrid(
+        np.arange(b0), f_ids, np.asarray(horizons, np.int32),
+        np.asarray(cadences, np.int32), fam_ids, indexing="ij")
+    base = base.reshape(-1)
+    pol = np.asarray(grid.policy_idx, np.int64)[base]
+    x = np.asarray([0.0 if p.x is None else max(float(p.x), 0.0)
+                    for p in policies], np.float32)[pol]
+    hyst = np.asarray([float(p.hysteresis) for p in policies],
+                      np.float32)[pol]
+    return LiveGrid(
+        grid=grid.take_rows(base),
+        base_row=base,
+        forecaster_id=jnp.asarray(fi.reshape(-1)),
+        horizon=jnp.asarray(hi.reshape(-1)),
+        cadence=jnp.asarray(ci.reshape(-1)),
+        family_id=jnp.asarray(gi.reshape(-1)),
+        x=jnp.asarray(x), hysteresis=jnp.asarray(hyst),
+        forecaster_names=tuple(forecasters),
+        family_names=tuple(families),
+        horizons=horizons, cadences=cadences)

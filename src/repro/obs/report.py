@@ -201,6 +201,39 @@ def render_digest(run_dir, *, top_k: int = 5,
         for e in infeas:
             out.append(f"- [{e.get('constraint', '?')}] {e['reason']}")
 
+    # live operation --------------------------------------------------
+    live_res = by_kind.get("live.result", [])
+    live_steps = by_kind.get("live.step", [])
+    if live_res or live_steps:
+        _section(out, "Live operation")
+        if live_res:
+            r = live_res[-1]
+            out.append(f"- controllers: {r['rows']} rows x "
+                       f"{r['hours']} h")
+            out.append(f"- mean realized CPC: {_fmt(r['cpc_mean'])} "
+                       f"(regret vs hindsight oracle "
+                       f"{_fmt(r['regret_oracle_mean'], 3)}, vs offline "
+                       f"{_fmt(r['regret_offline_mean'], 3)})")
+            out.append(f"- one-step forecast MAE: {_fmt(r['mae1_mean'])} "
+                       f"EUR/MWh; threshold churn: "
+                       f"{_fmt(r['churn_total'])} commits")
+            best = r.get("best")
+            if best:
+                out.append(f"- best design: {best['forecaster']} "
+                           f"H={best['horizon']} cadence={best['cadence']} "
+                           f"{best['family']} (CPC {_fmt(best['cpc'])})")
+        if live_steps:
+            h = live_steps[-1]
+            on = np.asarray(h["on_mw"], np.float64)
+            trans = np.asarray(h["transitions"], np.float64)
+            err = np.asarray(h["abs_err1"], np.float64)
+            out.append(f"- fleet capacity online: min {_fmt(on.min())} "
+                       f"MW, mean {_fmt(on.mean())} MW over "
+                       f"{on.shape[0]} hours")
+            out.append(f"- transitions: {_fmt(float(trans.sum()))} "
+                       f"(peak hour {int(trans.argmax())}); mean "
+                       f"one-step |err|: {_fmt(float(err.mean()))}")
+
     # fleet summary / regret ------------------------------------------
     summaries = by_kind.get("fleet.summary", [])
     if summaries:

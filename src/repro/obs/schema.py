@@ -45,6 +45,12 @@ EVENT_KINDS: dict[str, tuple[str, tuple[str, ...]]] = {
         "slack_capacity_mw", "slack_floor_mwh", "near_infeasible_hours")),
     "dispatch.infeasible": ("dispatch.allocate._check_feasible", (
         "reason",)),
+    # live operator -------------------------------------------------------
+    "live.step": ("live.controller._live_scan (io_callback drain)", (
+        "on_mw", "cost_rate", "transitions", "abs_err1", "commits")),
+    "live.result": ("live.report.summarize_live", (
+        "rows", "hours", "cpc_mean", "regret_oracle_mean",
+        "regret_offline_mean", "mae1_mean", "churn_total")),
     # data loading --------------------------------------------------------
     "loader.skipped_rows": ("energy.smard._finalize", (
         "loader", "path", "n_rows", "n_parsed", "n_skipped", "n_nan",

@@ -65,8 +65,9 @@ from repro.parallel.axes import SHARD_MAP_NOCHECK, row_mesh, shard_map
 from repro.tune.objective import (DispatchCoupling, PhysicalPolicy,
                                   PolicyParams, TuneProblem, cell_index,
                                   dispatch_coupling_from_grid,
-                                  init_from_grid, problem_from_grid,
-                                  soft_objective, transform)
+                                  init_from_grid, inverse_transform,
+                                  problem_from_grid, soft_objective,
+                                  transform)
 
 from jax.sharding import PartitionSpec as P
 
@@ -475,13 +476,19 @@ def _dispatch_reeval(grid, params: PhysicalPolicy, cpc: np.ndarray,
             "infeasible_tuned": why_t, "infeasible_swept": why_s}
 
 
-def optimize(grid, cfg: TuneConfig = TuneConfig()) -> TuneResult:
+def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
+             warm_start=None) -> TuneResult:
     """Gradient-tune every scenario row of ``grid``; hard-re-evaluate.
 
     Each row is seeded at its own swept `PolicySpec` (so the grid's K
     policies double as K random restarts per (market, system) cell) and
     tuned for ``cfg.steps`` Adam steps under the annealed soft
-    objective. The final selection keeps, per row, the best hard-CPC
+    objective. ``warm_start`` overrides the seed: a `PolicyParams` (raw),
+    a `PhysicalPolicy` (mapped through `inverse_transform`), or a prior
+    `TuneResult` (its ``.raw``) — the entry point a receding-horizon
+    caller (`repro.live`, `examples/live_operator.py`) uses to re-tune
+    at each cadence tick from the previous tick's solution with a short
+    ``cfg.steps`` budget instead of a cold anneal. The final selection keeps, per row, the best hard-CPC
     policy among the tuned parameters and the swept baselines — when
     hardware parameters (idle draw, restart costs) are uniform within a
     cell, the reported ``cpc`` therefore matches or beats the best swept
@@ -502,7 +509,26 @@ def optimize(grid, cfg: TuneConfig = TuneConfig()) -> TuneResult:
     """
     telemetry = obs.enabled()
     problem = problem_from_grid(grid)
-    raw0 = init_from_grid(grid)
+    if warm_start is None:
+        raw0 = init_from_grid(grid)
+    elif isinstance(warm_start, TuneResult):
+        raw0 = warm_start.raw
+    elif isinstance(warm_start, PhysicalPolicy):
+        raw0 = inverse_transform(warm_start)
+    elif isinstance(warm_start, PolicyParams):
+        raw0 = warm_start
+    else:
+        raise TypeError("warm_start must be PolicyParams, PhysicalPolicy "
+                        f"or TuneResult, got {type(warm_start).__name__}")
+    if np.asarray(raw0.raw_off).shape != (grid.n_rows,):
+        raise ValueError(
+            f"warm_start has {np.asarray(raw0.raw_off).shape} raw_off for "
+            f"a {grid.n_rows}-row grid")
+    if warm_start is not None:
+        # the tuning loop donates its parameter carry; copy so the
+        # caller's warm-start source (e.g. the previous tick's
+        # TuneResult in a receding-horizon loop) stays alive
+        raw0 = PolicyParams(*(jnp.array(a) for a in raw0))
     coupling = dispatch_coupling_from_grid(grid, cfg.dispatch_soft) \
         if cfg.dispatch_soft is not None else None
     raw_f, hist, cpc_tuned_dev = _run_loop(raw0, problem, cfg,

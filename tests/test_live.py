@@ -1,0 +1,397 @@
+"""Live-operator subsystem tests (`repro.live` + the forecast/stream
+satellites): strict forecaster causality (property-based), the
+seasonal-naive wrap-bug regression, numpy-vs-batched forecast parity,
+the day-ahead publication-lag contract of `PriceStream`, the regret
+sandwich (hindsight oracle <= live <= never too far from offline), the
+perfect-forecast/full-horizon convergence of the live loop to the
+offline backtest, live cross-site dispatch agreement with the offline
+`dispatch_ref` on the never-re-solve path, warm-started re-tuning, and
+the `repro.obs` zero-perturbation contract for ``live.*`` events."""
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.tco import make_system
+from repro.dispatch import segment_rank
+from repro.energy.forecast import (effective_season, mae, mase,
+                                   seasonal_naive, seasonal_naive_batch,
+                                   similar_day_ar, similar_day_ar_batch)
+from repro.energy.stream import PriceStream
+from repro.fleet import PolicySpec, backtest, build_grid
+from repro.kernels.live_window import (dispatch_window, plan_on_window,
+                                       segment_keys_jnp, segment_rank_jnp)
+from repro.kernels.ref import dispatch_alloc_hour, dispatch_ref
+from repro.live import (FORECASTERS, LiveConfig, build_live_grid,
+                        hindsight_cpc, live_backtest, live_fleet_dispatch,
+                        offline_cpc, summarize_live)
+from repro.obs.report import load_events
+from repro.obs.schema import validate
+from repro.tune import TuneConfig, optimize
+
+from tests._hypothesis_compat import given, settings, st
+
+rng = np.random.default_rng(42)
+
+
+def _periodic(t, season=168, seed=0):
+    r = np.random.default_rng(seed)
+    base = r.normal(80.0, 30.0, season)
+    reps = -(-t // season)
+    return np.tile(base, reps)[:t].astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# forecast baselines
+# ---------------------------------------------------------------------------
+
+def test_seasonal_naive_exact_on_periodic_series():
+    """On a perfectly periodic series the seasonal-naive forecast must
+    equal the truth even when horizon >> season — the old ``% len``
+    wrap produced phase errors here whenever len(history) was not a
+    multiple of the season."""
+    season = 48
+    hist_len = season * 3 + 7          # NOT a season multiple
+    horizon = 3 * season
+    series = _periodic(hist_len + horizon, season)
+    pred = seasonal_naive(series[:hist_len], horizon, season)
+    np.testing.assert_allclose(pred, series[hist_len:hist_len + horizon],
+                               rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 400), st.integers(1, 50))
+def test_forecast_causality_property(seed, horizon, perturb):
+    """A forecast may depend only on the last ``season`` (+1 for the AR
+    residual) samples: perturbing anything older must not change it."""
+    season = 72
+    n = season + 1 + perturb
+    r = np.random.default_rng(seed)
+    hist = r.normal(60.0, 25.0, n)
+    tail = n - (season + 1)
+    mangled = hist.copy()
+    mangled[:tail] = r.normal(1e4, 1e3, tail)   # wreck the old past
+    for fn in (seasonal_naive, similar_day_ar):
+        a = fn(hist, horizon, season)
+        b = fn(mangled, horizon, season)
+        np.testing.assert_array_equal(a, b, err_msg=fn.__name__)
+
+
+def test_batched_forecasts_match_numpy():
+    season = 168
+    w = season + 1
+    hist = rng.normal(70.0, 35.0, (5, w)).astype(np.float32)
+    for horizon in (1, 24, season, 2 * season + 5):
+        got = np.asarray(seasonal_naive_batch(hist, horizon, season))
+        want = seasonal_naive(hist, horizon, season)
+        np.testing.assert_array_equal(got, want)
+        got = np.asarray(similar_day_ar_batch(hist, horizon, season))
+        want = similar_day_ar(hist, horizon, season)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_effective_season_fallbacks():
+    assert effective_season(200, 168) == 168
+    assert effective_season(167, 168) == 24
+    assert effective_season(23, 168) == 1
+    # short history must still produce a finite forecast
+    pred = seasonal_naive(np.arange(10.0), 48, season=168)
+    assert pred.shape == (48,) and np.all(np.isfinite(pred))
+
+
+def test_mase_scale_free_skill_score():
+    season = 24
+    series = _periodic(season * 10, season, seed=3)
+    hist, truth = series[:-season], series[-season:]
+    pred = seasonal_naive(hist, season, season)
+    assert mase(pred, truth, hist, season) == pytest.approx(0.0, abs=1e-9)
+    assert mae(truth, truth) == 0.0
+    # noisy history: the in-sample seasonal-naive MAE is a real scale
+    r = np.random.default_rng(7)
+    hist_n = hist + r.normal(0, 5, hist.shape)
+    noisy = pred + r.normal(0, 50, season)
+    assert mase(noisy, truth, hist_n, season) > 1.0
+    # scale invariance: same score after multiplying prices by 1000
+    assert mase(1e3 * noisy, 1e3 * truth, 1e3 * hist_n, season) == \
+        pytest.approx(mase(noisy, truth, hist_n, season), rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# price stream: day-ahead publication lag
+# ---------------------------------------------------------------------------
+
+def test_stream_publication_lag_contract():
+    prices = np.arange(24.0 * 5)
+    s = PriceStream(prices, publish_hour=13, start=0)
+    # hour 0: only today is published
+    assert s.available_lookahead == 23
+    s.advance(12.0)                    # hour 12 < 13: still just today
+    assert s.available_lookahead == 11
+    s.advance(1.0)                     # hour 13: tomorrow publishes
+    assert s.available_lookahead == 24 + 10
+    assert len(s.peek(1000)) == 34
+    assert len(s.peek(5)) == 5
+    np.testing.assert_array_equal(s.peek(3), prices[14:17])
+    # the gate is relative to absolute hour-of-day, not stream age
+    s2 = PriceStream(prices, publish_hour=13, start=20)
+    assert s2.available_lookahead == 27     # hod 20 >= 13
+    # None disables the gate entirely
+    s3 = PriceStream(prices, publish_hour=None)
+    assert s3.available_lookahead >= len(prices)
+    with pytest.raises(ValueError):
+        PriceStream(prices, publish_hour=24)
+
+
+def test_stream_reset_and_iter_determinism():
+    prices = rng.normal(50, 20, 240)
+    s = PriceStream(prices, start=7)
+    first = np.asarray(list(s))
+    assert first.shape == (240,)
+    assert s.pos == 7 + 240            # __iter__ advances, never rewinds
+    s.reset()
+    second = np.asarray(list(s))
+    np.testing.assert_array_equal(first, second)
+    # fractional ticks accumulate without loss
+    s.reset()
+    for _ in range(50):
+        s.advance(0.02)
+    assert s.pos == 7 + 1
+
+
+# ---------------------------------------------------------------------------
+# live controller: fixtures
+# ---------------------------------------------------------------------------
+
+def _live_case(t=336, n_markets=3, horizons=(24,), cadences=(1,),
+               families=("quantile",), forecasters=FORECASTERS,
+               policies=None, seed=11):
+    r = np.random.default_rng(seed)
+    prices = np.abs(r.normal(80.0, 40.0, (n_markets, t))) \
+        .astype(np.float32)
+    systems = [make_system(5e4, 1.0, float(t))]
+    if policies is None:
+        policies = [PolicySpec("x25", x=0.25),
+                    PolicySpec("x10", x=0.10),
+                    PolicySpec("always_on")]
+    grid = build_grid(prices, systems, policies)
+    lgrid = build_live_grid(grid, policies, forecasters=forecasters,
+                            horizons=horizons, cadences=cadences,
+                            families=families)
+    return grid, lgrid
+
+
+def test_build_live_grid_validation():
+    grid, _ = _live_case()
+    pols = [PolicySpec("x25", x=0.25), PolicySpec("x10", x=0.10),
+            PolicySpec("always_on")]
+    with pytest.raises(ValueError, match="policies"):
+        build_live_grid(grid, pols[:1])
+    with pytest.raises(ValueError, match="forecaster"):
+        build_live_grid(grid, pols, forecasters=("oracle",))
+    with pytest.raises(ValueError, match="horizons"):
+        build_live_grid(grid, pols, horizons=(1,))
+    lg = build_live_grid(grid, pols, horizons=(24, 48), cadences=(1, 6),
+                         families=("quantile", "tuned"))
+    assert lg.n_rows == grid.n_rows * len(FORECASTERS) * 2 * 2 * 2
+    assert lg.h_max == 48
+    # always_on rows ride along with x = 0 (never re-solve)
+    x = np.asarray(lg.x)
+    pol = np.asarray(lg.grid.policy_idx)
+    assert np.all(x[pol == 2] == 0.0) and np.all(x[pol == 0] == 0.25)
+
+
+def test_live_backtest_deterministic():
+    _, lgrid = _live_case(t=240, n_markets=2, forecasters=(
+        "seasonal_naive", "persistence"), families=("quantile", "tuned"))
+    cfg = LiveConfig(hours=240, season=48)
+    a = live_backtest(lgrid, cfg)
+    b = live_backtest(lgrid, cfg)
+    for fa, fb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+    assert np.all(np.isfinite(np.asarray(a.cpc)))
+
+
+def test_live_telemetry_bit_identical_and_schema_valid(tmp_path):
+    _, lgrid = _live_case(t=240, n_markets=2,
+                          forecasters=("seasonal_naive",),
+                          families=("quantile", "tuned"))
+    cfg = LiveConfig(hours=168, season=48)
+    cold = live_backtest(lgrid, cfg)
+    assert not obs.enabled()
+    with obs.capture(tmp_path / "run"):
+        hot = live_backtest(lgrid, cfg)
+        summarize_live(lgrid, hot, cfg)
+    for fc, fh in zip(cold, hot):
+        np.testing.assert_array_equal(np.asarray(fc), np.asarray(fh))
+    events = load_events(tmp_path / "run")
+    kinds = {e["kind"] for e in events}
+    assert {"live.step", "live.result"} <= kinds
+    for e in events:
+        assert validate(e) == [], e["kind"]
+    step = next(e for e in events if e["kind"] == "live.step")
+    assert len(step["on_mw"]) == cfg.hours
+    res = next(e for e in events if e["kind"] == "live.result")
+    assert res["rows"] == lgrid.n_rows and res["hours"] == cfg.hours
+
+
+def test_regret_sandwich():
+    """On a restart-free grid the clairvoyant oracle lower-bounds every
+    live controller row (to f32 accumulation noise). >= 256 rows:
+    3 markets x 3 policies x 4 forecasters x 2 horizons x 2 cadences x
+    2 families = 288."""
+    _, lgrid = _live_case(t=336, n_markets=3, horizons=(24, 336),
+                          cadences=(1, 24),
+                          families=("quantile", "tuned"))
+    assert lgrid.n_rows >= 256
+    cfg = LiveConfig(hours=336, season=168)
+    res = live_backtest(lgrid, cfg)
+    live = np.asarray(res.cpc, np.float64)
+    oracle = hindsight_cpc(lgrid, cfg)
+    assert np.all(oracle <= live * (1 + 1e-5) + 1e-6), \
+        f"oracle exceeds live by {np.max(oracle - live):.3g}"
+    # and the oracle is not vacuous: strictly below the mean live CPC
+    assert oracle.mean() < live.mean()
+
+
+def test_perfect_forecast_full_horizon_matches_offline():
+    """Zero forecast error + horizon = T + cadence 1 removes every live
+    handicap: the quantile family re-resolves the same full-window
+    threshold every hour, and realized CPC must match the offline
+    backtest on the same window."""
+    t = 336
+    grid, lgrid = _live_case(t=t, n_markets=3, horizons=(24, t),
+                             cadences=(1,), forecasters=(
+                                 "seasonal_naive", "perfect"))
+    cfg = LiveConfig(hours=t, season=168)
+    res = live_backtest(lgrid, cfg)
+    fid = np.asarray(lgrid.forecaster_id)
+    hor = np.asarray(lgrid.horizon)
+    sel = (fid == FORECASTERS.index("perfect")) & (hor == t)
+    assert sel.sum() >= 3
+    live = np.asarray(res.cpc, np.float64)[sel]
+    offline = np.asarray(backtest(grid, use_pallas=False).cpc,
+                         np.float64)[np.asarray(lgrid.base_row)[sel]]
+    np.testing.assert_allclose(live, offline, rtol=1e-6, atol=1e-6)
+    # offline_cpc agrees with the engine it wraps on the full window
+    np.testing.assert_allclose(
+        offline_cpc(lgrid, cfg)[sel],
+        np.asarray(backtest(grid, use_pallas=False).cpc,
+                   np.float64)[np.asarray(lgrid.base_row)[sel]],
+        rtol=1e-6)
+
+
+def test_summarize_live_groups_and_orders():
+    _, lgrid = _live_case(t=240, n_markets=2, horizons=(24, 48),
+                          forecasters=("seasonal_naive", "perfect"))
+    cfg = LiveConfig(hours=168, season=48)
+    summary = summarize_live(lgrid, live_backtest(lgrid, cfg), cfg)
+    assert len(summary.table) == 2 * 2      # forecaster x horizon groups
+    cpcs = [r["cpc"] for r in summary.table]
+    assert cpcs == sorted(cpcs)
+    assert sum(r["rows"] for r in summary.table) == lgrid.n_rows
+    rendered = summary.render_table()
+    assert "perfect" in rendered and "seasonal_naive" in rendered
+    assert np.all(summary.regret_oracle >= -1e-5)
+
+
+# ---------------------------------------------------------------------------
+# warm-started re-tuning (tune.optimize warm_start)
+# ---------------------------------------------------------------------------
+
+def test_optimize_warm_start_continues_descent():
+    prices = np.abs(rng.normal(80, 40, (2, 240))).astype(np.float32)
+    grid = build_grid(prices, [make_system(2e4, 1.0, 240.0)],
+                      [PolicySpec("x10", x=0.10)])
+    cold = optimize(grid, TuneConfig(steps=30))
+    warm = optimize(grid, TuneConfig(steps=10), warm_start=cold)
+    assert np.all(warm.cpc <= cold.cpc * (1 + 1e-6))
+    # PhysicalPolicy and PolicyParams entry points both round-trip
+    via_params = optimize(grid, TuneConfig(steps=5), warm_start=cold.raw)
+    via_policy = optimize(grid, TuneConfig(steps=5),
+                          warm_start=cold.params)
+    assert np.all(np.isfinite(via_params.cpc))
+    assert np.all(np.isfinite(via_policy.cpc))
+    with pytest.raises(TypeError):
+        optimize(grid, TuneConfig(steps=1), warm_start=np.zeros(2))
+
+
+# ---------------------------------------------------------------------------
+# live cross-site dispatch
+# ---------------------------------------------------------------------------
+
+def _fleet_case(s=4, t=240, seed=5):
+    r = np.random.default_rng(seed)
+    # 2-decimal prices keep the in-jit f32 segment sort aligned with the
+    # host float64 sort (distinct keys at f32)
+    prices = np.round(r.normal(80, 40, (s, t)), 2).astype(np.float32)
+    power = r.uniform(1.0, 3.0, s).astype(np.float32)
+    demand = 0.4 * float(power.sum())
+    return prices, power, demand
+
+
+def test_dispatch_window_single_hour_matches_alloc_hour():
+    prices, power, demand = _fleet_case()
+    s = prices.shape[0]
+    avail = power[:, None]
+    keys = np.asarray(segment_keys_jnp(prices[:, :1].T, 2.0, 1000.0))
+    order, rank = segment_rank_jnp(keys[0])
+    prev = np.zeros(s, np.float32)
+    dwell = np.zeros(s, np.float32)
+    want, _ = dispatch_alloc_hour(prev, dwell, power, order, rank,
+                                  demand, min_dwell=3)
+    got, _, _ = dispatch_window(prev, dwell, avail, keys,
+                                np.full(1, demand, np.float32),
+                                min_dwell=3)
+    np.testing.assert_array_equal(np.asarray(got)[:, 0],
+                                  np.asarray(want))
+
+
+def test_live_fleet_never_resolve_matches_dispatch_ref():
+    """x = 0 and cadence > hours: the live loop never re-solves, every
+    site stays always-on, and the committed allocation must be
+    bit-identical to the offline sequential oracle."""
+    prices, power, demand = _fleet_case()
+    s, t = prices.shape
+    hours = t
+    res = live_fleet_dispatch(
+        prices, power, p_on=1e9, p_off=1e9, off_level=0.0,
+        idle_frac=0.1, x=0.0, demand=demand, hours=hours, horizon=24,
+        cadence=10**6, season=48, migrate_cost=2.0, min_dwell=3)
+    order, rank = segment_rank(prices, 2.0)
+    want = dispatch_ref(np.broadcast_to(power[:, None], (s, t)),
+                        order, rank, np.full(t, demand, np.float32),
+                        min_dwell=3)
+    np.testing.assert_array_equal(np.asarray(res.alloc_mw),
+                                  np.asarray(want))
+    assert float(res.shed_mwh) < 1e-3        # f32 fill rounding only
+    np.testing.assert_allclose(float(res.delivered_mwh), demand * hours,
+                               rtol=1e-6)
+
+
+def test_live_fleet_resolving_path_is_sane():
+    prices, power, demand = _fleet_case(seed=9)
+    res = live_fleet_dispatch(
+        prices, power, p_on=1e9, p_off=1e9, off_level=0.2,
+        idle_frac=0.1, x=0.25, demand=demand, hours=168, horizon=24,
+        cadence=1, season=48, migrate_cost=2.0, min_dwell=3)
+    assert np.isfinite(float(res.cpc)) and float(res.cpc) > 0
+    assert float(res.replan_mw) >= 0.0
+    # shutting down the priciest quartile must shed at most the demand
+    assert float(res.shed_mwh) <= demand * 168
+    # thresholds actually moved off the sentinel
+    assert np.all(np.asarray(res.p_off_final) < 1e9)
+
+
+def test_plan_on_window_matches_scripted_state_machine():
+    prices = np.asarray([[50.0, 120.0, 130.0, 40.0, 90.0]], np.float32)
+    on0 = np.ones(1, np.float32)
+    on_last, cap_w, draw_w = plan_on_window(
+        on0, prices, p_on=np.asarray([60.0], np.float32),
+        p_off=np.asarray([100.0], np.float32),
+        off_level=np.zeros(1, np.float32),
+        idle_frac=np.zeros(1, np.float32))
+    # 50<=p_on: on; 120>p_off: off; 130>p_off: off; 40<=p_on: on;
+    # 90 in the hysteresis band: hold previous (on)
+    np.testing.assert_array_equal(np.asarray(cap_w)[0],
+                                  [1.0, 0.0, 0.0, 1.0, 1.0])
+    assert float(on_last[0]) == 1.0
