@@ -1,0 +1,189 @@
+"""One coupled fleet at scale: the psum-reduced sharded objective vs
+the single program, and the fused soft-dispatch VJP vs native autodiff.
+
+Two questions, two headline numbers:
+
+  * ``speedup_dispatch_vjp`` — backward-only throughput ratio of the
+    fused custom VJP of `repro.kernels.soft_dispatch` over native
+    autodiff through the per-hour scan, at S=64 sites (vmapped over a
+    batch of fleets so the loop overhead amortizes the way the tuner's
+    batched use does). The *forward* passes are the same math
+    (bisection-dominated), so the honest A/B subtracts the forward's
+    median wall time from the grad call's: what is gated is the cost of
+    the backward alone — the part the custom VJP replaces.
+  * ``coupled_shard_ulp_ok`` — 1.0 when the coupled objective evaluated
+    under `shard_map` (`repro.tune.sharded_soft_objective`: fleet
+    aggregates psum-reduced across the row mesh) matches the
+    single-program ``reduction='sum'`` loss on the acceptance grid to a
+    few ULP; 0.0 otherwise. This is the correctness gate of the
+    sharded-but-coupled rework — a refactor that silently turns the
+    psum reassembly into an approximation trips it.
+
+Also recorded: coupled-tuning rows/s under the explicit sharded plan vs
+the single program (``rows_per_s_sharded`` / ``rows_per_s_single``) —
+informational on CI hosts (virtual CPU devices share the same cores, so
+sharding there measures overhead, not speedup; the number exists to
+show the path runs at scale, and its real value needs real devices).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed, write_artifact
+from repro.core.tco import make_system
+from repro.dispatch import DispatchConfig, segment_keys, segment_rank
+from repro.energy.presets import region_params
+from repro.execution import ExecutionPlan
+from repro.fleet import PolicySpec, build_grid
+from repro.kernels.soft_dispatch import soft_dispatch
+from repro.tune import (TuneConfig, dispatch_coupling_from_grid,
+                        init_from_grid, optimize, problem_from_grid,
+                        sharded_soft_objective, soft_objective)
+
+_DCFG = DispatchConfig(demand_frac=0.25, migrate_cost=4.0, min_dwell_h=2)
+
+
+def _dispatch_instance(n_sites: int, hours: int, batch: int, seed: int = 0):
+    """A batched synthetic dispatch instance: [B, S, T] availability
+    over shared [S, T] prices (keys/order precomputed once, exactly as
+    `dispatch_coupling_from_grid` hands them to the objective)."""
+    rng = np.random.RandomState(seed)
+    prices = 60.0 + 25.0 * rng.randn(n_sites, hours)
+    avail = rng.uniform(0.2, 1.0, (batch, n_sites, hours))
+    demand = np.full((batch, hours), 0.35 * n_sites)
+    keys = segment_keys(prices, float(_DCFG.migrate_cost))
+    order, _ = segment_rank(prices, float(_DCFG.migrate_cost), keys=keys)
+    return (jnp.asarray(avail, jnp.float32), jnp.asarray(keys),
+            jnp.asarray(order, jnp.int32),
+            jnp.asarray(demand, jnp.float32))
+
+
+def _grid(n_markets: int, n_systems: int, n_policies: int, hours: int):
+    markets = [region_params("germany", seed=s).replace(n_hours=hours)
+               for s in range(n_markets)]
+    p_avg = markets[0].p_avg
+    psis = np.geomspace(0.5, 4.0, n_systems)
+    systems = [make_system(float(psi) * hours * 1.0 * p_avg, 1.0,
+                           float(hours)) for psi in psis]
+    policies = [PolicySpec(f"x{i}", x=float(x), off_level=0.3)
+                for i, x in enumerate(
+                    np.linspace(0.02, 0.3, n_policies))]
+    return build_grid(markets, systems, policies)
+
+
+def bench_dispatch_vjp(n_sites: int = 64, hours: int = 336,
+                       batch: int = 16, tau: float = 2.0,
+                       repeats: int = 3) -> dict:
+    """Fused-vs-native soft-dispatch backward at S=``n_sites``."""
+    avail, keys, order, demand = _dispatch_instance(n_sites, hours,
+                                                    batch)
+
+    def loss_of(fused):
+        def loss(a, d):
+            al = jax.vmap(lambda ai, di: soft_dispatch(
+                ai, keys, order, di, tau=tau,
+                min_dwell=_DCFG.min_dwell_h, use_pallas=False,
+                fused=fused))(a, d)
+            return jnp.sum(al * jnp.asarray(0.5))
+        return loss
+
+    out = {"sites": n_sites, "hours": hours, "batch": batch}
+    times = {}
+    for name, fused in (("native", False), ("fused", True)):
+        loss = loss_of(fused)
+        fwd = jax.jit(loss)
+        grad = jax.jit(jax.grad(loss))
+        jax.block_until_ready(fwd(avail, demand))          # compile
+        jax.block_until_ready(grad(avail, demand))
+        _, fwd_us = timed(lambda: jax.block_until_ready(
+            fwd(avail, demand)), repeats=repeats, stat="median")
+        _, grad_us = timed(lambda: jax.block_until_ready(
+            grad(avail, demand)), repeats=repeats, stat="median")
+        times[name] = (fwd_us, grad_us)
+        out[f"fwd_s_{name}"] = fwd_us / 1e6
+        out[f"grad_s_{name}"] = grad_us / 1e6
+    # backward-only: the grad call runs forward + backward; the fused
+    # and native forwards are the same bisection-dominated math, so the
+    # difference of medians isolates the backward the VJP replaces
+    bwd_native = max(times["native"][1] - times["native"][0], 1e3)
+    bwd_fused = max(times["fused"][1] - times["fused"][0], 1e3)
+    out["bwd_s_native"] = bwd_native / 1e6
+    out["bwd_s_fused"] = bwd_fused / 1e6
+    out["speedup_dispatch_vjp"] = bwd_native / bwd_fused
+    return out
+
+
+def bench_coupled_shard(rows_cfg=(8, 4, 8), hours: int = 336,
+                        steps: int = 12, tau: float = 5.0,
+                        repeats: int = 2) -> dict:
+    """Coupled-sharded vs single-program: ULP agreement of the loss on
+    the acceptance grid, plus tuned rows/s under both plans."""
+    grid = _grid(*rows_cfg, hours)
+    problem = problem_from_grid(grid)
+    raw = init_from_grid(grid)
+    coupling = dispatch_coupling_from_grid(grid, _DCFG)
+    b = grid.n_rows
+
+    kw = dict(dispatch_blend=0.5, dispatch_min_dwell=_DCFG.min_dwell_h,
+              penalty_weight=10.0, power_cap_mw=0.6 * float(
+                  np.sum(np.asarray(grid.power)
+                         * np.asarray(problem.site_weight))))
+    single, _ = jax.jit(lambda r: soft_objective(
+        r, problem, tau, dispatch=coupling, reduction="sum", **kw))(raw)
+    n_dev = max(1, min(8, len(jax.devices()), b // 2))
+    while b % n_dev:
+        n_dev -= 1
+    sharded = sharded_soft_objective(raw, problem, tau, n_dev=n_dev,
+                                     coupling=coupling,
+                                     dispatch_min_dwell=kw[
+                                         "dispatch_min_dwell"],
+                                     dispatch_blend=kw["dispatch_blend"],
+                                     penalty_weight=kw["penalty_weight"],
+                                     power_cap_mw=kw["power_cap_mw"])
+    single_f, sharded_f = float(single), float(sharded)
+    ulp = float(np.spacing(np.abs(np.float32(single_f))))
+    err_ulp = abs(sharded_f - single_f) / ulp
+    out = {
+        "rows": b, "hours": hours, "n_shards": n_dev,
+        "loss_single": single_f, "loss_sharded": sharded_f,
+        "err_ulp": err_ulp,
+        # 4 ULP headroom: reassembly is one psum + one add
+        "coupled_shard_ulp_ok": 1.0 if err_ulp <= 4.0 else 0.0,
+    }
+
+    # rows/s of the full coupled tuning loop under both plans
+    from repro.execution import Coupling
+    coup = Coupling(dispatch=_DCFG)
+    for label, plan in (("single", ExecutionPlan(mode="single")),
+                        ("sharded", ExecutionPlan(mode="sharded"))):
+        cfg = TuneConfig(steps=steps, plan=plan, coupling=coup)
+        optimize(grid, cfg)                                # compile
+        _, us = timed(lambda: optimize(grid, cfg), repeats=repeats,
+                      stat="median")
+        out[f"rows_per_s_{label}"] = b * steps / (us / 1e6)
+    return out
+
+
+def bench_tune_coupled(n_sites: int = 64, hours: int = 336,
+                       batch: int = 16, rows_cfg=(8, 4, 8),
+                       steps: int = 12, repeats: int = 3) -> dict:
+    """The headline suite `benchmarks.check_regression` gates."""
+    out = bench_dispatch_vjp(n_sites=n_sites, hours=hours, batch=batch,
+                             repeats=repeats)
+    out.update(bench_coupled_shard(rows_cfg=rows_cfg, hours=hours,
+                                   steps=steps,
+                                   repeats=max(1, repeats - 1)))
+    write_artifact("bench_tune_coupled", out)
+    return out
+
+
+ALL = {"bench_tune_coupled": bench_tune_coupled}
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(bench_tune_coupled(), indent=2, default=float))

@@ -44,7 +44,7 @@ LOW_WATER = 0.5           # --reset seeds baseline at median x this:
 # CI time)
 def _suites():
     from benchmarks import (bench_dispatch, bench_fleet, bench_live,
-                            bench_tune)
+                            bench_tune, bench_tune_coupled)
     return {
         # shapes sized so the fused calls take tens of ms: smaller smoke
         # runs time nothing but host jitter and the gate flakes
@@ -89,6 +89,20 @@ def _suites():
             ("cpc_rescore", "cpc_aware", "chosen_rescore",
              "chosen_aware", "rows", "steps"),
             1),   # fixed-seed deterministic: one run suffices
+        # the coupled-fleet pair: speedup_dispatch_vjp gates the fused
+        # soft-dispatch backward's edge over native autodiff (backward
+        # time only — the forwards are the same bisection math), and
+        # coupled_shard_ulp_ok (1.0/0.0) gates the psum-reduced sharded
+        # objective's ULP agreement with the single program — a
+        # correctness bit, so ANY drop trips the 30% tolerance
+        "bench_tune_coupled": (
+            bench_tune_coupled.bench_tune_coupled,
+            dict(n_sites=64, hours=336, batch=16, rows_cfg=(8, 4, 8),
+                 steps=12, repeats=3),
+            ("speedup_dispatch_vjp", "coupled_shard_ulp_ok"),
+            ("bwd_s_native", "bwd_s_fused", "err_ulp", "n_shards",
+             "rows_per_s_sharded", "rows_per_s_single", "rows",
+             "sites", "batch")),
         # gates the live controller's batched-scan edge over the
         # per-hour Python re-plan loop (both re-solve families in the
         # baseline, weighted by the sweep mix) — the number that makes

@@ -11,7 +11,8 @@ import time
 import traceback
 
 from benchmarks import (bench_dispatch, bench_fleet, bench_live,
-                        bench_runtime, bench_tune, paper_figures)
+                        bench_runtime, bench_tune, bench_tune_coupled,
+                        paper_figures)
 from benchmarks.common import ARTIFACTS
 
 
@@ -27,6 +28,7 @@ def main() -> int:
         suites.update(bench_fleet.ALL)
         suites.update(bench_dispatch.ALL)
         suites.update(bench_tune.ALL)
+        suites.update(bench_tune_coupled.ALL)
         suites.update(bench_live.ALL)
         suites.update(bench_runtime.ALL)
     if args.only:
@@ -120,6 +122,12 @@ def _headline(name: str, out: dict) -> str:
                 f"{out['cpc_rescore']:.2f} "
                 f"(edge x{out['dispatch_cpc_edge']:.4f}), FD-grad "
                 f"margin {out['fd_grad_margin']:.0f}")
+    if name == "bench_tune_coupled":
+        return (f"dispatch VJP bwd x{out['speedup_dispatch_vjp']:.1f} "
+                f"fused-vs-native (S={out['sites']}, B={out['batch']}); "
+                f"{out['rows']} rows / {out['n_shards']} shards: "
+                f"err {out['err_ulp']:.1f} ULP "
+                f"({'OK' if out['coupled_shard_ulp_ok'] else 'FAIL'})")
     if name == "bench_live":
         return (f"{out['rows']} controllers x {out['hours']} h: "
                 f"{out['controller_hours_per_s_jitted']:.0f} ctrl-h/s "

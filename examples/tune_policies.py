@@ -12,8 +12,8 @@ the market's structure keeps it.
 
 With ``--dispatch-soft`` the demo instead contrasts dispatch-aware
 tuning (gradients through the relaxed water-fill dispatcher,
-`TuneConfig.dispatch_soft`) against the re-score-only path
-(`TuneConfig.dispatch`): both are hard-scored on feasible
+``coupling=Coupling(dispatch=...)``) against the re-score-only path
+(``coupling=Coupling(reeval=...)``): both are hard-scored on feasible
 `repro.dispatch.dispatch`, and the per-site threshold table shows the
 swing-site effect — a site the fleet keeps as always-on backup learns a
 threshold far from its isolated optimum.
@@ -37,7 +37,8 @@ from repro.dispatch import DispatchConfig
 from repro.energy.ensemble import block_bootstrap
 from repro.energy.presets import region_params
 from repro.fleet import PolicySpec, build_grid
-from repro.tune import (TuneConfig, cell_best_rows, hard_cpc, optimize,
+from repro.tune import (Coupling, TuneConfig, cell_best_rows, hard_cpc,
+                        optimize,
                         problem_from_grid)
 
 ARTIFACTS = Path(__file__).resolve().parent.parent / "benchmarks" / \
@@ -113,8 +114,10 @@ def dispatch_soft_demo(args) -> int:
           f"{dcfg.demand_frac:.0%} of ratings, fee {dcfg.migrate_cost}, "
           f"dwell {dcfg.min_dwell_h} h; {steps} steps")
 
-    rescore = optimize(grid, TuneConfig(steps=steps, dispatch=dcfg))
-    aware = optimize(grid, TuneConfig(steps=steps, dispatch_soft=dcfg))
+    rescore = optimize(grid, TuneConfig(steps=steps,
+                                        coupling=Coupling(reeval=dcfg)))
+    aware = optimize(grid, TuneConfig(steps=steps,
+                                      coupling=Coupling(dispatch=dcfg)))
     dr, da = rescore.dispatch, aware.dispatch
     cpc_r = min(dr["cpc_tuned"], dr["cpc_swept"])
     cpc_a = min(da["cpc_tuned"], da["cpc_swept"])

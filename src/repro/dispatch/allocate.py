@@ -42,6 +42,7 @@ import numpy as np
 
 from repro import obs
 from repro.dispatch.schedule import capacity_series
+from repro.execution import ExecutionPlan
 from repro.kernels.dispatch_scan import dispatch_scan
 from repro.kernels.ref import dispatch_ref
 
@@ -67,6 +68,10 @@ class DispatchConfig(NamedTuple):
     used as the retention premium in the greedy fill). ``min_dwell_h``
     locks newly placed load for that many hours. ``compute_floor_mwh``
     is the aggregate compute the fleet must deliver over the period.
+    ``plan`` (`repro.execution.ExecutionPlan`, itself hashable) pins the
+    execution layout `dispatch` solves under — the same object
+    `TuneConfig` and `fleet.backtest` take; None leaves the backend
+    auto-select in force.
     """
 
     demand_mw: Optional[Union[float, tuple]] = None
@@ -75,6 +80,7 @@ class DispatchConfig(NamedTuple):
     migrate_cost: float = 0.0
     min_dwell_h: int = 0
     compute_floor_mwh: float = 0.0
+    plan: Optional[ExecutionPlan] = None
 
 
 class DispatchProblem(NamedTuple):
@@ -260,7 +266,8 @@ _dispatch_ref_jit = jax.jit(dispatch_ref, static_argnames=("min_dwell",))
 
 def dispatch(problem: DispatchProblem, *,
              use_pallas: Optional[bool] = None,
-             block_t: int = 512) -> DispatchResult:
+             block_t: int = 512,
+             plan: Optional[ExecutionPlan] = None) -> DispatchResult:
     """Solve one dispatch instance; raises `DispatchInfeasible` when a
     hard constraint cannot hold.
 
@@ -268,7 +275,24 @@ def dispatch(problem: DispatchProblem, *,
     the Pallas kernel on TPU, the jitted sequential reference elsewhere
     (both are bit-identical; the interpreter is a debugging tool, not a
     fast path).
+
+    ``plan`` (`repro.execution.ExecutionPlan` — the same object
+    `repro.tune.TuneConfig` and `fleet.backtest` take) pins the layout:
+    ``mode='single'`` forces the one-program reference path
+    (``use_pallas=False``); ``mode='auto'`` keeps the backend
+    auto-select. Chunked and sharded plans raise — a dispatch instance
+    has no row axis to split (its site axis is coupled through the
+    shared water level every hour).
     """
+    if plan is not None:
+        if plan.mode in ("chunked", "sharded"):
+            raise ValueError(
+                f"dispatch: ExecutionPlan(mode={plan.mode!r}) has no "
+                "meaning here — a dispatch instance has no row axis to "
+                "chunk or shard (sites are coupled through the shared "
+                "water level); use mode='single' or 'auto'")
+        if plan.mode == "single":
+            use_pallas = False
     _check_feasible(problem)
     order, rank = (problem.order, problem.rank) \
         if problem.order is not None and problem.rank is not None \

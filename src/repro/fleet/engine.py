@@ -22,12 +22,14 @@ question for free along the market axis.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro import obs
+from repro.execution import ExecutionPlan
 from repro.fleet.grid import ScenarioGrid, concat_rows, row_chunks
 from repro.fleet.report import FleetReport
 from repro.kernels.fleet_scan import fleet_scan
@@ -110,7 +112,8 @@ def _backtest_jit(prices, market_idx, system_idx, policy_idx,
 
 def backtest(grid: ScenarioGrid, *, use_pallas: Optional[bool] = None,
              block_b: int = 128, block_t: int = 512,
-             chunk_rows: int = 0) -> FleetReport:
+             chunk_rows: Optional[int] = None,
+             plan: Optional[ExecutionPlan] = None) -> FleetReport:
     """Backtest every scenario row of ``grid`` in one jitted call.
 
     ``use_pallas=None`` auto-selects: the Pallas kernel on TPU, the
@@ -118,16 +121,41 @@ def backtest(grid: ScenarioGrid, *, use_pallas: Optional[bool] = None,
     debugging tool, not a fast path). Both paths are checked against each
     other in `tests/test_fleet.py`.
 
-    ``chunk_rows`` evaluates the grid in fixed-size row slices (via
+    ``plan`` (`repro.execution.ExecutionPlan`) chooses the execution
+    layout — the same object `repro.tune.TuneConfig` takes. A chunked
+    plan evaluates the grid in fixed-size row slices (via
     `ScenarioGrid.take_rows`, padded to one compile shape) instead of
     one [B, T] pass — per-row results are identical, but the in-jit
     price gather never exceeds the chunk footprint, which is what lets
     `repro.tune.optimize` hard-re-evaluate B ~ 10^5 grids on one host.
+    ``mode='sharded'`` raises: the backtest is a single [B, T] map with
+    no coupled terms, so chunking already covers its memory story and a
+    shard_map path would only add a second numerics contract.
+    ``chunk_rows`` is the deprecated spelling of a chunked plan (one
+    release of `DeprecationWarning`, then removal).
     """
-    if chunk_rows and grid.n_rows > chunk_rows:
+    if chunk_rows is not None:
+        if plan is not None:
+            raise ValueError("backtest: pass plan= or the deprecated "
+                             "chunk_rows, not both")
+        warnings.warn(
+            "backtest(chunk_rows=...) is deprecated — pass "
+            "plan=repro.execution.ExecutionPlan(mode='chunked', "
+            "chunk_rows=..., contract='bitwise') instead",
+            DeprecationWarning, stacklevel=2)
+        plan = ExecutionPlan(mode="chunked", chunk_rows=chunk_rows,
+                             contract="bitwise") if chunk_rows \
+            else ExecutionPlan(mode="single")
+    if plan is not None and plan.mode == "sharded":
+        raise ValueError(
+            "backtest does not shard: the hard backtest is an uncoupled "
+            "per-row map, so use ExecutionPlan(mode='chunked') for the "
+            "memory bound (bitwise-identical results) instead")
+    chunk = plan.chunk_rows if plan is not None else 0
+    if chunk and grid.n_rows > chunk:
         parts = [backtest(grid.take_rows(sl), use_pallas=use_pallas,
                           block_b=block_b, block_t=block_t)
-                 for sl in row_chunks(grid.n_rows, chunk_rows)]
+                 for sl in row_chunks(grid.n_rows, chunk)]
         return concat_rows(parts, grid.n_rows)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"

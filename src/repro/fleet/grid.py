@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import execution
 from repro.core.tco import SystemCosts
 from repro.energy.markets import MarketParams, generate_market
 from repro.runtime.elastic import capacity_plan
@@ -127,26 +128,16 @@ class ScenarioGrid:
         """Row-permuted view (shared fields stay); row order is an
         implementation detail the report layer must not depend on.
 
-        Every field outside `SHARED_FIELDS` is carried through the
-        permutation — a future per-row field is picked up automatically,
-        and a field that is neither shared nor [B]-leading raises
-        instead of being silently dropped (`tests/test_fleet.py` pins
-        this against ``dataclasses.fields``).
+        Delegates to the one shape-driven `repro.execution.take_rows`
+        (shared with `tune.optimizer`'s problem slicing and
+        `LiveGrid.take_rows`): every field outside `SHARED_FIELDS` is
+        carried through the permutation — a future per-row field is
+        picked up automatically, and a field that is neither shared nor
+        [B]-leading raises instead of being silently dropped
+        (`tests/test_fleet.py` pins this against ``dataclasses.fields``).
         """
-        order = np.asarray(order)
-        b = self.n_rows
-        rep = {}
-        for f in dataclasses.fields(self):
-            if f.name in self.SHARED_FIELDS:
-                continue
-            v = getattr(self, f.name)
-            if not hasattr(v, "shape") or v.ndim < 1 or v.shape[0] != b:
-                raise TypeError(
-                    f"ScenarioGrid.take_rows: field {f.name!r} is neither "
-                    "a shared field nor a [B]-leading per-row array — add "
-                    "it to SHARED_FIELDS or make it per-row")
-            rep[f.name] = v[order]
-        return dataclasses.replace(self, **rep)
+        return execution.take_rows(self, order, shared=self.SHARED_FIELDS,
+                                   n_rows=self.n_rows)
 
 
 def row_chunks(n_rows: int, chunk: int) -> list[np.ndarray]:

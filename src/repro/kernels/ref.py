@@ -384,6 +384,18 @@ def soft_water_level(keys: jax.Array, widths: jax.Array, demand,
     renormalise the fill mass, so the clip never distorts feasible
     hours, where the correction is O(bracket / 2^n_bisect).
     """
+    lam_hat = _bisect_level(keys, widths, demand, lam0, inv_tau,
+                            n_bisect=n_bisect)
+    return soft_water_level_fixed(keys, widths, demand, lam_hat, inv_tau)
+
+
+def _bisect_level(keys: jax.Array, widths: jax.Array, demand, lam0,
+                  inv_tau, *, n_bisect: int = 30) -> jax.Array:
+    """The non-differentiable half of `soft_water_level`: fixed-count
+    bisection from the hard-level bracket, returned under
+    ``stop_gradient``. Saved as a per-hour residual by the fused
+    dispatch VJP (`repro.kernels.soft_dispatch`) so the backward pass
+    never re-runs the solver."""
     span = _WL_SIGMA_SPAN / inv_tau
 
     def f(lam):
@@ -397,8 +409,19 @@ def soft_water_level(keys: jax.Array, widths: jax.Array, demand,
 
     lo, hi = jax.lax.fori_loop(
         0, n_bisect, bisect, (lam0 - span, lam0 + span))
-    lam_hat = jax.lax.stop_gradient(0.5 * (lo + hi))
+    return jax.lax.stop_gradient(0.5 * (lo + hi))
 
+
+def soft_water_level_fixed(keys: jax.Array, widths: jax.Array, demand,
+                           lam_hat, inv_tau) -> jax.Array:
+    """The differentiable half of `soft_water_level`: one Newton
+    correction from an already-solved (stop-gradded) ``lam_hat``. All
+    gradient flow of the water level lives here — given the same
+    ``lam_hat`` the composition is bitwise-identical to the original
+    fused form, which is what lets the custom VJP replay this half from
+    a saved residual."""
+    lam_hat = jax.lax.stop_gradient(lam_hat)
+    span = _WL_SIGMA_SPAN / inv_tau
     sig = jax.nn.sigmoid((lam_hat - keys) * inv_tau)
     denom = jnp.maximum(
         jax.lax.stop_gradient(jnp.sum(widths * sig * (1.0 - sig))
@@ -444,35 +467,171 @@ def soft_dispatch_hour(prev: jax.Array, dwell: jax.Array,
     prev/dwell/avail: [S]; keys: [3S]; order: [3S] int32.
     Returns ``(alloc [S], dwell' [S])``.
     """
-    s = prev.shape[0]
+    alloc, dwell, _ = soft_dispatch_hour_parts(
+        prev, dwell, avail, keys, order, demand, inv_tau=inv_tau,
+        inv_tau_mw=inv_tau_mw, min_dwell=min_dwell, n_bisect=n_bisect)
+    return alloc, dwell
+
+
+def _hour_widths(prev: jax.Array, dwell: jax.Array, avail: jax.Array, *,
+                 inv_tau, min_dwell: int) -> jax.Array:
+    """[3S] locked / retain / fresh segment widths of one hour."""
     held = jnp.minimum(prev, avail)
     if min_dwell > 0:
         inv_tau_cnt = inv_tau / _DWELL_CNT_SCALE
         locked = jax.nn.sigmoid((dwell - 0.5) * inv_tau_cnt) * held
     else:
         locked = jnp.zeros_like(held)
-    widths = jnp.concatenate([locked, held - locked, avail - held])
+    return jnp.concatenate([locked, held - locked, avail - held])
 
-    sorted_w = jnp.take(widths, order)
-    cums = jnp.cumsum(sorted_w)
-    marginal = jnp.minimum(jnp.sum((cums < demand).astype(jnp.int32)),
-                           3 * s - 1)
-    lam0 = jax.lax.stop_gradient(
-        jnp.take(jnp.take(keys, order), marginal))
-    lam = soft_water_level(keys, widths, demand, lam0, inv_tau,
-                           n_bisect=n_bisect)
+
+def soft_dispatch_hour_fixed(prev: jax.Array, dwell: jax.Array,
+                             avail: jax.Array, keys: jax.Array, demand,
+                             lam_hat, inv_tau, inv_tau_mw, *,
+                             min_dwell: int
+                             ) -> tuple[jax.Array, jax.Array]:
+    """One soft-dispatch hour given an already-bisected water level.
+
+    The differentiable core of `soft_dispatch_hour`: every op that
+    carries gradient (widths, Newton correction, fill, renormalisation,
+    dwell dynamics) — only the stop-gradded solver state (``lam_hat``
+    from `_bisect_level`, which also subsumes the sorted hard-level
+    seed) is taken as an input. Needs no ``order``, no sort walk and no
+    bisection, which is exactly what the fused custom VJP exploits: the
+    forward saves ``lam_hat`` per hour, and the backward is the
+    `jax.vjp` transpose of *this* function — the same linear map native
+    autodiff would build, just replayed from slim residuals
+    (`soft_dispatch_hour_grad`).
+    """
+    s = prev.shape[0]
+    widths = _hour_widths(prev, dwell, avail, inv_tau=inv_tau,
+                          min_dwell=min_dwell)
+    lam = soft_water_level_fixed(keys, widths, demand, lam_hat, inv_tau)
 
     fill = widths * jax.nn.sigmoid((lam - keys) * inv_tau)
     fill = fill * (demand / jnp.maximum(jnp.sum(fill),
                                         1e-9 * demand + _WL_TINY))
     alloc = fill[:s] + fill[s:2 * s] + fill[2 * s:]
     if min_dwell > 0:
+        inv_tau_cnt = inv_tau / _DWELL_CNT_SCALE
         moved_in = jax.nn.sigmoid((alloc - prev - DWELL_EVENT_MW)
                                   * inv_tau_mw)
         count_down = jax.nn.softplus((dwell - 1.0) * inv_tau_cnt) \
             / inv_tau_cnt
         dwell = moved_in * min_dwell + (1.0 - moved_in) * count_down
     return alloc, dwell
+
+
+def soft_dispatch_hour_parts(prev: jax.Array, dwell: jax.Array,
+                             avail: jax.Array, keys: jax.Array,
+                             order: jax.Array, demand, *, inv_tau,
+                             inv_tau_mw, min_dwell: int,
+                             n_bisect: int = 30
+                             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """`soft_dispatch_hour` that also returns the bisected level
+    ``lam_hat`` — the one extra per-hour residual the fused VJP saves.
+    ``(alloc, dwell')`` are bitwise those of `soft_dispatch_hour`."""
+    s = prev.shape[0]
+    widths = _hour_widths(prev, dwell, avail, inv_tau=inv_tau,
+                          min_dwell=min_dwell)
+    sorted_w = jnp.take(widths, order)
+    cums = jnp.cumsum(sorted_w)
+    marginal = jnp.minimum(jnp.sum((cums < demand).astype(jnp.int32)),
+                           3 * s - 1)
+    lam0 = jax.lax.stop_gradient(
+        jnp.take(jnp.take(keys, order), marginal))
+    lam_hat = _bisect_level(keys, widths, demand, lam0, inv_tau,
+                            n_bisect=n_bisect)
+    alloc, dwell = soft_dispatch_hour_fixed(
+        prev, dwell, avail, keys, demand, lam_hat, inv_tau, inv_tau_mw,
+        min_dwell=min_dwell)
+    return alloc, dwell, lam_hat
+
+
+def soft_dispatch_hour_grad(prev: jax.Array, dwell: jax.Array,
+                            avail: jax.Array, keys: jax.Array, demand,
+                            lam_hat, inv_tau, inv_tau_mw,
+                            u_alloc: jax.Array, u_dwell: jax.Array, *,
+                            min_dwell: int):
+    """Adjoint of one fixed-level hour: the exact `jax.vjp` transpose of
+    `soft_dispatch_hour_fixed` under output cotangents ``(u_alloc,
+    u_dwell)``. Shared verbatim by the XLA and Pallas fused backwards
+    and by the sequential `soft_dispatch_grad_ref` oracle — the same
+    role `soft_gate_grad` plays for the isolated scan. Returns
+    ``(d_prev, d_dwell, d_avail, d_keys, d_demand, d_inv_tau,
+    d_inv_tau_mw)``; linear in the cotangents, so zero-padded hours
+    contribute exact zeros and padding needs no masking.
+    """
+    def fwd(p, dw, av, ke, de, it, itm):
+        return soft_dispatch_hour_fixed(p, dw, av, ke, de, lam_hat,
+                                        it, itm, min_dwell=min_dwell)
+
+    _, pull = jax.vjp(fwd, prev, dwell, avail, keys, demand,
+                      inv_tau, inv_tau_mw)
+    return pull((u_alloc, u_dwell))
+
+
+def soft_dispatch_grad_ref(avail: jax.Array, keys: jax.Array,
+                           order: jax.Array, demand: jax.Array,
+                           g: jax.Array, *, tau, min_dwell: int = 0,
+                           mw_scale: float = 0.05, n_bisect: int = 30):
+    """Sequential oracle for the fused soft-dispatch backward.
+
+    Pulls the output cotangent ``g`` ([S, T], against the allocation of
+    `soft_dispatch_ref`) back through the hour recurrence: a forward
+    scan records each hour's entering state and bisected level, a
+    reverse scan chains `soft_dispatch_hour_grad` carrying the adjoints
+    of the (prev alloc, dwell) state. Returns ``(d_avail [S, T],
+    d_keys [T, 3S], d_demand [T], d_tau [])`` — the same quantities
+    native autodiff produces, to float round-off, and the contract the
+    blocked XLA/Pallas backwards in `repro.kernels.soft_dispatch` are
+    tested against (exactly as `soft_scan_grad_ref` anchors the
+    isolated scan's VJP).
+    """
+    a = jnp.asarray(avail)
+    dtype = a.dtype if jnp.issubdtype(a.dtype, jnp.floating) \
+        else jnp.float32
+    a = a.astype(dtype)
+    s = a.shape[0]
+    keys = jnp.asarray(keys, dtype)
+    demand = jnp.asarray(demand, dtype)
+    g = jnp.asarray(g, dtype)
+    tau = jnp.asarray(tau, dtype)
+    inv_tau = 1.0 / tau
+    inv_tau_mw = inv_tau / jnp.asarray(mw_scale, dtype)
+
+    def fstep(carry, inp):
+        prev, dwell = carry
+        a_t, k_t, o_t, d_t = inp
+        alloc, dwell2, lam_hat = soft_dispatch_hour_parts(
+            prev, dwell, a_t, k_t, o_t, d_t, inv_tau=inv_tau,
+            inv_tau_mw=inv_tau_mw, min_dwell=min_dwell,
+            n_bisect=n_bisect)
+        return (alloc, dwell2), (prev, dwell, lam_hat)
+
+    zeros = jnp.zeros((s,), dtype)
+    _, (prevs, dwells_in, lam_hats) = jax.lax.scan(
+        fstep, (zeros, zeros),
+        (a.T, keys, jnp.asarray(order, jnp.int32), demand))
+
+    def bstep(carry, inp):
+        u_prev, u_dwell, acc_it, acc_itm = carry
+        p_t, dw_t, lam_t, a_t, k_t, d_t, g_t = inp
+        d_p, d_dw, d_av, d_ke, d_de, d_it, d_itm = \
+            soft_dispatch_hour_grad(p_t, dw_t, a_t, k_t, d_t, lam_t,
+                                    inv_tau, inv_tau_mw, g_t + u_prev,
+                                    u_dwell, min_dwell=min_dwell)
+        return (d_p, d_dw, acc_it + d_it, acc_itm + d_itm), \
+            (d_av, d_ke, d_de)
+
+    init = (zeros, zeros, jnp.zeros((), dtype), jnp.zeros((), dtype))
+    (_, _, acc_it, acc_itm), (d_av, d_ke, d_de) = jax.lax.scan(
+        bstep, init, (prevs, dwells_in, lam_hats, a.T, keys, demand, g.T),
+        reverse=True)
+    # tau -> (inv_tau, inv_tau_mw) chain: d itau/d tau = -itau^2,
+    # d itaumw/d tau = -itau * itaumw
+    d_tau = -(inv_tau ** 2) * acc_it - inv_tau * inv_tau_mw * acc_itm
+    return d_av.T, d_ke, d_de, d_tau
 
 
 def soft_dispatch_ref(avail: jax.Array, keys: jax.Array, order: jax.Array,

@@ -46,10 +46,12 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ref import soft_dispatch_hour, soft_dispatch_ref
+from repro.kernels.ref import (soft_dispatch_hour, soft_dispatch_hour_grad,
+                               soft_dispatch_hour_parts, soft_dispatch_ref)
 
 
 def _soft_dispatch_kernel(a_ref, keys_ref, order_ref, d_ref,  # time-major
@@ -150,6 +152,348 @@ def soft_dispatch_pallas(avail: jax.Array, keys: jax.Array,
     return out[:t].T
 
 
+# ---------------------------------------------------------------------------
+# Fused custom VJP: slim residuals (alloc, entering dwell, bisected level)
+# instead of native autodiff's per-hour intermediate stash, and a backward
+# that never re-runs the bisection or the sort walk — the per-hour adjoint
+# is `repro.kernels.ref.soft_dispatch_hour_grad`, the exact `jax.vjp`
+# transpose of the shared fixed-level hour, so fused gradients match
+# native autodiff to float round-off (and `soft_dispatch_grad_ref`
+# anchors both). Structure mirrors `repro.kernels.soft_scan_vjp`: an XLA
+# scan pair off-TPU, a Pallas kernel pair (time-innermost grid, state
+# adjoints in VMEM scratch, reversed block index maps in the backward) on
+# TPU, selected by the same `use_pallas` / `interpret` knobs.
+# ---------------------------------------------------------------------------
+
+
+def _xla_fused_fwd(a, keys, order, demand, inv_tau, inv_tau_mw, *,
+                   min_dwell: int, n_bisect: int):
+    """Forward scan that also emits the VJP residuals.
+
+    Returns ``(alloc [S, T], dwell_in [S, T], lam_hat [T])`` where
+    ``dwell_in`` is each hour's *entering* dwell state (the prev-alloc
+    entering state needs no residual — it is the output shifted by one
+    hour) and ``lam_hat`` the stop-gradded bisection solution the
+    backward replays the Newton correction from.
+    """
+    s = a.shape[0]
+
+    def step(carry, inp):
+        prev, dwell = carry
+        a_t, k_t, o_t, d_t = inp
+        alloc, dwell2, lam_hat = soft_dispatch_hour_parts(
+            prev, dwell, a_t, k_t, o_t, d_t, inv_tau=inv_tau,
+            inv_tau_mw=inv_tau_mw, min_dwell=min_dwell,
+            n_bisect=n_bisect)
+        return (alloc, dwell2), (alloc, dwell, lam_hat)
+
+    zeros = jnp.zeros((s,), a.dtype)
+    _, (alloc_t, dwin_t, lam_t) = jax.lax.scan(
+        step, (zeros, zeros), (a.T, keys, order, demand))
+    return alloc_t.T, dwin_t.T, lam_t
+
+
+def _xla_fused_bwd(a, keys, demand, inv_tau, inv_tau_mw, alloc, dwin,
+                   lam, g, *, min_dwell: int):
+    """Reverse scan carrying the (prev alloc, dwell) state adjoints.
+
+    Linear in ``g``, so the zero cotangents of padded hours contribute
+    exact zeros — same no-masking contract as the forward. Returns
+    ``(d_avail, d_keys, d_demand, sum d_inv_tau, sum d_inv_tau_mw)``.
+    """
+    s = a.shape[0]
+    prev = jnp.concatenate([jnp.zeros_like(alloc[:, :1]),
+                            alloc[:, :-1]], axis=1)
+
+    def step(carry, inp):
+        u_prev, u_dwell, acc_it, acc_itm = carry
+        p_t, dw_t, lam_t, a_t, k_t, d_t, g_t = inp
+        d_p, d_dw, d_av, d_ke, d_de, d_it, d_itm = \
+            soft_dispatch_hour_grad(p_t, dw_t, a_t, k_t, d_t, lam_t,
+                                    inv_tau, inv_tau_mw, g_t + u_prev,
+                                    u_dwell, min_dwell=min_dwell)
+        return (d_p, d_dw, acc_it + d_it, acc_itm + d_itm), \
+            (d_av, d_ke, d_de)
+
+    zeros = jnp.zeros((s,), a.dtype)
+    zero = jnp.zeros((), a.dtype)
+    (_, _, acc_it, acc_itm), (d_av, d_ke, d_de) = jax.lax.scan(
+        step, (zeros, zeros, zero, zero),
+        (prev.T, dwin.T, lam, a.T, keys, demand, g.T), reverse=True)
+    return d_av.T, d_ke, d_de, acc_it, acc_itm
+
+
+def _fused_fwd_kernel(a_ref, keys_ref, order_ref, d_ref,      # time-major
+                      itau_ref, itaumw_ref,                   # (1,) scalars
+                      out_ref, dwin_ref, lam_ref,             # residuals out
+                      prev_scr, dwell_scr,                    # [S] VMEM carry
+                      *, block_t: int, min_dwell: int, n_bisect: int):
+    ti = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        prev_scr[...] = jnp.zeros_like(prev_scr)
+        dwell_scr[...] = jnp.zeros_like(dwell_scr)
+
+    inv_tau = itau_ref[0]
+    inv_tau_mw = itaumw_ref[0]
+
+    def hour(h, carry):
+        dwin_ref[h, :] = dwell_scr[...]              # entering dwell
+        alloc, dwell, lam_hat = soft_dispatch_hour_parts(
+            prev_scr[...], dwell_scr[...], a_ref[h, :], keys_ref[h, :],
+            order_ref[h, :], d_ref[h], inv_tau=inv_tau,
+            inv_tau_mw=inv_tau_mw, min_dwell=min_dwell,
+            n_bisect=n_bisect)
+        out_ref[h, :] = alloc
+        lam_ref[h] = lam_hat
+        prev_scr[...] = alloc
+        dwell_scr[...] = dwell
+        return carry
+
+    jax.lax.fori_loop(0, block_t, hour, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "min_dwell",
+                                             "n_bisect", "interpret"))
+def _pallas_fused_fwd(a_tm, keys, order, demand, itau, itaumw, *,
+                      block_t: int, min_dwell: int, n_bisect: int,
+                      interpret: bool):
+    """pallas_call of the residual-emitting forward over padded,
+    time-major inputs (same layout as `_soft_dispatch_padded`)."""
+    t_pad, s = a_tm.shape
+    nt = t_pad // block_t
+
+    kernel = functools.partial(_fused_fwd_kernel, block_t=block_t,
+                               min_dwell=min_dwell, n_bisect=n_bisect)
+    return pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((block_t, s), lambda ti: (ti, 0)),
+            pl.BlockSpec((block_t, 3 * s), lambda ti: (ti, 0)),
+            pl.BlockSpec((block_t, 3 * s), lambda ti: (ti, 0)),
+            pl.BlockSpec((block_t,), lambda ti: (ti,)),
+            pl.BlockSpec((1,), lambda ti: (0,)),
+            pl.BlockSpec((1,), lambda ti: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((block_t, s), lambda ti: (ti, 0)),
+                   pl.BlockSpec((block_t, s), lambda ti: (ti, 0)),
+                   pl.BlockSpec((block_t,), lambda ti: (ti,))],
+        out_shape=[jax.ShapeDtypeStruct((t_pad, s), jnp.float32),
+                   jax.ShapeDtypeStruct((t_pad, s), jnp.float32),
+                   jax.ShapeDtypeStruct((t_pad,), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((s,), jnp.float32),
+                        pltpu.VMEM((s,), jnp.float32)],
+        interpret=interpret,
+    )(a_tm, keys, order, demand, itau, itaumw)
+
+
+def _fused_bwd_kernel(prev_ref, dwin_ref, lam_ref, a_ref, keys_ref,
+                      d_ref, g_ref, itau_ref, itaumw_ref,
+                      dav_ref, dke_ref, dde_ref, sums_ref,
+                      uprev_scr, udwell_scr, acc_scr,
+                      *, block_t: int, min_dwell: int, n_t_blocks: int):
+    """One reversed time block of the backward: the index maps walk
+    blocks last-to-first, hours run block_t-1 .. 0 inside, and the
+    (prev, dwell) adjoints cross block boundaries in VMEM scratch. The
+    two tau-chain accumulators ride along in scratch and are emitted
+    once, from the final (earliest-time) block."""
+    ti = pl.program_id(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        uprev_scr[...] = jnp.zeros_like(uprev_scr)
+        udwell_scr[...] = jnp.zeros_like(udwell_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    inv_tau = itau_ref[0]
+    inv_tau_mw = itaumw_ref[0]
+
+    def hour(i, carry):
+        h = block_t - 1 - i
+        d_p, d_dw, d_av, d_ke, d_de, d_it, d_itm = \
+            soft_dispatch_hour_grad(
+                prev_ref[h, :], dwin_ref[h, :], a_ref[h, :],
+                keys_ref[h, :], d_ref[h], lam_ref[h], inv_tau,
+                inv_tau_mw, g_ref[h, :] + uprev_scr[...],
+                udwell_scr[...], min_dwell=min_dwell)
+        dav_ref[h, :] = d_av
+        dke_ref[h, :] = d_ke
+        dde_ref[h] = d_de
+        uprev_scr[...] = d_p
+        udwell_scr[...] = d_dw
+        acc_scr[0] = acc_scr[0] + d_it
+        acc_scr[1] = acc_scr[1] + d_itm
+        return carry
+
+    jax.lax.fori_loop(0, block_t, hour, 0)
+
+    @pl.when(ti == n_t_blocks - 1)
+    def _emit():
+        sums_ref[...] = acc_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "min_dwell",
+                                             "interpret"))
+def _pallas_fused_bwd(prev_tm, dwin_tm, lam, a_tm, keys, demand, g_tm,
+                      itau, itaumw, *, block_t: int, min_dwell: int,
+                      interpret: bool):
+    t_pad, s = a_tm.shape
+    nt = t_pad // block_t
+    rev2 = lambda ti: (nt - 1 - ti, 0)          # noqa: E731
+    rev1 = lambda ti: (nt - 1 - ti,)            # noqa: E731
+
+    kernel = functools.partial(_fused_bwd_kernel, block_t=block_t,
+                               min_dwell=min_dwell, n_t_blocks=nt)
+    return pl.pallas_call(
+        kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((block_t, s), rev2),
+            pl.BlockSpec((block_t, s), rev2),
+            pl.BlockSpec((block_t,), rev1),
+            pl.BlockSpec((block_t, s), rev2),
+            pl.BlockSpec((block_t, 3 * s), rev2),
+            pl.BlockSpec((block_t,), rev1),
+            pl.BlockSpec((block_t, s), rev2),
+            pl.BlockSpec((1,), lambda ti: (0,)),
+            pl.BlockSpec((1,), lambda ti: (0,)),
+        ],
+        out_specs=[pl.BlockSpec((block_t, s), rev2),
+                   pl.BlockSpec((block_t, 3 * s), rev2),
+                   pl.BlockSpec((block_t,), rev1),
+                   pl.BlockSpec((2,), lambda ti: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((t_pad, s), jnp.float32),
+                   jax.ShapeDtypeStruct((t_pad, 3 * s), jnp.float32),
+                   jax.ShapeDtypeStruct((t_pad,), jnp.float32),
+                   jax.ShapeDtypeStruct((2,), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((s,), jnp.float32),
+                        pltpu.VMEM((s,), jnp.float32),
+                        pltpu.VMEM((2,), jnp.float32)],
+        interpret=interpret,
+    )(prev_tm, dwin_tm, lam, a_tm, keys, demand, g_tm, itau, itaumw)
+
+
+def _pallas_pad(x, pad_t, val=0.0):
+    # The backward pads avail/demand with ones, not zeros: an all-zero
+    # hour makes the fill renorm divide by the 1e-30 floor, whose
+    # square underflows to 0 in f32 and turns the division transpose
+    # into 0/0 — NaN even under the padded hours' all-zero cotangents.
+    # A well-conditioned dummy hour keeps the padded adjoints exactly
+    # zero instead (the VJP is linear in the cotangents).
+    return jnp.pad(jnp.asarray(x, jnp.float32),
+                   ((0, pad_t),) + ((0, 0),) * (x.ndim - 1),
+                   constant_values=val)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
+def _soft_dispatch_fused(avail, keys, order, demand, tau, min_dwell,
+                         mw_scale, n_bisect, block_t, use_pallas,
+                         interpret):
+    alloc, _, _ = _fused_primal(avail, keys, order, demand, tau,
+                                min_dwell, mw_scale, n_bisect, block_t,
+                                use_pallas, interpret)
+    return alloc
+
+
+def _fused_primal(avail, keys, order, demand, tau, min_dwell, mw_scale,
+                  n_bisect, block_t, use_pallas, interpret):
+    s, t = avail.shape
+    inv_tau = 1.0 / tau
+    inv_tau_mw = inv_tau / jnp.asarray(mw_scale, tau.dtype)
+    if not use_pallas:
+        return _xla_fused_fwd(avail, keys, jnp.asarray(order, jnp.int32),
+                              demand, inv_tau, inv_tau_mw,
+                              min_dwell=min_dwell, n_bisect=n_bisect)
+    bt = max(min(block_t, t), 1)
+    pad_t = (-t) % bt
+    alloc_tm, dwin_tm, lam = _pallas_fused_fwd(
+        _pallas_pad(avail.T, pad_t), _pallas_pad(keys, pad_t),
+        jnp.pad(jnp.asarray(order, jnp.int32), ((0, pad_t), (0, 0))),
+        _pallas_pad(demand, pad_t),
+        jnp.asarray(inv_tau, jnp.float32).reshape(1),
+        jnp.asarray(inv_tau_mw, jnp.float32).reshape(1),
+        block_t=bt, min_dwell=min_dwell, n_bisect=n_bisect,
+        interpret=_auto_interpret(interpret))
+    return alloc_tm[:t].T, dwin_tm[:t].T, lam[:t]
+
+
+def _fused_fwd(avail, keys, order, demand, tau, min_dwell, mw_scale,
+               n_bisect, block_t, use_pallas, interpret):
+    alloc, dwin, lam = _fused_primal(avail, keys, order, demand, tau,
+                                     min_dwell, mw_scale, n_bisect,
+                                     block_t, use_pallas, interpret)
+    return alloc, (avail, keys, demand, tau, alloc, dwin, lam,
+                   np.shape(order))
+
+
+def _fused_bwd(min_dwell, mw_scale, n_bisect, block_t, use_pallas,
+               interpret, res, g):
+    avail, keys, demand, tau, alloc, dwin, lam, order_shape = res
+    inv_tau = 1.0 / tau
+    inv_tau_mw = inv_tau / jnp.asarray(mw_scale, tau.dtype)
+    if not use_pallas:
+        d_av, d_ke, d_de, acc_it, acc_itm = _xla_fused_bwd(
+            avail, keys, demand, inv_tau, inv_tau_mw, alloc, dwin, lam,
+            g, min_dwell=min_dwell)
+    else:
+        s, t = avail.shape
+        bt = max(min(block_t, t), 1)
+        pad_t = (-t) % bt
+        prev = jnp.concatenate([jnp.zeros_like(alloc[:, :1]),
+                                alloc[:, :-1]], axis=1)
+        d_av_tm, d_ke, d_de, sums = _pallas_fused_bwd(
+            _pallas_pad(prev.T, pad_t), _pallas_pad(dwin.T, pad_t),
+            _pallas_pad(lam, pad_t), _pallas_pad(avail.T, pad_t, 1.0),
+            _pallas_pad(keys, pad_t), _pallas_pad(demand, pad_t, 1.0),
+            _pallas_pad(g.T, pad_t),
+            jnp.asarray(inv_tau, jnp.float32).reshape(1),
+            jnp.asarray(inv_tau_mw, jnp.float32).reshape(1),
+            block_t=bt, min_dwell=min_dwell,
+            interpret=_auto_interpret(interpret))
+        d_av = d_av_tm[:t].T.astype(avail.dtype)
+        d_ke = d_ke[:t].astype(keys.dtype)
+        d_de = d_de[:t].astype(demand.dtype)
+        acc_it, acc_itm = sums[0], sums[1]
+    # tau -> (inv_tau, inv_tau_mw) chain (see soft_dispatch_grad_ref)
+    d_tau = (-(inv_tau ** 2) * acc_it
+             - inv_tau * inv_tau_mw * acc_itm).astype(tau.dtype)
+    d_order = np.zeros(order_shape, jax.dtypes.float0)
+    return d_av, d_ke, d_order, d_de, d_tau
+
+
+_soft_dispatch_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+def soft_dispatch_fused(avail: jax.Array, keys: jax.Array,
+                        order: jax.Array, demand: jax.Array, *, tau,
+                        min_dwell: int = 0, mw_scale: float = 0.05,
+                        n_bisect: int = 30, block_t: int = 512,
+                        use_pallas: Optional[bool] = None,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """`soft_dispatch` under the fused custom VJP: same allocation (the
+    forward runs the same per-hour math), same gradients to float
+    round-off, but the backward replays the Newton correction from
+    saved ``lam_hat`` residuals instead of transposing through the
+    stashed intermediates of the native scan — no bisection, no sort
+    walk, O(S·T) residual memory. Dtype-following off-TPU (the f64 FD
+    checks run through here); the Pallas pair is f32.
+    """
+    a = jnp.asarray(avail)
+    dtype = a.dtype if jnp.issubdtype(a.dtype, jnp.floating) \
+        else jnp.float32
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        dtype = jnp.float32
+    return _soft_dispatch_fused(
+        a.astype(dtype), jnp.asarray(keys, dtype),
+        jnp.asarray(order, jnp.int32), jnp.asarray(demand, dtype),
+        jnp.asarray(tau, dtype), int(min_dwell), float(mw_scale),
+        int(n_bisect), int(block_t), bool(use_pallas), interpret)
+
+
 _soft_dispatch_ref_jit = jax.jit(
     soft_dispatch_ref, static_argnames=("min_dwell", "n_bisect"))
 
@@ -158,7 +502,8 @@ def soft_dispatch(avail: jax.Array, keys: jax.Array, order: jax.Array,
                   demand: jax.Array, *, tau, min_dwell: int = 0,
                   mw_scale: float = 0.05, n_bisect: int = 30,
                   block_t: int = 512,
-                  use_pallas: Optional[bool] = None) -> jax.Array:
+                  use_pallas: Optional[bool] = None,
+                  fused: bool = False) -> jax.Array:
     """Differentiable fleet dispatch allocation at temperature ``tau``.
 
     avail: [S, T] MW; keys/order: [T, 3S] precomputed segment keys and
@@ -170,7 +515,18 @@ def soft_dispatch(avail: jax.Array, keys: jax.Array, order: jax.Array,
     the Pallas kernel on TPU, the jitted sequential scan elsewhere.
     Called *inside* a jit (the tuner's soft objective) it traces the
     scan form directly, which is the path gradients flow through.
+
+    ``fused=True`` routes through `soft_dispatch_fused` — the same
+    allocation under the custom VJP, whose backward replays from slim
+    residuals instead of transposing the native scan (the fast path
+    for dispatch-aware tuning).
     """
+    if fused:
+        return soft_dispatch_fused(avail, keys, order, demand, tau=tau,
+                                   min_dwell=min_dwell,
+                                   mw_scale=mw_scale, n_bisect=n_bisect,
+                                   block_t=block_t,
+                                   use_pallas=use_pallas)
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if use_pallas:

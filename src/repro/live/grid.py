@@ -20,6 +20,7 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro import execution
 from repro.fleet.grid import PolicySpec, ScenarioGrid
 
 # forecaster id -> name; ids are baked into the controller's stacked
@@ -64,6 +65,21 @@ class LiveGrid:
     @property
     def h_max(self) -> int:
         return int(np.max(np.asarray(self.horizon)))
+
+    # fields shared across rows, NOT permuted by take_rows (the design
+    # axes' name tables); everything else must be [B]-leading or the
+    # generic take_rows refuses to guess
+    SHARED_FIELDS = ("forecaster_names", "family_names", "horizons",
+                     "cadences")
+
+    def take_rows(self, order: np.ndarray) -> "LiveGrid":
+        """Row-permuted view over controller instances — the one
+        shape-driven `repro.execution.take_rows` shared with
+        `ScenarioGrid.take_rows` (the nested row-expanded grid recurses
+        through its own ``take_rows``, keeping its price block shared)
+        and `tune.optimizer`'s problem slicing."""
+        return execution.take_rows(self, order, shared=self.SHARED_FIELDS,
+                                   n_rows=self.n_rows)
 
 
 def build_live_grid(grid: ScenarioGrid, policies: Sequence[PolicySpec],

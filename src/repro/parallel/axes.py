@@ -21,6 +21,7 @@ identity, so the same model code runs on one CPU device in tests.
 from __future__ import annotations
 
 import contextlib
+import functools
 import threading
 from typing import Mapping, Optional, Sequence
 
@@ -180,6 +181,38 @@ def named_sharding(*logical_axes: Optional[str],
     if mesh is None:
         raise ValueError("no active mesh")
     return NamedSharding(mesh, logical_to_spec(logical_axes, rules))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def psum_id(x, axis_name: str):
+    """`jax.lax.psum` whose backward pass is the identity.
+
+    Inside a `shard_map` body (``check_rep=False``), differentiating a
+    raw ``psum`` applies ``psum`` to the cotangent too, multiplying the
+    gradient by the shard count — the cotangent of a fleet aggregate is
+    already replicated (every shard forms the same downstream loss from
+    it), so summing it across shards over-counts by exactly ``n_sh``.
+    With the identity backward, the per-shard gradient of a loss built
+    on `psum_id`-reduced aggregates equals the single program's per-row
+    gradient exactly.
+
+    Contract: only valid when every shard consumes the reduced value
+    through the same expression (replicated cotangent) — true for the
+    coupled fleet aggregates in `repro.tune.objective`, not for
+    arbitrary per-shard weightings of the reduced value.
+    """
+    return jax.lax.psum(x, axis_name)
+
+
+def _psum_id_fwd(x, axis_name):
+    return jax.lax.psum(x, axis_name), None
+
+
+def _psum_id_bwd(axis_name, _, ct):
+    return (ct,)
+
+
+psum_id.defvjp(_psum_id_fwd, _psum_id_bwd)
 
 
 def row_mesh(n: int, axis: str = "rows") -> Mesh:

@@ -27,6 +27,7 @@ final set is still re-scored on feasible `repro.dispatch.dispatch`.
   quickstart:  PYTHONPATH=src python examples/tune_policies.py
 """
 
+from repro.execution import Coupling, ExecutionPlan
 from repro.tune.objective import (DispatchCoupling, PhysicalPolicy,
                                   PolicyParams, TuneProblem, cell_index,
                                   dispatch_coupling_from_grid,
@@ -35,11 +36,14 @@ from repro.tune.objective import (DispatchCoupling, PhysicalPolicy,
                                   soft_dispatch_ratio, soft_objective,
                                   transform)
 from repro.tune.optimizer import (TuneConfig, TuneResult, cell_best_rows,
-                                  hard_cpc, optimize, tune_loop)
+                                  hard_cpc, optimize,
+                                  sharded_soft_objective, tune_loop)
 
-__all__ = ["DispatchCoupling", "PhysicalPolicy", "PolicyParams",
+__all__ = ["Coupling", "DispatchCoupling", "ExecutionPlan",
+           "PhysicalPolicy", "PolicyParams",
            "TuneProblem", "TuneConfig", "TuneResult", "cell_best_rows",
            "cell_index", "dispatch_coupling_from_grid", "hard_cpc",
            "init_from_grid", "inverse_transform", "problem_from_grid",
            "soft_costs", "soft_dispatch_ratio", "soft_objective",
-           "transform", "optimize", "tune_loop"]
+           "sharded_soft_objective", "transform", "optimize",
+           "tune_loop"]

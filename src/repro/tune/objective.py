@@ -55,6 +55,7 @@ from repro.dispatch import (DispatchConfig, resolve_demand, segment_keys,
                             segment_rank)
 from repro.fleet.engine import fleet_costs
 from repro.kernels.soft_dispatch import soft_dispatch
+from repro.parallel.axes import psum_id
 from repro.kernels.soft_scan import soft_scan_parts
 
 
@@ -296,7 +297,9 @@ def soft_costs(raw: PolicyParams, problem: TuneProblem, tau, *,
 
 def soft_dispatch_ratio(cap: jax.Array, row_ratio: jax.Array,
                         coupling: DispatchCoupling, tau, *,
-                        min_dwell: int = 0, mw_scale: float = 0.05
+                        min_dwell: int = 0, mw_scale: float = 0.05,
+                        fused: bool = False,
+                        axis_name: Optional[str] = None
                         ) -> tuple[jax.Array, jax.Array]:
     """Fleet-level dispatched-CPC ratio of the relaxed schedules.
 
@@ -320,26 +323,75 @@ def soft_dispatch_ratio(cap: jax.Array, row_ratio: jax.Array,
     loss-scale cost: a sum does, a per-hour mean would dilute it by T,
     and the margin covers the soft capacity slightly overstating the
     hard schedules near thresholds).
+
+    With ``axis_name`` (inside a `shard_map` over a row mesh) each
+    program holds only its shard of rows: the per-cell selection and
+    the [C, T] availability / fixed-cost aggregates are reduced across
+    shards with `repro.parallel.axes.psum_id` / `jax.lax.pmax` before
+    the water-fill, so every shard dispatches the *whole* fleet — the
+    coupled term is identical (to ULP) on all shards, and because
+    `psum_id`'s backward is the identity (the aggregate's cotangent is
+    already replicated), its per-row gradients match the single
+    program exactly. Cells are widened by one dummy segment
+    so padded rows (``cell_id == C``, zero power/fixed/weight) drop
+    out of the fleet instead of polluting cell 0.
     """
     dtype = cap.dtype
     c = coupling.prices.shape[0]
 
     # per-cell soft selection over candidates (stabilised softmax)
     score = -row_ratio / jnp.maximum(tau * _SEL_SCALE, 1e-12)
-    peak = jax.ops.segment_max(score, coupling.cell_id, num_segments=c)
-    expw = jnp.exp(score - peak[coupling.cell_id])
-    norm = jax.ops.segment_sum(expw, coupling.cell_id, num_segments=c)
-    sel = expw / norm[coupling.cell_id]                         # [B]
+    if axis_name is None:
+        peak = jax.ops.segment_max(score, coupling.cell_id,
+                                   num_segments=c)
+        expw = jnp.exp(score - peak[coupling.cell_id])
+        norm = jax.ops.segment_sum(expw, coupling.cell_id,
+                                   num_segments=c)
+        sel = expw / norm[coupling.cell_id]                     # [B]
 
-    avail = (sel * coupling.power.astype(dtype))[:, None] * cap  # [B, T]
-    avail_c = jax.ops.segment_sum(avail, coupling.cell_id,
-                                  num_segments=c)               # [C, T]
-    fixed_fleet = jnp.sum(sel * coupling.fixed.astype(dtype))
+        avail = (sel * coupling.power.astype(dtype))[:, None] * cap
+        avail_c = jax.ops.segment_sum(avail, coupling.cell_id,
+                                      num_segments=c)           # [C, T]
+        fixed_fleet = jnp.sum(sel * coupling.fixed.astype(dtype))
+    else:
+        # local partials -> cross-shard reductions. The softmax shift
+        # is the global per-cell max (stop-gradded: shift invariance
+        # makes its gradient exactly zero); a cell with no local rows
+        # maxes to -inf, and the dummy pad segment stays -inf on every
+        # shard — clamp so exp(score - peak) cannot overflow there.
+        cseg = c + 1
+        # stop-grad BEFORE the pmax: shift invariance makes the peak's
+        # gradient exactly zero anyway, and pmax has no JVP rule
+        peak = jax.lax.pmax(
+            jax.lax.stop_gradient(
+                jax.ops.segment_max(score, coupling.cell_id,
+                                    num_segments=cseg)), axis_name)
+        peak = jnp.where(jnp.isfinite(peak), peak, 0.0)
+        expw = jnp.exp(score - peak[coupling.cell_id])
+        # norm reduces with a RAW psum: its cotangent is per-shard
+        # (each shard's own rows' softmax cotangents), and the psum
+        # backward — psum of those partials — is exactly the
+        # cross-shard sum a straddled cell needs
+        norm = jax.lax.psum(
+            jax.ops.segment_sum(expw, coupling.cell_id,
+                                num_segments=cseg), axis_name)
+        sel = expw / norm[coupling.cell_id]                     # [B]
+
+        # avail_c / fixed_fleet reduce with psum_id: they feed only
+        # replicated expressions (the water-fill and the fleet CPC),
+        # so their cotangent is already replicated and a raw psum's
+        # backward would over-count it x n_sh — see parallel.axes
+        avail = (sel * coupling.power.astype(dtype))[:, None] * cap
+        avail_c = psum_id(
+            jax.ops.segment_sum(avail, coupling.cell_id,
+                                num_segments=cseg), axis_name)[:c]
+        fixed_fleet = psum_id(
+            jnp.sum(sel * coupling.fixed.astype(dtype)), axis_name)
     demand = coupling.demand.astype(dtype)
     alloc = soft_dispatch(avail_c, coupling.keys.astype(dtype),
                           coupling.order, demand, tau=tau,
                           min_dwell=min_dwell, mw_scale=mw_scale,
-                          use_pallas=False)                     # [C, T]
+                          use_pallas=False, fused=fused)        # [C, T]
 
     energy = jnp.sum(alloc * coupling.prices.astype(dtype))
     prev = jnp.concatenate([jnp.zeros_like(alloc[:, :1]),
@@ -368,8 +420,11 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
                    dispatch_blend: float = 0.5,
                    dispatch_min_dwell: int = 0,
                    dispatch_mw_scale: float = 0.05,
+                   dispatch_fused: bool = False,
                    fused: bool = True, block_t: int = 256,
-                   reduction: str = "mean"):
+                   reduction: str = "mean",
+                   axis_name: Optional[str] = None,
+                   scale_rows: Optional[int] = None):
     """Scalar tuning loss at temperature ``tau`` (lower is better).
 
     loss = mean_b CPC_b / CPC_AO_b  (+ fleet-coupling penalties)
@@ -387,8 +442,9 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
     plus an availability-shortfall penalty under ``penalty_weight``, so
     gradients cannot park the fleet below the demand it must serve. The
     dispatch term couples every row through the shared water level —
-    this objective is then *not* batch-separable (the chunked/sharded
-    tuner paths refuse it).
+    this objective is then *not* batch-separable: the chunked tuner
+    path refuses it, and the sharded path reduces the fleet aggregates
+    with in-loop psums (``axis_name``) instead.
 
     ``reduction="sum"`` (the tuner hot loop's setting) sums the per-row
     ratios instead of averaging and scales the coupling penalties (and
@@ -397,12 +453,32 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
     share the batch* (Adam normalizes the common factor away), which is
     what lets the sharded / chunked `optimize` paths reproduce the
     single-program trajectory bit for bit.
+
+    With ``axis_name`` (tracing inside a `shard_map` over a row mesh)
+    the fleet aggregates — total instantaneous draw, aggregate
+    up-hours, and everything inside `soft_dispatch_ratio` — are
+    reduced across shards with `repro.parallel.axes.psum_id` before
+    the penalties are formed, so each shard's loss carries the coupled
+    terms of the *whole* fleet (identical on every shard to ULP); the
+    separable ratio sum stays shard-local. `psum_id`'s backward is the
+    identity (a raw psum would re-sum the replicated cotangent, an
+    n-shard over-count), so the per-row gradients of this per-shard
+    loss equal the single program's exactly — sharding a coupled
+    objective is a legal `ExecutionPlan`, not a refused one.
+    ``scale_rows`` then fixes the coupled terms' B-scale at the real
+    global row count (shard widths and padding must not change the
+    objective). ``aux["base"]`` / ``aux["coupled"]`` split the loss
+    into its separable and fleet-coupled parts (psum the first, keep
+    the second, to reassemble the global loss value on any shard).
     """
     costs, draw, cap = soft_costs(raw, problem, tau, fused=fused,
                                   block_t=block_t)
     ratio = costs.cpc / costs.cpc_ao
     loss = jnp.sum(ratio) if reduction == "sum" else jnp.mean(ratio)
-    scale = ratio.shape[0] if reduction == "sum" else 1.0
+    if scale_rows is not None:
+        scale = scale_rows if reduction == "sum" else 1.0
+    else:
+        scale = ratio.shape[0] if reduction == "sum" else 1.0
 
     # coupling terms weight each row by 1/|cell| so a K-policy grid
     # charges each physical site once (per-site candidate mean), not K
@@ -412,10 +488,14 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
     if power_cap_mw is not None:
         fleet_mw = jnp.sum((problem.power * w)[:, None] * draw,
                            axis=0)                                  # [T]
+        if axis_name is not None:
+            fleet_mw = psum_id(fleet_mw, axis_name)
         excess = jax.nn.relu(fleet_mw - power_cap_mw) / power_cap_mw
         penalty = penalty + jnp.mean(excess ** 2)
     if min_up_hours is not None:
         total_up = jnp.sum(w * costs.up_hours)
+        if axis_name is not None:
+            total_up = psum_id(total_up, axis_name)
         deficit = jax.nn.relu(min_up_hours - total_up) / min_up_hours
         penalty = penalty + deficit ** 2
 
@@ -423,12 +503,20 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
     if dispatch is not None:
         dratio, shortfall = soft_dispatch_ratio(
             cap, ratio, dispatch, tau, min_dwell=dispatch_min_dwell,
-            mw_scale=dispatch_mw_scale)
+            mw_scale=dispatch_mw_scale, fused=dispatch_fused,
+            axis_name=axis_name)
+        base = (1.0 - dispatch_blend) * loss
         loss = (1.0 - dispatch_blend) * loss \
             + dispatch_blend * scale * dratio
         penalty = penalty + shortfall
+    else:
+        base = loss
+    coupled = dispatch_blend * scale * dratio if dispatch is not None \
+        else jnp.zeros((), ratio.dtype)
+    coupled = coupled + scale * penalty_weight * penalty
     loss = loss + scale * penalty_weight * penalty
 
     aux = {"ratio": ratio, "cpc": costs.cpc, "up_hours": costs.up_hours,
-           "penalty": penalty, "dispatch_ratio": dratio}
+           "penalty": penalty, "dispatch_ratio": dratio,
+           "base": base, "coupled": coupled}
     return loss, aux

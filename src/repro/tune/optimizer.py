@@ -46,7 +46,9 @@ reported CPC can never be worse than the swept grid it started from.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -57,6 +59,8 @@ from repro import obs
 from repro.dispatch import (DispatchConfig, DispatchInfeasible,
                             build_problem)
 from repro.dispatch import dispatch as dispatch_solve
+from repro.execution import (Coupling, ExecutionPlan, take_rows,
+                             validate_plan_coupling)
 from repro.fleet.engine import backtest, fleet_costs
 from repro.fleet.grid import concat_rows, row_chunks
 from repro.kernels.ref import fleet_scan_ref
@@ -72,9 +76,34 @@ from repro.tune.objective import (DispatchCoupling, PhysicalPolicy,
 from jax.sharding import PartitionSpec as P
 
 
-class TuneConfig(NamedTuple):
+_PLAN_FIELD_DEFAULTS = {"chunk_rows": 0, "shard": True}
+_COUPLING_FIELD_DEFAULTS = {
+    "power_cap_mw": None, "min_up_hours": None, "penalty_weight": 10.0,
+    "dispatch": None, "dispatch_soft": None, "dispatch_blend": 0.5,
+    "dispatch_mw_scale": 0.05}
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneConfig:
     """Hyperparameters of a fleet tuning run (hashable — used as a jit
-    static argument)."""
+    static argument).
+
+    Execution layout and fleet coupling are configured by the
+    `repro.execution` pair: ``plan`` (`ExecutionPlan`: single / chunked
+    / sharded, device cap, reproducibility contract) and ``coupling``
+    (`Coupling`: power cap, aggregate-compute floor, dispatch-aware
+    term, hard-dispatch re-scoring). The pre-redesign spellings
+    (``chunk_rows`` / ``shard`` / ``power_cap_mw`` / ``min_up_hours`` /
+    ``penalty_weight`` / ``dispatch`` / ``dispatch_soft`` /
+    ``dispatch_blend`` / ``dispatch_mw_scale``) still work for one
+    release: they emit a `DeprecationWarning` at construction and
+    forward into ``resolved_plan`` / ``resolved_coupling``, which is
+    all the tuner reads. Mixing an explicit ``plan=``/``coupling=``
+    with the old spellings it replaces raises. The chunk-under-coupling
+    legality rule is a constructor invariant
+    (`repro.execution.validate_plan_coupling`), raised here instead of
+    deep inside the hot-loop dispatcher.
+    """
 
     steps: int = 300
     lr: float = 0.5              # raw-space Adam step (price units for
@@ -91,16 +120,14 @@ class TuneConfig(NamedTuple):
     tau_start: float = 30.0      # EUR/MWh-scale smoothing at the start
     tau_end: float = 0.3         # nearly hard by the end
     # hot-loop implementation knobs
-    fused: bool = True           # checkpointed custom-VJP soft scan
-                                 # (False: native autodiff — the PR-3
-                                 # baseline, kept for A/B benchmarks)
+    fused: bool = True           # checkpointed custom-VJP soft scan +
+                                 # fused soft-dispatch VJP (False:
+                                 # native autodiff — the PR-3 baseline,
+                                 # kept for A/B benchmarks)
     block_t: int = 256           # checkpoint block length (hours)
-    chunk_rows: int = 0          # tune the grid in row slices of this
-                                 # size (0 disables; >= 2) — bounds
-                                 # peak memory, bit-identical per row
-    shard: bool = True           # shard_map rows over available devices
-                                 # (auto: engages when >1 device and no
-                                 # coupling penalty; bit-identical)
+    # deprecated execution spellings (forward into resolved_plan)
+    chunk_rows: int = 0
+    shard: bool = True
     eval_stages: int = 4         # hard (tau -> 0) re-evaluations spread
                                  # over the anneal: the scan splits into
                                  # this many segments (same per-step
@@ -109,27 +136,83 @@ class TuneConfig(NamedTuple):
                                  # a hard CPC re-eval at each boundary
                                  # -> TuneResult.stage_cpc; clamped to
                                  # [1, steps]
-    # fleet-coupling penalties (None disables)
+    # deprecated coupling spellings (forward into resolved_coupling)
     power_cap_mw: Optional[float] = None
     min_up_hours: Optional[float] = None
     penalty_weight: float = 10.0
-    # feasible cross-site dispatch re-evaluation (None disables): after
-    # hard re-evaluation, score the tuned and the best-swept policy sets
-    # under `repro.dispatch` — hard constraints, not the soft penalties
-    # above — and report both (TuneResult.dispatch)
     dispatch: Optional[DispatchConfig] = None
-    # dispatch-AWARE tuning (None disables): differentiate through the
-    # temperature-relaxed water-fill dispatcher
-    # (`repro.kernels.soft_dispatch`, co-annealed with the scan tau) so
-    # per-site thresholds learn their fleet role; the final hard
-    # re-evaluation is still scored on feasible `dispatch()` (under
-    # ``dispatch`` if also set, else under this config). Couples every
-    # row through the shared water level: the chunked path refuses it
-    # loudly and sharding is disabled.
     dispatch_soft: Optional[DispatchConfig] = None
-    dispatch_blend: float = 0.5      # fleet-dispatch share of the loss
-    dispatch_mw_scale: float = 0.05  # MW temperature of the dwell reset
-                                     # gate per unit tau
+    dispatch_blend: float = 0.5
+    dispatch_mw_scale: float = 0.05
+    # the redesigned config surface (None: derive from the fields above)
+    plan: Optional[ExecutionPlan] = None
+    coupling: Optional[Coupling] = None
+
+    def __post_init__(self):
+        plan_old = [k for k, d in _PLAN_FIELD_DEFAULTS.items()
+                    if getattr(self, k) != d]
+        coup_old = [k for k, d in _COUPLING_FIELD_DEFAULTS.items()
+                    if getattr(self, k) != d]
+        if self.plan is not None and plan_old:
+            raise ValueError(
+                f"TuneConfig: pass plan= or the deprecated "
+                f"{'/'.join(plan_old)}, not both")
+        if self.coupling is not None and coup_old:
+            raise ValueError(
+                f"TuneConfig: pass coupling= or the deprecated "
+                f"{'/'.join(coup_old)}, not both")
+        for k in plan_old:
+            warnings.warn(
+                f"TuneConfig.{k} is deprecated — pass "
+                f"plan=repro.execution.ExecutionPlan(...) instead",
+                DeprecationWarning, stacklevel=3)
+        for k in coup_old:
+            warnings.warn(
+                f"TuneConfig.{k} is deprecated — pass "
+                f"coupling=repro.execution.Coupling(...) instead",
+                DeprecationWarning, stacklevel=3)
+        # constructor invariants: ExecutionPlan validates chunk_rows
+        # (width-1 chunks etc.), validate_plan_coupling the
+        # chunk-under-coupling contradiction — both raised here, at
+        # assembly time, not deep inside the hot-loop dispatcher
+        validate_plan_coupling(self.resolved_plan,
+                               self.resolved_coupling,
+                               context="TuneConfig")
+
+    @property
+    def resolved_plan(self) -> ExecutionPlan:
+        """The `ExecutionPlan` the tuner executes: ``plan`` when given,
+        else the deprecated fields' equivalent (``chunk_rows`` ->
+        chunked/bitwise, ``shard=False`` -> single, else auto)."""
+        if self.plan is not None:
+            return self.plan
+        if self.chunk_rows:
+            return ExecutionPlan(mode="chunked",
+                                 chunk_rows=self.chunk_rows,
+                                 contract="bitwise")
+        if not self.shard:
+            return ExecutionPlan(mode="single")
+        return ExecutionPlan()
+
+    @property
+    def resolved_coupling(self) -> Coupling:
+        """The `Coupling` in force (never None — an unbound `Coupling()`
+        when nothing couples): ``coupling`` when given, else the
+        deprecated fields' equivalent."""
+        if self.coupling is not None:
+            return self.coupling
+        return Coupling(power_cap_mw=self.power_cap_mw,
+                        min_up_hours=self.min_up_hours,
+                        penalty_weight=self.penalty_weight,
+                        dispatch=self.dispatch_soft,
+                        dispatch_blend=self.dispatch_blend,
+                        dispatch_mw_scale=self.dispatch_mw_scale,
+                        reeval=self.dispatch)
+
+    def _replace(self, **kw) -> "TuneConfig":
+        """NamedTuple-style replace (the pre-redesign TuneConfig was a
+        NamedTuple; callers keep working)."""
+        return dataclasses.replace(self, **kw)
 
 
 class TuneResult(NamedTuple):
@@ -194,13 +277,16 @@ def _stage_bounds(cfg: TuneConfig) -> list:
 
 def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
                coupling: Optional[DispatchCoupling] = None,
-               telemetry: bool = False):
+               telemetry: bool = False,
+               axis_name: Optional[str] = None,
+               scale_rows: Optional[int] = None):
     """The tuner hot loop: annealed Adam scan + hard re-evaluations.
 
     Traced under plain jit (single program), under `shard_map` (one
     shard of rows), and per chunk — identical per-row math in all
     three, which is what makes the scaled-out paths bit-consistent
-    (``coupling`` is only ever non-None in the single program).
+    (``coupling`` is non-None in the single program and, since the
+    psum rework, in the sharded path — never in a chunk).
 
     The step scan runs as ``cfg.eval_stages`` back-to-back `lax.scan`
     segments over the one tau schedule — the per-step ops are the same,
@@ -213,9 +299,18 @@ def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
     fraction side-outputs to the history — observers of values the
     update already computes, never inputs to it, keeping the tuned
     parameters bit-identical (asserted in tests/test_obs.py).
+
+    ``axis_name`` (set when traced inside the sharded path's
+    `shard_map`) flows into `soft_objective`, whose fleet aggregates
+    then psum-reduce across shards — coupled objectives shard;
+    ``scale_rows`` pins the coupled terms' B-scale at the real global
+    row count. The per-shard history loss removes the coupled term's
+    cross-shard duplication (every shard carries the full global term)
+    so the shard-averaged history matches the single program's.
     Returns ``(raw_f, history, cpc_tuned)``.
     """
     b = raw0.raw_off.shape[0]
+    rc = cfg.resolved_coupling
     opt = AdamWConfig(lr=cfg.lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
                       weight_decay=0.0, clip_norm=cfg.clip_norm)
 
@@ -231,20 +326,31 @@ def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
     state0 = AdamWState(step=jnp.zeros((), jnp.int32),
                         mu=jax.tree.map(jnp.zeros_like, raw0),
                         nu=jax.tree.map(jnp.zeros_like, raw0))
-    min_dwell = cfg.dispatch_soft.min_dwell_h \
-        if cfg.dispatch_soft is not None else 0
+    min_dwell = rc.dispatch.min_dwell_h \
+        if rc.dispatch is not None else 0
 
     def step(carry, tau):
         raw, st = carry
         (loss, aux), grads = grad_fn(
-            raw, problem, tau, power_cap_mw=cfg.power_cap_mw,
-            min_up_hours=cfg.min_up_hours,
-            penalty_weight=cfg.penalty_weight,
-            dispatch=coupling, dispatch_blend=cfg.dispatch_blend,
+            raw, problem, tau, power_cap_mw=rc.power_cap_mw,
+            min_up_hours=rc.min_up_hours,
+            penalty_weight=rc.penalty_weight,
+            dispatch=coupling, dispatch_blend=rc.dispatch_blend,
             dispatch_min_dwell=min_dwell,
-            dispatch_mw_scale=cfg.dispatch_mw_scale,
-            fused=cfg.fused, block_t=cfg.block_t, reduction="sum")
-        out = {"loss": loss / b, "tau": tau,
+            dispatch_mw_scale=rc.dispatch_mw_scale,
+            dispatch_fused=cfg.fused,
+            fused=cfg.fused, block_t=cfg.block_t, reduction="sum",
+            axis_name=axis_name, scale_rows=scale_rows)
+        if axis_name is None:
+            hist_loss = loss / b
+        else:
+            # every shard's loss carries the full global coupled term;
+            # keep 1/n_sh of it so the caller's shard average (which
+            # divides the separable part by B through the b-per-shard
+            # denominators) reproduces the single program's loss/B
+            n_sh = jax.lax.psum(1, axis_name)
+            hist_loss = (loss - aux["coupled"] * (1.0 - 1.0 / n_sh)) / b
+        out = {"loss": hist_loss, "tau": tau,
                "penalty": aux["penalty"],
                "dispatch_ratio": aux["dispatch_ratio"]}
         if telemetry:
@@ -300,10 +406,9 @@ _PROBLEM_ROW_FIELDS = tuple(f for f in TuneProblem._fields
 
 def _take_problem(problem: TuneProblem, idx: np.ndarray) -> TuneProblem:
     """Row-slice every [B] field of a `TuneProblem` (prices stay shared,
-    exactly like `ScenarioGrid.take_rows`)."""
-    return problem._replace(**{
-        f: jnp.asarray(getattr(problem, f))[idx]
-        for f in _PROBLEM_ROW_FIELDS})
+    exactly like `ScenarioGrid.take_rows`) — the generic shape-driven
+    `repro.execution.take_rows`."""
+    return take_rows(problem, idx, shared=("prices",))
 
 
 @functools.cache
@@ -328,48 +433,128 @@ def _sharded_loop(n_dev: int, cfg: TuneConfig, telemetry: bool = False):
     return jax.jit(fn, donate_argnums=(0,))
 
 
+@functools.cache
+def _sharded_plan_loop(n_dev: int, cfg: TuneConfig, scale_rows: int,
+                       with_dispatch: bool, telemetry: bool = False):
+    """jit(shard_map(loop)) for an explicit ``mode='sharded'`` plan:
+    the loop traces with ``axis_name='rows'`` so every fleet aggregate
+    psum-reduces across shards — coupled objectives included. Cached
+    per (n_dev, cfg, real-row count, dispatch-coupling presence)."""
+    mesh = row_mesh(n_dev)
+    rows = P("rows")
+
+    def body(raw0, problem, coupling=None):
+        raw_f, hist, cpc = _loop_body(raw0, problem, cfg, coupling,
+                                      telemetry=telemetry,
+                                      axis_name="rows",
+                                      scale_rows=scale_rows)
+        return raw_f, {k: v[None] for k, v in hist.items()}, cpc
+
+    prob_specs = TuneProblem(
+        prices=P(), **{f: rows for f in _PROBLEM_ROW_FIELDS})
+    if with_dispatch:
+        coup_specs = DispatchCoupling(
+            cell_id=rows, prices=P(), keys=P(), order=P(), demand=P(),
+            fixed=rows, power=rows, migrate_cost=P(), cpc_ref=P())
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(rows, prob_specs, coup_specs),
+                       out_specs=(rows, rows, rows),
+                       **SHARD_MAP_NOCHECK)
+    else:
+        fn = shard_map(lambda r, p: body(r, p), mesh=mesh,
+                       in_specs=(rows, prob_specs),
+                       out_specs=(rows, rows, rows),
+                       **SHARD_MAP_NOCHECK)
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def _pad_rows(raw0: PolicyParams, problem: TuneProblem,
+              coupling: Optional[DispatchCoupling], n_rows: int,
+              b_pad: int):
+    """Pad the row axis to ``b_pad`` for equal shard widths by
+    repeating row 0 — *including* ``raw0``, so a warm start survives
+    the padding (the silent-ignore bug this replaces). Padded rows are
+    neutralised out of every fleet aggregate: zero site weight (power
+    cap / up-hours), zero coupling power and fixed cost, and the dummy
+    dispatch cell ``C`` that `soft_dispatch_ratio`'s sharded branch
+    discards — their own tuning trajectory is real but dropped on
+    return, and sum-reduction keeps them out of real rows' gradients.
+    """
+    pad = b_pad - n_rows
+
+    def rep0(x):
+        x = jnp.asarray(x)
+        return jnp.concatenate([x, jnp.repeat(x[:1], pad, axis=0)])
+
+    raw0 = jax.tree.map(rep0, raw0)
+    problem = problem._replace(
+        **{f: rep0(getattr(problem, f)) for f in _PROBLEM_ROW_FIELDS})
+    problem = problem._replace(
+        site_weight=problem.site_weight.at[n_rows:].set(0.0))
+    if coupling is not None:
+        c = coupling.prices.shape[0]
+        coupling = coupling._replace(
+            cell_id=jnp.concatenate([
+                coupling.cell_id, jnp.full((pad,), c, jnp.int32)]),
+            fixed=rep0(coupling.fixed).at[n_rows:].set(0.0),
+            power=rep0(coupling.power).at[n_rows:].set(0.0))
+    return raw0, problem, coupling
+
+
+def _run_sharded(raw0: PolicyParams, problem: TuneProblem,
+                 cfg: TuneConfig, n_rows: int, n_dev: int,
+                 coupling: Optional[DispatchCoupling],
+                 telemetry: bool):
+    """The explicit ``mode='sharded'`` path: pad rows to equal shard
+    widths when needed (warm start carried through — see `_pad_rows`),
+    run the psum-reduced loop, trim the padding off every per-row
+    output."""
+    width = -(-n_rows // n_dev)
+    b_pad = width * n_dev
+    if b_pad != n_rows:
+        raw0, problem, coupling = _pad_rows(raw0, problem, coupling,
+                                            n_rows, b_pad)
+    fn = _sharded_plan_loop(n_dev, cfg, n_rows, coupling is not None,
+                            telemetry)
+    if coupling is not None:
+        raw_f, hist, cpc = fn(raw0, problem, coupling)
+    else:
+        raw_f, hist, cpc = fn(raw0, problem)
+    raw_f = jax.tree.map(lambda x: x[:n_rows], raw_f)
+    return raw_f, {k: np.asarray(v).mean(axis=0)
+                   for k, v in hist.items()}, cpc[:n_rows]
+
+
 def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
               n_rows: int,
               coupling: Optional[DispatchCoupling] = None,
               telemetry: bool = False):
-    """Dispatch the hot loop over the single / sharded / chunked path.
+    """Dispatch the hot loop over the `ExecutionPlan` paths.
 
-    Per-row math is identical in all three (sum-reduction makes each
+    Per-row math is identical in all of them (sum-reduction makes each
     row's gradient independent of its batch); chunking is bitwise, the
-    sharded path is ULP-equivalent (see the module docstring). Returns
+    sharded paths are ULP-equivalent — and since the psum rework an
+    explicit ``mode='sharded'`` plan carries coupled objectives too
+    (``mode='auto'`` stays conservative: coupling runs the single
+    program unless sharding is asked for). Returns
     ``(raw_f, history, cpc_tuned)`` with history arrays [steps].
     """
-    coupled = (cfg.power_cap_mw is not None
-               or cfg.min_up_hours is not None
-               or coupling is not None)
+    plan = cfg.resolved_plan
+    rc = cfg.resolved_coupling
+    coupled = coupling is not None or rc.power_cap_mw is not None \
+        or rc.min_up_hours is not None
+    # re-validated here because callers may hand `optimize` a plan
+    # constructed outside TuneConfig's constructor invariant
+    validate_plan_coupling(plan, rc, context="TuneConfig")
 
-    if cfg.chunk_rows == 1:
-        raise ValueError(
-            "TuneConfig.chunk_rows must be >= 2: width-1 programs "
-            "scalarize on XLA:CPU and drift off the bit-identical "
-            "contract (same reason shards keep >= 2 rows)")
-    if cfg.chunk_rows and coupled:
-        # loud, not silent: a chunked water level / penalty over a
-        # partial fleet is a different objective, and quietly dropping
-        # the chunking instead would drop the memory bound the user
-        # asked for
-        raise ValueError(
-            "TuneConfig.chunk_rows cannot be combined with fleet "
-            "coupling (power_cap_mw / min_up_hours / dispatch_soft): "
-            "coupled terms see every row at once, so a row chunk would "
-            "optimize against a fleet that does not exist — tune "
-            "unchunked (one program) or drop the coupling")
-
-    # an explicit chunk_rows is a memory bound the user asked for — it
-    # wins over auto-sharding (the two do not compose yet; a sharded
-    # host that also needs chunking should chunk)
-    if cfg.chunk_rows and n_rows > cfg.chunk_rows:
+    chunk = plan.chunk_rows
+    if chunk and n_rows > chunk:
         # pad to one compile shape by repeating row 0: padded rows are
         # tuned like any other and dropped afterwards — per-row math is
         # batch-independent, so the real rows are unaffected (the loss
         # *history*, a diagnostic, does average over the padding)
         raws, cpcs, hists = [], [], []
-        for sl in row_chunks(n_rows, cfg.chunk_rows):
+        for sl in row_chunks(n_rows, chunk):
             raw_j = jax.tree.map(lambda x: jnp.asarray(x)[sl], raw0)
             r, h, cp = tune_loop(raw_j, _take_problem(problem, sl),
                                  cfg=cfg, telemetry=telemetry)
@@ -381,16 +566,23 @@ def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
         return (concat_rows(raws, n_rows), hist,
                 concat_rows(cpcs, n_rows))
 
-    # an explicit chunk_rows wins over auto-sharding even when the grid
-    # is small enough to skip the chunked branch above: the user opted
-    # into the bitwise chunk contract, and the shard path is only
-    # ULP-equivalent
-    if cfg.shard and not coupled and not cfg.chunk_rows:
+    if plan.mode == "sharded":
         n_avail = len(jax.devices())
-        # largest divisor of B that keeps >= 2 rows per shard: width-1
-        # shards scalarize on XLA:CPU and round a few ops differently
-        # (observed 1-ulp drift), breaking the bit-consistency contract
-        # — and a 1-row shard is degenerate parallelism anyway
+        cap = plan.devices if plan.devices else n_avail
+        # >= 2 rows per shard always: width-1 shards scalarize on
+        # XLA:CPU (observed 1-ulp drift) and are degenerate parallelism
+        n_dev = max(1, min(cap, n_avail, n_rows // 2))
+        if n_dev > 1:
+            return _run_sharded(raw0, problem, cfg, n_rows, n_dev,
+                                coupling, telemetry)
+    elif plan.mode == "auto" and not coupled and not chunk:
+        # auto-sharding: an explicit chunk_rows is a memory bound the
+        # user asked for — it wins over auto-sharding even when the
+        # grid is small enough to skip the chunked branch above (the
+        # user opted into the bitwise chunk contract; shards are only
+        # ULP-equivalent)
+        n_avail = len(jax.devices())
+        # largest divisor of B that keeps >= 2 rows per shard
         n_dev = next((d for d in range(min(n_avail, n_rows // 2), 0, -1)
                       if n_rows % d == 0), 1)
         if n_dev > 1:
@@ -402,6 +594,98 @@ def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
     raw_f, hist, cpc = tune_loop(raw0, problem, coupling, cfg=cfg,
                                  telemetry=telemetry)
     return raw_f, {k: np.asarray(v) for k, v in hist.items()}, cpc
+
+
+def sharded_soft_objective(raw: PolicyParams, problem: TuneProblem, tau,
+                           *, n_dev: int,
+                           coupling: Optional[DispatchCoupling] = None,
+                           **kwargs):
+    """The global coupled loss evaluated under `shard_map` over a row
+    mesh — the acceptance probe for the psum rework (and what
+    `benchmarks/bench_tune_coupled.py` times).
+
+    Each shard evaluates `soft_objective` with ``axis_name='rows'``
+    (fleet aggregates psum-reduced, coupled term identical on every
+    shard) and the global value is reassembled as
+    ``psum(aux['base']) + aux['coupled']`` — the separable part summed
+    across shards, the fleet-coupled part counted once. The result is
+    ULP-equal to the single program's ``reduction='sum'`` loss, and its
+    gradient w.r.t. ``raw`` is *exactly* the single program's (the
+    coupled aggregates reduce through `psum_id`, whose backward is the
+    identity). ``kwargs`` forward into `soft_objective` (power_cap_mw,
+    min_up_hours, dispatch_blend, fused, ...). B must divide evenly
+    into ``n_dev`` shards.
+
+    Differentiable in ``raw`` only: a `custom_vjp` takes the gradient
+    *inside* each shard's program (the same move `_sharded_plan_loop`
+    makes), because reverse mode *through* `shard_map` stages the fused
+    kernels' scalar residuals across the mesh, which spec inference
+    rejects under ``check_rep=False`` — and ``check_rep=True`` hits the
+    known scan replication-type bug. The per-shard adjoint IS the
+    global one: each shard's gradient of its *local* loss
+    ``base + coupled`` w.r.t. its own rows equals the single program's
+    per-row gradient (cross-shard base terms don't touch these rows;
+    the coupled term reduces through `psum_id`).
+    ``problem``/``coupling``/``tau`` are treated as constants.
+    """
+    b = raw.raw_off.shape[0]
+    if b % n_dev:
+        raise ValueError(
+            f"sharded_soft_objective: {b} rows do not split evenly over "
+            f"{n_dev} shards — pad the batch (see _pad_rows) or pick a "
+            "divisor shard count")
+    mesh = row_mesh(n_dev)
+    rows = P("rows")
+    prob_specs = TuneProblem(
+        prices=P(), **{f: rows for f in _PROBLEM_ROW_FIELDS})
+
+    def body(raw_s, problem_s, coupling_s=None):
+        _, aux = soft_objective(
+            raw_s, problem_s, tau, dispatch=coupling_s,
+            reduction="sum", axis_name="rows", scale_rows=b, **kwargs)
+        # base is shard-local (separable sum), coupled is the full
+        # global term on every shard — psum the first, keep the second
+        return jax.lax.psum(aux["base"], "rows") + aux["coupled"]
+
+    def grad_body(raw_s, problem_s, coupling_s=None):
+        # differentiate the *local* loss (base + coupled), not the
+        # psum-reassembled global value: other shards' base terms do
+        # not depend on these rows, and the coupled term's cross-shard
+        # aggregates go through psum_id, so the per-shard gradient of
+        # the local loss IS the single program's per-row gradient
+        def local(rs):
+            return soft_objective(
+                rs, problem_s, tau, dispatch=coupling_s,
+                reduction="sum", axis_name="rows", scale_rows=b,
+                **kwargs)[0]
+        return jax.grad(local)(raw_s)
+
+    if coupling is not None:
+        in_specs = (rows, prob_specs, DispatchCoupling(
+            cell_id=rows, prices=P(), keys=P(), order=P(), demand=P(),
+            fixed=rows, power=rows, migrate_cost=P(), cpc_ref=P()))
+        extra = (problem, coupling)
+    else:
+        in_specs = (rows, prob_specs)
+        extra = (problem,)
+    val_fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=P(), **SHARD_MAP_NOCHECK)
+    grad_fn = shard_map(grad_body, mesh=mesh, in_specs=in_specs,
+                        out_specs=rows, **SHARD_MAP_NOCHECK)
+
+    @jax.custom_vjp
+    def loss(r):
+        return val_fn(r, *extra)
+
+    def loss_fwd(r):
+        return val_fn(r, *extra), r
+
+    def loss_bwd(r, ct):
+        g = grad_fn(r, *extra)
+        return (jax.tree.map(lambda x: x * ct, g),)
+
+    loss.defvjp(loss_fwd, loss_bwd)
+    return loss(raw)
 
 
 def _hard_cpc_batched(p_on, p_off, off_level, problem: TuneProblem,
@@ -455,7 +739,8 @@ def _dispatch_reeval(grid, params: PhysicalPolicy, cpc: np.ndarray,
         try:
             return dispatch_solve(build_problem(
                 prices, np.asarray(p_on)[take], np.asarray(p_off)[take],
-                np.asarray(lvl)[take], power, dcfg, fixed=fixed)), None
+                np.asarray(lvl)[take], power, dcfg, fixed=fixed),
+                plan=getattr(dcfg, "plan", None)), None
         except DispatchInfeasible as e:
             return None, str(e)
 
@@ -494,9 +779,11 @@ def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
     cell, the reported ``cpc`` therefore matches or beats the best swept
     policy on every row. With fleet-coupling penalties configured the
     swept fallback is disabled (swept policies ignore the constraints),
-    so ``cpc`` reports the tuned params unconditionally — sharding is
-    disabled too, and an explicit ``chunk_rows`` raises, since coupled
-    terms see every row at once.
+    so ``cpc`` reports the tuned params unconditionally — an explicit
+    ``chunk_rows`` raises, since coupled terms see every row at once,
+    and auto-mode sharding stays off; an explicit
+    ``plan=ExecutionPlan(mode='sharded')`` *does* shard the coupled
+    objective, psum-reducing its fleet aggregates across the row mesh.
 
     With ``cfg.dispatch_soft`` the annealed objective additionally
     differentiates through the relaxed water-fill dispatcher
@@ -529,16 +816,22 @@ def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
         # caller's warm-start source (e.g. the previous tick's
         # TuneResult in a receding-horizon loop) stays alive
         raw0 = PolicyParams(*(jnp.array(a) for a in raw0))
-    coupling = dispatch_coupling_from_grid(grid, cfg.dispatch_soft) \
-        if cfg.dispatch_soft is not None else None
+    rc = cfg.resolved_coupling
+    chunk = cfg.resolved_plan.chunk_rows
+    coupling = dispatch_coupling_from_grid(grid, rc.dispatch) \
+        if rc.dispatch is not None else None
     raw_f, hist, cpc_tuned_dev = _run_loop(raw0, problem, cfg,
                                            grid.n_rows, coupling,
                                            telemetry)
     stage_cpc = np.asarray(hist.pop("stage_cpc"), np.float64)
     cpc_tuned = np.asarray(cpc_tuned_dev, np.float64)
 
-    # hard re-evaluation of the swept baselines at tau -> 0
-    swept = backtest(grid, use_pallas=False, chunk_rows=cfg.chunk_rows)
+    # hard re-evaluation of the swept baselines at tau -> 0 (chunked
+    # under the same memory bound the tuning run declared)
+    swept_plan = ExecutionPlan(mode="chunked", chunk_rows=chunk,
+                               contract="bitwise") if chunk \
+        else ExecutionPlan(mode="single")
+    swept = backtest(grid, use_pallas=False, plan=swept_plan)
     cpc_swept = np.asarray(swept.cpc, np.float64)
     best_row = cell_best_rows(grid, cpc_swept)
     cpc_swept_best = cpc_swept[best_row]
@@ -548,11 +841,10 @@ def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
     cb = PhysicalPolicy(p_on=grid.p_on[best_row], p_off=grid.p_off[best_row],
                         off_level=grid.off_level[best_row])
     cpc_cb = _hard_cpc_batched(cb.p_on, cb.p_off, cb.off_level, problem,
-                               cfg.chunk_rows)
+                               chunk)
 
     cand = np.stack([cpc_tuned, cpc_swept, cpc_cb])        # [3, B]
-    if (cfg.power_cap_mw is not None or cfg.min_up_hours is not None
-            or cfg.dispatch_soft is not None):
+    if rc.binds:
         # fleet-coupling constraints: the swept baselines ignore them, so
         # falling back to a lower-CPC swept policy would silently violate
         # the constraint the user asked for — keep the tuned params.
@@ -576,8 +868,7 @@ def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
         off_level=pick(tuned.off_level, grid.off_level, cb.off_level))
 
     dispatch_out = None
-    reeval_cfg = cfg.dispatch if cfg.dispatch is not None \
-        else cfg.dispatch_soft
+    reeval_cfg = rc.reeval_config
     if reeval_cfg is not None:
         dispatch_out = _dispatch_reeval(grid, params, cpc, best_row,
                                         reeval_cfg)
