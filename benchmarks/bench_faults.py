@@ -1,0 +1,100 @@
+"""Fault-channel overhead: what a healthy run pays for fault support,
+and what a storm run pays for the mask channels.
+
+`repro.faults.faulted_backtest` threads extra mask channels
+(observed-price ffill, outage forcing, capacity derate) through the
+sequential scan — streaming two extra [B, T] arrays, a real cost.
+The contract is that *healthy* runs never pay it: trivial masks
+short-circuit to the plain backtest program, so
+``fault_mask_speed_ratio`` (healthy time / zero-fault time) sits at
+~1.0 and its committed baseline plus the 30% gate tolerance trips if
+someone removes the short-circuit. ``fault_storm_speed_ratio``
+(healthy time / storm time, ~0.4-0.7 on this shape) is the low-water
+mark for the masked program itself: a structural regression — a host
+round-trip or a de-fused gather per hour — costs integer factors and
+trips it."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.bench_fleet import _fleet_grid
+from benchmarks.common import timed, write_artifact
+from repro.faults import faulted_backtest, random_storm
+from repro.fleet import backtest
+
+
+def bench_faults(n_markets: int = 8, n_systems: int = 4,
+                 hours: int = 4096) -> dict:
+    grid = _fleet_grid(n_markets, n_systems, hours)
+    b = grid.n_rows
+
+    def run_plain():
+        rep = backtest(grid, use_pallas=False)
+        jax.block_until_ready(rep.cpc)
+        return rep
+
+    def run_zero_fault():
+        rep = faulted_backtest(grid)
+        jax.block_until_ready(rep.cpc)
+        return rep
+
+    def run_zero_fault_masked():
+        rep = faulted_backtest(grid, _force_masked=True)
+        jax.block_until_ready(rep.cpc)
+        return rep
+
+    storm = random_storm(7, b, n_markets, hours)
+
+    def run_storm():
+        rep = faulted_backtest(grid, storm)
+        jax.block_until_ready(rep.cpc)
+        return rep
+
+    rep_plain, us_plain = timed(run_plain, repeats=3)
+    rep_zero, us_zero = timed(run_zero_fault, repeats=3)
+    rep_masked, us_masked = timed(run_zero_fault_masked, repeats=3)
+    rep_storm, us_storm = timed(run_storm, repeats=3)
+
+    identical = all(
+        np.array_equal(np.asarray(getattr(rep_plain, f)),
+                       np.asarray(getattr(rep_masked, f)))
+        for f in rep_plain._fields)
+
+    return {
+        "rows": b,
+        "hours": hours,
+        "fault_mask_speed_ratio": us_plain / us_zero,
+        "fault_storm_speed_ratio": us_plain / us_storm,
+        "rows_per_s_plain": b / (us_plain * 1e-6),
+        "rows_per_s_zero_fault": b / (us_zero * 1e-6),
+        "rows_per_s_forced_masked": b / (us_masked * 1e-6),
+        "rows_per_s_storm": b / (us_storm * 1e-6),
+        "storm_events": len(storm),
+        "bit_identical_masked_zero_fault": identical,
+        "cpc_mean_storm": float(np.mean(np.asarray(rep_storm.cpc))),
+    }
+
+
+ALL = {"bench_faults": bench_faults}
+
+
+def main() -> None:
+    out = bench_faults()
+    print(f"fleet: {out['rows']} rows x {out['hours']} h")
+    print(f"plain backtest      : {out['rows_per_s_plain']:>12.0f} rows/s")
+    print(f"zero-fault          : {out['rows_per_s_zero_fault']:>12.0f} "
+          f"rows/s  (ratio {out['fault_mask_speed_ratio']:.3f} — "
+          "trivial masks short-circuit)")
+    print(f"forced masked       : "
+          f"{out['rows_per_s_forced_masked']:>12.0f} rows/s  "
+          f"(bit-identical: {out['bit_identical_masked_zero_fault']})")
+    print(f"storm ({out['storm_events']} faults)    : "
+          f"{out['rows_per_s_storm']:>12.0f} rows/s  "
+          f"(ratio {out['fault_storm_speed_ratio']:.3f})")
+    write_artifact("bench_faults", out)
+
+
+if __name__ == "__main__":
+    main()

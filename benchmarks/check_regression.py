@@ -43,8 +43,8 @@ LOW_WATER = 0.5           # --reset seeds baseline at median x this:
 # are fixed-seed deterministic (medians of identical values only burn
 # CI time)
 def _suites():
-    from benchmarks import (bench_dispatch, bench_fleet, bench_live,
-                            bench_tune, bench_tune_coupled)
+    from benchmarks import (bench_dispatch, bench_faults, bench_fleet,
+                            bench_live, bench_tune, bench_tune_coupled)
     return {
         # shapes sized so the fused calls take tens of ms: smaller smoke
         # runs time nothing but host jitter and the gate flakes
@@ -53,6 +53,20 @@ def _suites():
             dict(n_markets=8, n_systems=4, hours=4096, baseline_rows=16),
             ("speedup",),
             ("rows_per_s_vectorized", "rows_per_s_python_loop", "rows")),
+        # fault-support overhead on the same gated fleet shape:
+        # fault_mask_speed_ratio (~1.0) gates that healthy runs pay
+        # nothing for fault plumbing (trivial masks short-circuit to
+        # the plain program — removing the short-circuit costs ~20-60%
+        # and trips); fault_storm_speed_ratio (~0.4-0.7) is the masked
+        # program's low-water mark — a structural regression (host
+        # round-trip per hour) costs integer factors
+        "bench_faults": (
+            bench_faults.bench_faults,
+            dict(n_markets=8, n_systems=4, hours=4096),
+            ("fault_mask_speed_ratio", "fault_storm_speed_ratio"),
+            ("rows_per_s_plain", "rows_per_s_zero_fault",
+             "rows_per_s_forced_masked", "rows_per_s_storm", "rows",
+             "storm_events", "bit_identical_masked_zero_fault")),
         "bench_dispatch": (
             bench_dispatch.bench_dispatch,
             dict(n_sites=32, hours=4096, baseline_hours=256),

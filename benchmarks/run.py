@@ -10,7 +10,8 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (bench_dispatch, bench_fleet, bench_live,
+from benchmarks import (bench_dispatch, bench_faults, bench_fleet,
+                        bench_live,
                         bench_runtime, bench_tune, bench_tune_coupled,
                         paper_figures)
 from benchmarks.common import ARTIFACTS
@@ -30,6 +31,7 @@ def main() -> int:
         suites.update(bench_tune.ALL)
         suites.update(bench_tune_coupled.ALL)
         suites.update(bench_live.ALL)
+        suites.update(bench_faults.ALL)
         suites.update(bench_runtime.ALL)
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}
@@ -105,6 +107,11 @@ def _headline(name: str, out: dict) -> str:
                 f"{out['hours_per_s_python_loop']:.1f} per-hour loop "
                 f"(x{out['speedup']:.0f}), pallas|ref err "
                 f"{out['max_abs_err_pallas_vs_ref']:.1e}")
+    if name == "bench_faults":
+        return (f"{out['rows']} rows: zero-fault ratio "
+                f"{out['fault_mask_speed_ratio']:.2f}, storm ratio "
+                f"{out['fault_storm_speed_ratio']:.2f}, masked "
+                f"bit-identical: {out['bit_identical_masked_zero_fault']}")
     if name == "bench_tune":
         line = (f"{out['rows']} rows x {out['steps']} steps: "
                 f"{out['row_steps_per_s_fused']:.0f} row-steps/s fused "

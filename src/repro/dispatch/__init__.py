@@ -20,13 +20,13 @@ counterpart `repro.kernels.soft_dispatch` softmins over the same
 
 from repro.dispatch.allocate import (DispatchConfig, DispatchInfeasible,
                                      DispatchProblem, DispatchResult,
-                                     build_problem, diurnal_demand,
-                                     dispatch, resolve_demand,
-                                     segment_keys, segment_rank,
-                                     summarize_alloc)
+                                     Relief, build_problem,
+                                     diurnal_demand, dispatch,
+                                     resolve_demand, segment_keys,
+                                     segment_rank, summarize_alloc)
 from repro.dispatch.schedule import capacity_series, on_state_series
 
 __all__ = ["DispatchConfig", "DispatchInfeasible", "DispatchProblem",
-           "DispatchResult", "build_problem", "diurnal_demand",
+           "DispatchResult", "Relief", "build_problem", "diurnal_demand",
            "dispatch", "resolve_demand", "segment_keys", "segment_rank",
            "summarize_alloc", "capacity_series", "on_state_series"]

@@ -55,6 +55,27 @@ class DispatchInfeasible(ValueError):
     """A hard dispatch constraint cannot be met (never silently clipped)."""
 
 
+class Relief(NamedTuple):
+    """Graceful-degradation pricing for infeasible dispatch hours.
+
+    With a ``Relief`` attached (``DispatchConfig.relief`` /
+    ``DispatchProblem.relief``), an hour whose demand exceeds fleet
+    availability (or the power cap) no longer raises
+    `DispatchInfeasible`: every available MW is still placed by the
+    same water-fill, and the unmet remainder is *shed* at the
+    value-of-lost-load price — a slack segment priced at
+    ``voll_eur_mwh`` above every real one, so relief never displaces
+    feasible allocation. Hashable, so configs stay jit-static.
+
+    ``voll_eur_mwh`` should sit well above the market price span
+    (default 3000 EUR/MWh, the order of magnitude of European market
+    price caps): shed is then a last resort the optimizer only takes
+    when the fleet physically cannot serve.
+    """
+
+    voll_eur_mwh: float = 3000.0
+
+
 class DispatchConfig(NamedTuple):
     """Operator-side dispatch constraints (hashable — nested in
     `repro.tune.TuneConfig` as a jit-static field).
@@ -71,7 +92,9 @@ class DispatchConfig(NamedTuple):
     ``plan`` (`repro.execution.ExecutionPlan`, itself hashable) pins the
     execution layout `dispatch` solves under — the same object
     `TuneConfig` and `fleet.backtest` take; None leaves the backend
-    auto-select in force.
+    auto-select in force. ``relief`` (a `Relief`) converts infeasible
+    hours into priced shed instead of raising; None keeps the hard
+    raise, bit-identical to the pre-relief dispatcher.
     """
 
     demand_mw: Optional[Union[float, tuple]] = None
@@ -81,6 +104,7 @@ class DispatchConfig(NamedTuple):
     min_dwell_h: int = 0
     compute_floor_mwh: float = 0.0
     plan: Optional[ExecutionPlan] = None
+    relief: Optional[Relief] = None
 
 
 class DispatchProblem(NamedTuple):
@@ -99,6 +123,7 @@ class DispatchProblem(NamedTuple):
     # `segment_rank`); None -> computed on first dispatch
     order: Optional[np.ndarray] = None
     rank: Optional[np.ndarray] = None
+    relief: Optional[Relief] = None   # None -> infeasibility raises
 
 
 class DispatchResult(NamedTuple):
@@ -115,6 +140,10 @@ class DispatchResult(NamedTuple):
     slack_power_mw: float     # min_t (power cap - demand)
     slack_capacity_mw: float  # min_t (fleet availability - demand)
     slack_floor_mwh: float    # delivered - compute floor
+    # relief accounting (all zero when relief is None / nothing shed)
+    shed_mwh: float = 0.0     # demand the fleet could not serve
+    shed_cost: float = 0.0    # shed_mwh x value of lost load
+    n_shed_hours: int = 0     # hours with shed above _MOVE_TOL
 
 
 def segment_keys(prices: np.ndarray, migrate_cost: float) -> np.ndarray:
@@ -223,7 +252,7 @@ def build_problem(prices, p_on, p_off, off_level, power,
         compute_floor_mwh=float(cfg.compute_floor_mwh),
         fixed_cost=float(np.sum(fixed)) if fixed is not None else 0.0,
         site_names=tuple(site_names),
-        order=order, rank=rank)
+        order=order, rank=rank, relief=cfg.relief)
 
 
 def _infeasible(reason: str, **detail) -> DispatchInfeasible:
@@ -293,7 +322,18 @@ def dispatch(problem: DispatchProblem, *,
                 "water level); use mode='single' or 'auto'")
         if plan.mode == "single":
             use_pallas = False
-    _check_feasible(problem)
+    if problem.relief is None:
+        demand = problem.demand_mw
+        _check_feasible(problem)
+    else:
+        # graceful degradation: cap demand at the power ceiling (a
+        # bitwise no-op whenever the cap is slack) and let the
+        # width-clipped fill place every available MW; the remainder is
+        # priced as shed by `summarize_alloc` against the *original*
+        # demand. The kernels are untouched — relief is accounting.
+        demand = np.minimum(np.asarray(problem.demand_mw),
+                            problem.power_cap_mw
+                            ).astype(problem.demand_mw.dtype)
     order, rank = (problem.order, problem.rank) \
         if problem.order is not None and problem.rank is not None \
         else segment_rank(problem.prices, problem.migrate_cost)
@@ -301,12 +341,12 @@ def dispatch(problem: DispatchProblem, *,
         use_pallas = jax.default_backend() == "tpu"
     if use_pallas:
         alloc = dispatch_scan(problem.avail_mw, order, rank,
-                              problem.demand_mw,
+                              demand,
                               min_dwell=problem.min_dwell_h,
                               block_t=block_t)
     else:
         alloc = _dispatch_ref_jit(problem.avail_mw, order, rank,
-                                  problem.demand_mw,
+                                  demand,
                                   min_dwell=problem.min_dwell_h)
     return summarize_alloc(problem, np.asarray(alloc))
 
@@ -344,10 +384,33 @@ def summarize_alloc(problem: DispatchProblem,
 
     avail_total = np.asarray(problem.avail_mw, np.float64).sum(axis=0)
     slack_cap_t = avail_total - demand                    # [T]
+    if problem.relief is not None:
+        # unmet demand, priced at the value of lost load. Shed is the
+        # *exact* float64 shortfall against availability and the power
+        # cap — not against the f32 allocation, whose rounding residue
+        # would price phantom micro-shed on feasible hours — with the
+        # same 1e-6 MW tolerance `_check_feasible` applies, so relief
+        # sheds exactly where the hard path would have raised. The
+        # relief branch is structurally separate so relief=None keeps
+        # the exact pre-relief arithmetic.
+        served_t = np.minimum(demand,
+                              np.minimum(problem.power_cap_mw,
+                                         avail_total))
+        shed_t = np.clip(demand - served_t, 0.0, None)    # [T]
+        shed_t = np.where(shed_t > 1e-6, shed_t, 0.0)
+        shed_mwh = float(shed_t.sum())
+        shed_cost = float(problem.relief.voll_eur_mwh) * shed_mwh
+        n_shed_hours = int((shed_t > 0.0).sum())
+        cpc = (problem.fixed_cost + energy_cost + migration_cost
+               + shed_cost) / max(delivered, 1e-9)
+    else:
+        shed_mwh = shed_cost = 0.0
+        n_shed_hours = 0
+        cpc = (problem.fixed_cost + energy_cost + migration_cost) \
+            / max(delivered, 1e-9)
     result = DispatchResult(
         alloc_mw=alloc,
-        cpc=(problem.fixed_cost + energy_cost + migration_cost)
-        / max(delivered, 1e-9),
+        cpc=cpc,
         energy_cost=energy_cost,
         migration_cost=migration_cost,
         migration_mw=migration_mw,
@@ -357,6 +420,9 @@ def summarize_alloc(problem: DispatchProblem,
         slack_power_mw=float(problem.power_cap_mw - demand.max()),
         slack_capacity_mw=float(slack_cap_t.min()),
         slack_floor_mwh=delivered - problem.compute_floor_mwh,
+        shed_mwh=shed_mwh,
+        shed_cost=shed_cost,
+        n_shed_hours=n_shed_hours,
     )
     if obs.enabled():
         near = int((slack_cap_t < _NEAR_FRAC * demand).sum())
@@ -379,6 +445,16 @@ def summarize_alloc(problem: DispatchProblem,
             "n_sites": int(alloc.shape[0]), "hours": int(alloc.shape[1]),
             "site_names": list(problem.site_names),
         })
+        if problem.relief is not None:
+            obs.trace_event("dispatch.shed", {
+                "shed_mwh": shed_mwh, "shed_cost": shed_cost,
+                "n_shed_hours": n_shed_hours,
+                "voll_eur_mwh": float(problem.relief.voll_eur_mwh),
+                "demand_mwh": float(demand.sum()),
+                "delivered_mwh": delivered,
+            })
+            obs.counter("dispatch.shed_mwh").inc(shed_mwh)
+            obs.counter("dispatch.shed_hours").inc(n_shed_hours)
         obs.counter("dispatch.calls").inc()
         obs.counter("dispatch.moves").inc(result.n_migrations)
         obs.gauge("dispatch.slack_capacity_mw").set(result.slack_capacity_mw)

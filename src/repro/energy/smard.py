@@ -24,6 +24,7 @@ from typing import NamedTuple
 import numpy as np
 
 from repro import obs
+from repro.energy.stream import ffill_with_staleness
 
 
 class LoadStats(NamedTuple):
@@ -33,16 +34,18 @@ class LoadStats(NamedTuple):
     n_parsed: int     # rows that yielded a finite price
     n_skipped: int    # unparseable / too-short rows
     n_nan: int        # parsed but empty ("-"/blank) price fields
+    n_filled: int = 0  # empty hours recovered by fill="ffill"
 
     @property
     def skip_frac(self) -> float:
-        bad = self.n_skipped + self.n_nan
+        bad = self.n_skipped + self.n_nan - self.n_filled
         return bad / self.n_rows if self.n_rows else 0.0
 
     def __str__(self) -> str:
+        filled = f", {self.n_filled} filled" if self.n_filled else ""
         return (f"{self.n_rows} data rows: {self.n_parsed} parsed, "
-                f"{self.n_skipped} unparseable, {self.n_nan} empty "
-                f"({self.skip_frac:.1%} bad)")
+                f"{self.n_skipped} unparseable, {self.n_nan} empty"
+                f"{filled} ({self.skip_frac:.1%} bad)")
 
 
 def _emit_load_event(stats: LoadStats, path, what: str,
@@ -54,20 +57,27 @@ def _emit_load_event(stats: LoadStats, path, what: str,
     obs.trace_event("loader.skipped_rows", {
         "loader": what, "path": str(path), "n_rows": stats.n_rows,
         "n_parsed": stats.n_parsed, "n_skipped": stats.n_skipped,
-        "n_nan": stats.n_nan, "skip_frac": stats.skip_frac,
-        "action": action})
+        "n_nan": stats.n_nan, "n_filled": stats.n_filled,
+        "skip_frac": stats.skip_frac, "action": action})
     obs.counter("loader.skipped_rows").inc(stats.n_skipped + stats.n_nan)
 
 
 def _finalize(values: list, stats: LoadStats, path, what: str,
-              max_skip_frac: float, return_stats: bool):
+              max_skip_frac: float, return_stats: bool,
+              fill: str | None = None):
+    if fill not in (None, "ffill"):
+        raise ValueError(f"{what}: unknown fill mode {fill!r}")
     arr = np.asarray(values, dtype=np.float64)
-    arr = arr[~np.isnan(arr)]
     if stats.n_rows and stats.n_parsed == 0:
         _emit_load_event(stats, path, what, "raise")
         raise ValueError(
             f"{what}: no {path} row parsed ({stats}) — "
             "wrong column index or not a price CSV?")
+    if fill == "ffill" and np.isnan(arr).any():
+        arr, stale = ffill_with_staleness(arr)
+        stats = stats._replace(n_filled=int((stale > 0).sum()))
+    else:
+        arr = arr[~np.isnan(arr)]
     if stats.skip_frac > max_skip_frac:
         _emit_load_event(stats, path, what, "warn")
         warnings.warn(
@@ -88,12 +98,20 @@ def _parse_german_float(s: str) -> float:
 
 def load_smard_csv(path: str | Path, column: int = -1, *,
                    max_skip_frac: float = 0.05,
-                   return_stats: bool = False):
+                   return_stats: bool = False,
+                   fill: str | None = None):
     """Load a SMARD 'Marktdaten' CSV export; returns EUR/MWh samples.
 
     SMARD exports are ';'-separated with a header row; price columns use
     German decimal commas. ``column`` selects the price column (default:
     last). With ``return_stats=True`` returns ``(prices, LoadStats)``.
+
+    Real SMARD year exports carry empty price fields ("-") on DST-switch
+    and outage hours. By default those hours are *dropped* (shortening
+    the series and shifting hour-of-day alignment); ``fill="ffill"``
+    instead carries the last published price forward, keeps the series
+    full-length, and reports the repair count in ``LoadStats.n_filled``
+    (filled hours no longer count toward the skip-fraction warning).
     """
     text = Path(path).read_text(encoding="utf-8-sig")
     rows = list(csv.reader(io.StringIO(text), delimiter=";"))
@@ -117,7 +135,7 @@ def load_smard_csv(path: str | Path, column: int = -1, *,
     stats = LoadStats(n_rows=n_rows, n_parsed=n_rows - n_skipped - n_nan,
                       n_skipped=n_skipped, n_nan=n_nan)
     return _finalize(out, stats, path, "load_smard_csv", max_skip_frac,
-                     return_stats)
+                     return_stats, fill=fill)
 
 
 def load_price_csv(path: str | Path, *, max_skip_frac: float = 0.05,

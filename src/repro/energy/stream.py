@@ -20,6 +20,35 @@ from typing import Iterator, Optional
 import numpy as np
 
 
+def ffill_with_staleness(values, *, fill_value: Optional[float] = None):
+    """Carry the last finite sample forward over NaN/inf gaps.
+
+    Returns ``(filled, staleness)`` — ``filled`` is ``values`` with every
+    non-finite entry replaced by the most recent finite one, and
+    ``staleness[i]`` counts how many samples ago that donor was observed
+    (0 where ``values[i]`` itself is finite). A leading gap (no prior
+    finite sample) is filled with ``fill_value`` (default: the first
+    finite sample in the series) and its staleness counts from the
+    series start. Fully vectorized: gap positions index the running
+    maximum of observed positions, so a year-long series fills in one
+    pass with no Python loop.
+    """
+    v = np.asarray(values, dtype=np.float64)
+    if v.ndim != 1:
+        raise ValueError("ffill_with_staleness expects a 1-D series")
+    ok = np.isfinite(v)
+    if not ok.any():
+        raise ValueError("cannot forward-fill an all-gap series")
+    pos = np.arange(v.size)
+    last = np.maximum.accumulate(np.where(ok, pos, -1))
+    staleness = np.where(last >= 0, pos - last, pos + 1).astype(np.int64)
+    if fill_value is None:
+        fill_value = v[ok][0]
+    filled = np.where(last >= 0, v[np.maximum(last, 0)],
+                      np.float64(fill_value))
+    return filled, staleness
+
+
 class PriceStream:
     """Replays a price series with a trailing-window view.
 
@@ -37,15 +66,34 @@ class PriceStream:
         gate-closure convention). ``None`` disables the publication
         gate and restores unlimited lookahead (backtests that *want*
         perfect foresight must now ask for it explicitly).
+    fill : str or None
+        ``"ffill"`` carries the last finite price forward over NaN gaps
+        in the feed (a dropped exchange message, a faulted scrape) and
+        keeps a per-hour staleness counter; ``None`` (default) rejects
+        non-finite input loudly, preserving the pre-existing contract
+        that a stream never silently serves bad data.
     """
 
     def __init__(self, prices, window: int = 24 * 28, start: int = 0,
-                 publish_hour: Optional[int] = 13):
+                 publish_hour: Optional[int] = 13,
+                 fill: Optional[str] = None):
         self.prices = np.asarray(prices, dtype=np.float64)
         if self.prices.ndim != 1 or self.prices.shape[0] < 2:
             raise ValueError("prices must be a 1-D series")
         if publish_hour is not None and not 0 <= int(publish_hour) < 24:
             raise ValueError("publish_hour must be in [0, 24) or None")
+        if fill not in (None, "ffill"):
+            raise ValueError(f"unknown fill mode {fill!r}")
+        if fill == "ffill":
+            self.prices, self.staleness = \
+                ffill_with_staleness(self.prices)
+        else:
+            if not np.isfinite(self.prices).all():
+                raise ValueError(
+                    "prices contain non-finite samples; pass "
+                    "fill='ffill' to carry the last good price forward")
+            self.staleness = np.zeros(self.prices.shape, dtype=np.int64)
+        self.fill = fill
         self.window = int(window)
         self.publish_hour = (None if publish_hour is None
                              else int(publish_hour))

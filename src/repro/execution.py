@@ -112,7 +112,10 @@ class Coupling:
     feasible `repro.dispatch.dispatch` but adds nothing to the
     gradient, so it does **not** couple rows. Both are duck-typed
     `repro.dispatch.DispatchConfig` instances (kept loose so this
-    module stays import-cycle-free).
+    module stays import-cycle-free). ``relief`` (a duck-typed
+    `repro.dispatch.Relief`) prices infeasible dispatch hours as shed
+    instead of raising, in *both* the soft water-fill term and the hard
+    re-scoring; None defers to whatever the dispatch configs carry.
     """
 
     power_cap_mw: Optional[float] = None
@@ -122,6 +125,7 @@ class Coupling:
     dispatch_blend: float = 0.5
     dispatch_mw_scale: float = 0.05
     reeval: Optional[Any] = None         # hard re-scoring only
+    relief: Optional[Any] = None         # shed pricing for infeasibility
 
     @property
     def binds(self) -> bool:
@@ -136,6 +140,16 @@ class Coupling:
         """The hard-dispatch config the final re-scoring runs under:
         ``reeval`` when given, else the soft ``dispatch`` config."""
         return self.reeval if self.reeval is not None else self.dispatch
+
+    @property
+    def relief_config(self):
+        """The shed-pricing spec in force: ``relief`` when given, else
+        whatever the soft dispatch config itself carries (duck-typed
+        `repro.dispatch.Relief`; None means infeasibility stays hard)."""
+        if self.relief is not None:
+            return self.relief
+        d = self.dispatch
+        return getattr(d, "relief", None) if d is not None else None
 
 
 def validate_plan_coupling(plan: ExecutionPlan,

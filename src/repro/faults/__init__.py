@@ -1,0 +1,27 @@
+"""Fault injection and graceful degradation for the fleet stack.
+
+  trace  — declarative, seeded `FaultTrace` schedules (site outages,
+           price-feed gaps, forecast blackouts, demand surges) compiled
+           to dense per-hour `FaultMasks`
+  inject — the masks flowing *in-scan* through the fleet backtest
+           (`faulted_backtest`) and onto dispatch instances
+           (`faulted_problem`)
+
+The contract throughout: the healthy masks are exact arithmetic
+identities, so a zero-fault run is bit-identical to the un-faulted
+engines; storms are reproducible from a seed (`random_storm`); and
+every injected fault leaves a ``fault.injected`` telemetry event behind
+(`repro.obs`). Graceful handling of the injected faults lives with the
+engines themselves: `repro.dispatch.Relief` prices shed,
+`repro.live` degrades its forecasts down a fallback ladder, and
+`repro.tune`'s guarded Adam rejects non-finite steps.
+"""
+
+from repro.faults.inject import (emit_fault_events, faulted_backtest,
+                                 faulted_problem, resolve_masks)
+from repro.faults.trace import (FAULT_KINDS, FaultEvent, FaultMasks,
+                                FaultTrace, identity_masks, random_storm)
+
+__all__ = ["FAULT_KINDS", "FaultEvent", "FaultMasks", "FaultTrace",
+           "identity_masks", "random_storm", "emit_fault_events",
+           "faulted_backtest", "faulted_problem", "resolve_masks"]

@@ -1,0 +1,245 @@
+"""Inject compiled fault masks into the engines — in-scan, not in Python.
+
+`faulted_backtest` is the fleet backtest under faults: one jitted
+`lax.scan` whose per-hour body is the *same* `hard_hour_step` as
+`repro.kernels.ref.fleet_scan_ref`, extended with three arithmetic
+fault channels that are exact identities when healthy:
+
+  * price-feed gaps — the state machine decides on the *observed* price
+    (carry-forward of the last arrived sample, an in-scan ffill), while
+    costs settle at the true market price (the exchange does not stop
+    billing because a scraper died);
+  * capacity outages — a zero multiplier forces the unit off (state
+    carry included, so recovery into a cheap hour re-enters through the
+    normal start accounting and bills the restart overhead), a partial
+    multiplier derates capacity and draw proportionally;
+  * demand surges — consumed by `faulted_problem` on the dispatch side.
+
+With the identity masks every channel reduces to ``where(True, x, _)``
+and ``* 1.0`` — bitwise no-ops — so a zero-fault run is bit-identical
+to `repro.fleet.backtest` (asserted in tests/test_faults.py).
+
+`faulted_problem` lowers the same masks onto a `DispatchProblem`
+host-side: derated availability, surged demand, and gap-filled observed
+prices (with the sort precompute invalidated so `dispatch` recomputes
+it); pair it with `repro.dispatch.Relief` so storm-induced infeasible
+hours shed gracefully instead of raising.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.energy.stream import ffill_with_staleness
+from repro.faults.trace import FaultMasks, FaultTrace
+from repro.fleet.engine import backtest, fleet_costs
+from repro.fleet.grid import ScenarioGrid
+from repro.fleet.report import FleetReport
+from repro.kernels.ref import FleetScanOut, hard_hour_step
+
+
+def resolve_masks(faults: Union[FaultTrace, FaultMasks], n_sites: int,
+                  n_markets: int, horizon: int) -> FaultMasks:
+    """Compile a `FaultTrace` onto the scenario shape, or validate that
+    pre-compiled `FaultMasks` already match it."""
+    if isinstance(faults, FaultTrace):
+        return faults.compile(n_sites, n_markets, horizon)
+    m = faults
+    if (m.cap_mult.shape != (n_sites, horizon)
+            or m.price_ok.shape != (n_markets, horizon)):
+        raise ValueError(
+            f"FaultMasks compiled for cap{m.cap_mult.shape}/"
+            f"price{m.price_ok.shape} do not fit a scenario with "
+            f"{n_sites} sites x {n_markets} markets x {horizon} hours")
+    return m
+
+
+def emit_fault_events(faults: Union[FaultTrace, FaultMasks],
+                      masks: FaultMasks, *, scope: str) -> None:
+    """One ``fault.injected`` trace event per scheduled fault (or one
+    aggregate event for hand-built masks), plus exposure counters —
+    the raw material of the digest's Degradation section."""
+    if not obs.enabled():
+        return
+    if isinstance(faults, FaultTrace) and len(faults):
+        for ev in faults.events:
+            obs.trace_event("fault.injected", {
+                "fault": ev.kind, "target": int(ev.target),
+                "start": int(ev.start), "duration": int(ev.duration),
+                "magnitude": float(ev.magnitude), "scope": scope,
+                "seed": faults.seed})
+    elif not masks.is_trivial:
+        counts = masks.counts()
+        obs.trace_event("fault.injected", {
+            "fault": "masks", "target": -1, "start": 0,
+            "duration": int(masks.demand_mult.shape[0]),
+            "magnitude": 1.0, "scope": scope, "seed": None, **counts})
+    for k, v in masks.counts().items():
+        if v:
+            obs.counter(f"fault.{k}").inc(v)
+
+
+def _faulted_scan(p_rows, ok_rows, mult_rows, p_on, p_off, off_level,
+                  idle_frac) -> FleetScanOut:
+    """Faulted fleet scan: `hard_hour_step` on observed prices, forced
+    outage state, derated capacity/draw, true-price settlement."""
+    b = p_rows.shape[0]
+    p_on, p_off, off_level, idle_frac = (
+        jnp.broadcast_to(jnp.asarray(v, jnp.float32), (b,))
+        for v in (p_on, p_off, off_level, idle_frac))
+
+    def step(carry, inp):
+        on_prev, p_prev, acc = carry
+        p_t, ok_t, m_t = inp
+        p_obs = jnp.where(ok_t, p_t, p_prev)      # in-scan ffill
+        on, _, _, _ = hard_hour_step(on_prev, p_obs, p_on, p_off,
+                                     off_level, idle_frac)
+        on_e = jnp.where(m_t > 0.0, on, 0.0)      # full outage forces off
+        start = jnp.maximum(on_e - on_prev, 0.0)  # restart billed on
+        cap = off_level + (1.0 - off_level) * on_e  # recovery
+        draw = cap + idle_frac * (1.0 - cap)
+        cap_f = cap * m_t                         # partial derate
+        draw_f = draw * m_t
+        acc = (acc[0] + draw_f * p_t, acc[1] + cap_f,
+               acc[2] + start, acc[3] + start * p_t)
+        return (on_e, p_obs, acc), None
+
+    zeros = jnp.zeros((b,), jnp.float32)
+    init = (jnp.ones((b,), jnp.float32), p_rows[:, 0],
+            (zeros, zeros, zeros, zeros))
+    (_, _, acc), _ = jax.lax.scan(
+        step, init, (p_rows.T, ok_rows.T, mult_rows.T))
+    return FleetScanOut(*acc)
+
+
+@jax.jit
+def _faulted_backtest_jit(prices, market_idx, system_idx, policy_idx,
+                          fixed, power, period, p_on, p_off, off_level,
+                          idle_frac, restart_energy_mwh, restart_time_h,
+                          price_ok, cap_mult) -> FleetReport:
+    """One jitted program mirroring `repro.fleet.engine._backtest_jit`
+    (gather -> scan -> cost assembly all inside the same jit, so XLA's
+    constant-division rewrite treats both identically — the bit-identity
+    contract holds program-for-program, not just op-for-op)."""
+    t = prices.shape[1]
+    p_rows = prices[market_idx]                       # [B, T] gather
+    ok_rows = price_ok[market_idx]
+    scan = _faulted_scan(p_rows, ok_rows, cap_mult, p_on, p_off,
+                         off_level, idle_frac)
+    price_sum = jnp.sum(prices, axis=1)[market_idx]   # [B] sum_t p_t
+    costs = fleet_costs(scan, price_sum=price_sum, fixed=fixed,
+                        power=power, period=period,
+                        restart_energy_mwh=restart_energy_mwh,
+                        restart_time_h=restart_time_h, n_samples=t)
+    return FleetReport(
+        cpc=costs.cpc, cpc_ao=costs.cpc_ao,
+        cpc_reduction=1.0 - costs.cpc / costs.cpc_ao,
+        tco=costs.tco, energy_cost=costs.energy_cost,
+        restart_cost=costs.restart_cost,
+        up_hours=costs.up_hours, n_starts=scan.n_starts,
+        x_realized=1.0 - scan.up_units / t,
+        market_idx=market_idx, system_idx=system_idx,
+        policy_idx=policy_idx)
+
+
+def faulted_backtest(grid: ScenarioGrid,
+                     faults: Union[FaultTrace, FaultMasks, None] = None,
+                     *, _force_masked: bool = False) -> FleetReport:
+    """`repro.fleet.backtest` under a fault schedule.
+
+    ``faults`` is a `FaultTrace` (compiled here onto the grid's
+    B rows x N markets x T hours; outage targets index backtest *rows*)
+    or pre-compiled `FaultMasks`; None (or an empty trace) runs the
+    healthy masks and returns bit-identical results to
+    ``backtest(grid, use_pallas=False)``.
+
+    Trivial masks short-circuit to the plain backtest program — the
+    mask channels stream two extra [B, T] arrays through the
+    sequential scan, a real cost a healthy run must not pay (gated in
+    benchmarks/bench_faults.py). ``_force_masked`` keeps the masked
+    program on trivial masks anyway; tests use it to pin the in-scan
+    identity property (``where(True, x)`` / ``* 1.0`` are bitwise
+    no-ops), and with it the result is still bit-identical.
+    """
+    t = int(grid.prices.shape[1])
+    n_markets = int(grid.prices.shape[0])
+    b = grid.n_rows
+    if faults is None:
+        faults = FaultTrace()
+    if (isinstance(faults, FaultTrace) and not len(faults)
+            and not _force_masked):
+        # empty schedule: skip even the mask compilation ([B, T] arrays
+        # allocated only to be discarded) and run the plain program
+        return backtest(grid, use_pallas=False)
+    masks = resolve_masks(faults, b, n_markets, t)
+    emit_fault_events(faults, masks, scope="backtest")
+    if masks.is_trivial and not _force_masked:
+        return backtest(grid, use_pallas=False)
+    return _faulted_backtest_jit(
+        jnp.asarray(grid.prices, jnp.float32), grid.market_idx,
+        grid.system_idx, grid.policy_idx, grid.fixed, grid.power,
+        grid.period, grid.p_on, grid.p_off, grid.off_level,
+        grid.idle_frac, grid.restart_energy_mwh, grid.restart_time_h,
+        jnp.asarray(masks.price_ok),
+        jnp.asarray(masks.cap_mult, jnp.float32))
+
+
+def faulted_problem(problem, faults: Union[FaultTrace, FaultMasks], *,
+                    site_market_idx: Optional[np.ndarray] = None):
+    """Lower a fault schedule onto a `repro.dispatch.DispatchProblem`.
+
+    Availability is derated by the capacity mask, demand scaled by the
+    surge profile, and each site's price row forward-filled over its
+    market's feed gaps (`ffill_with_staleness` — the operator allocates
+    on the last published price). ``site_market_idx`` maps sites to
+    mask markets; omitted, the mask must carry one row per site (or a
+    single shared row). The segment sort is invalidated so `dispatch`
+    recomputes it from the observed prices. Trivial masks return the
+    problem object unchanged — bit-identical by construction.
+    """
+    s, t = np.asarray(problem.avail_mw).shape
+    if isinstance(faults, FaultTrace):
+        masks = faults.compile(s, s, t)
+    else:
+        masks = faults
+        if masks.cap_mult.shape != (s, t):
+            raise ValueError(
+                f"FaultMasks.cap_mult{masks.cap_mult.shape} does not "
+                f"fit a {s}-site x {t}-hour dispatch problem")
+    if masks.is_trivial:
+        return problem
+
+    ok = np.asarray(masks.price_ok)
+    if site_market_idx is not None:
+        ok_rows = ok[np.asarray(site_market_idx)]
+    elif ok.shape[0] == s:
+        ok_rows = ok
+    elif ok.shape[0] == 1:
+        ok_rows = np.broadcast_to(ok, (s, t))
+    else:
+        raise ValueError(
+            f"price_ok has {ok.shape[0]} markets for {s} sites — pass "
+            "site_market_idx to map sites onto mask markets")
+
+    prices = np.asarray(problem.prices, np.float64)
+    if not ok_rows.all():
+        filled = prices.copy()
+        for i in range(s):
+            if not ok_rows[i].all():
+                filled[i], _ = ffill_with_staleness(
+                    np.where(ok_rows[i], prices[i], np.nan))
+        prices = filled
+    avail = np.asarray(problem.avail_mw, np.float64) * masks.cap_mult
+    demand = np.asarray(problem.demand_mw, np.float64) \
+        * masks.demand_mult
+    emit_fault_events(faults, masks, scope="dispatch")
+    return problem._replace(
+        prices=prices.astype(np.float32),
+        avail_mw=avail.astype(np.float32),
+        demand_mw=demand.astype(np.float32),
+        order=None, rank=None)

@@ -124,8 +124,13 @@ def summarize(grid, report: FleetReport, *,
     pi = np.asarray(report.policy_idx)
 
     def cube(values):
+        # non-finite rows (a fully-outaged site delivers zero compute,
+        # so its CPC is inf/NaN) enter the cube as NaN — degraded rows
+        # drop out of the nan-aggregates instead of poisoning the
+        # fleet totals; a no-op for healthy reports
         c = np.full((n, m, k), np.nan, np.float64)
-        c[mi, si, pi] = np.asarray(values, np.float64)
+        v = np.asarray(values, np.float64)
+        c[mi, si, pi] = np.where(np.isfinite(v), v, np.nan)
         return c
 
     red = cube(report.cpc_reduction)
@@ -185,8 +190,8 @@ def summarize(grid, report: FleetReport, *,
         obs.trace_event("fleet.summary", {
             "total_cost": summary.total_cost,
             "total_up_hours": summary.total_up_hours,
-            "best_reduction": np.where(np.isnan(best_reduction), None,
-                                       best_reduction).tolist(),
+            "best_reduction": np.where(np.isfinite(best_reduction),
+                                       best_reduction, None).tolist(),
             "top_regret": _top_regret(grid, summary, k=10)})
         obs.gauge("fleet.total_cost").set(summary.total_cost)
     return summary
@@ -198,7 +203,7 @@ def _top_regret(grid, summary: FleetSummary, k: int) -> list:
     (``fleet.summary`` event / `repro.obs.report`)."""
     regret = summary.regret
     flat = regret.ravel()
-    idx = np.flatnonzero(~np.isnan(flat))
+    idx = np.flatnonzero(np.isfinite(flat))
     idx = idx[np.argsort(-flat[idx], kind="stable")][:k]
     rows = []
     for i in idx:

@@ -537,3 +537,24 @@ def soft_dispatch(avail: jax.Array, keys: jax.Array, order: jax.Array,
     return _soft_dispatch_ref_jit(avail, keys, order, demand, tau=tau,
                                   min_dwell=min_dwell, mw_scale=mw_scale,
                                   n_bisect=n_bisect)
+
+
+def soft_shed(avail_total: jax.Array, demand: jax.Array, tau, *,
+              mw_scale: float = 0.05) -> jax.Array:
+    """Smoothed per-hour shed: how much of ``demand`` [T] exceeds the
+    fleet's total availability ``avail_total`` [T], relaxed at the same
+    MW-space temperature the water-fill uses (``tau * mw_scale`` — the
+    scale `soft_dispatch` applies to every MW sigmoid, so shed and
+    allocation co-anneal).
+
+        shed_t = w * softplus((demand_t - avail_total_t) / w),
+        w = max(tau * mw_scale, 1e-9)
+
+    converging to ``relu(demand - avail_total)`` — the exact shortfall
+    the hard dispatcher sheds under `repro.dispatch.Relief` — as
+    tau -> 0. Smooth everywhere, so gradients see the VoLL price of an
+    *approaching* infeasibility before the hard boundary is crossed."""
+    d = jnp.asarray(demand)
+    w = jnp.maximum(jnp.asarray(tau, d.dtype) * d.dtype.type(mw_scale),
+                    d.dtype.type(1e-9))
+    return w * jax.nn.softplus((d - avail_total) / w)

@@ -37,6 +37,28 @@ are computed *only* when the static ``telemetry`` flag is set (off
 means off — the scan carries no extra outputs), drained as one
 ``live.step`` io_callback after the scan, and feed nothing back, so
 results are bit-identical on vs off.
+
+Faults (`repro.faults`) degrade the controller gracefully instead of
+crashing it. Under the static ``faulted`` flag the same scan gains
+three in-scan channels (the flag is Python-static, so the zero-fault
+program is op-identical to the healthy one):
+
+  * price-feed gaps — decisions read the forward-filled *observed*
+    price series (vectorized cummax ffill, staleness tracked per
+    market) while costs settle at the true price, mirroring
+    `repro.faults.inject._faulted_scan`;
+  * forecast blackouts — a fallback ladder replaces the fresh
+    forecast: (0) fresh, (1) the last-published window age-shifted
+    with persistence tail-padding while it still covers the horizon,
+    (2) seasonal-naive recomputed from the observed history once the
+    published window has fully aged out, (3) raw persistence when the
+    price feed itself is older than a season. Rung occupancy is
+    accumulated in-scan and emitted as one ``live.fallback`` event;
+  * site outages — a zero capacity multiplier forces the row off
+    (state carry included, so recovery re-enters through the normal
+    start path and bills the restart overhead); partial multipliers
+    derate capacity and draw. Demand surges have no live analog (the
+    controller rows are uncoupled) and are ignored here.
 """
 
 from __future__ import annotations
@@ -117,11 +139,13 @@ def _window_cpc_grad(p_off, fc, hmask, off_level, idle_frac, power,
     return jax.grad(total)(p_off)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "h_max", "telemetry"))
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "h_max", "telemetry", "faulted"))
 def _live_scan(prices, market_idx, fixed, power, period, p_on0, p_off0,
                off_level, idle_frac, forecaster_id, horizon, cadence,
                family_id, x, hysteresis, *, cfg: LiveConfig, h_max: int,
-               telemetry: bool = False):
+               telemetry: bool = False, faulted: bool = False,
+               cap_mult=None, price_ok=None, forecast_ok=None):
     t_total = prices.shape[1]
     b = market_idx.shape[0]
     w = cfg.season + 1                      # window: one season + "now"
@@ -138,11 +162,30 @@ def _live_scan(prices, market_idx, fixed, power, period, p_on0, p_off0,
     hf = horizon.astype(jnp.float32)
     m_q = jnp.clip(jnp.round(x * hf), 1.0, hf - 1.0).astype(jnp.int32)
 
+    if faulted:
+        # Observed price series: vectorized causal ffill over feed gaps
+        # (cummax of the last-arrival index), staleness in hours. A
+        # leading gap falls back to the market's first true price.
+        tt = jnp.arange(t_total, dtype=jnp.int32)[None, :]
+        last = jax.lax.associative_scan(
+            jnp.maximum, jnp.where(price_ok, tt, -1), axis=1)
+        p_obs_full = jnp.take_along_axis(prices, jnp.maximum(last, 0),
+                                         axis=1)
+        p_obs_full = jnp.where(last >= 0, p_obs_full, prices[:, :1])
+        stale_full = tt - last                           # [N, T]
+        obs_src = p_obs_full
+    else:
+        obs_src = prices
+
     def step(carry, t):
-        (on, p_on_c, p_off_c, po_t, m_t, v_t, tc, acc) = carry
+        if faulted:
+            (on, p_on_c, p_off_c, po_t, m_t, v_t, tc, acc,
+             (fc_prev, fc_age, racc, foacc, gapacc)) = carry
+        else:
+            (on, p_on_c, p_off_c, po_t, m_t, v_t, tc, acc) = carry
 
         # --- 1. forecast: every forecaster, every market, batched -----
-        hist = prices[:, (t - w + 1 + jnp.arange(w)) % t_total]  # [N, W]
+        hist = obs_src[:, (t - w + 1 + jnp.arange(w)) % t_total]  # [N, W]
         truth = prices[:, (t + 1 + jnp.arange(h)) % t_total]     # [N, H]
         f_sn = seasonal_naive_batch(hist, h, cfg.season)
         f_ar = similar_day_ar_batch(hist, h, cfg.season)
@@ -150,6 +193,27 @@ def _live_scan(prices, market_idx, fixed, power, period, p_on0, p_off0,
         f_all = jnp.stack([f_sn, f_ar, f_p, truth])      # [4, N, H]
         fc = f_all[forecaster_id, market_idx]            # [B, H]
         truth_rows = truth[market_idx]                   # [B, H]
+
+        if faulted:
+            # Degradation ladder: fresh -> age-shifted last-published
+            # (persistence-padded tail) -> seasonal-naive on observed
+            # history -> raw persistence once the feed itself is stale.
+            f_ok_t = forecast_ok[:, t % t_total][market_idx]   # [B]
+            stale_t = stale_full[:, t % t_total][market_idx]   # [B]
+            age = jnp.where(f_ok_t, 0, fc_age + 1)             # [B]
+            shift = jnp.clip(jnp.arange(h, dtype=jnp.int32)[None, :]
+                             + age[:, None], 0, h - 1)
+            fc_shift = jnp.take_along_axis(fc_prev, shift, axis=1)
+            r1 = (~f_ok_t) & (age < h)
+            r23 = (~f_ok_t) & (age >= h)
+            r3 = r23 & (stale_t > cfg.season)
+            r2 = r23 & ~r3
+            fc = jnp.where(f_ok_t[:, None], fc,
+                 jnp.where(r1[:, None], fc_shift,
+                 jnp.where(r2[:, None], f_sn[market_idx],
+                           f_p[market_idx])))
+            fc_prev = jnp.where(f_ok_t[:, None], fc, fc_prev)
+            fc_age = age
 
         # --- 2. re-solve on the cadence tick --------------------------
         do_commit = (((t - cfg.start) % cadence) == 0) & resolvable
@@ -195,8 +259,31 @@ def _live_scan(prices, market_idx, fixed, power, period, p_on0, p_off0,
 
         # --- 3. realize on the true trace -----------------------------
         p_t = prices[:, t % t_total][market_idx]
-        on_new, st_, cap, draw = hard_hour_step(
-            on, p_t, p_on_new, p_off_new, off_level, idle_frac)
+        if faulted:
+            # decide on the observed (gap-filled) price, settle at the
+            # true price; a zero capacity multiplier forces the row off
+            # and recovery re-enters through the normal start account
+            p_dec = p_obs_full[:, t % t_total][market_idx]
+            m_row = cap_mult[:, t % t_total]                   # [B]
+            on_new, _, _, _ = hard_hour_step(
+                on, p_dec, p_on_new, p_off_new, off_level, idle_frac)
+            on_new = jnp.where(m_row > 0.0, on_new, 0.0)
+            st_ = jnp.maximum(on_new - on, 0.0)
+            cap = off_level + (1.0 - off_level) * on_new
+            draw = cap + idle_frac * (1.0 - cap)
+            cap = cap * m_row                                  # derate
+            draw = draw * m_row
+            ok_t = price_ok[:, t % t_total][market_idx]
+            racc = racc + jnp.stack(
+                [jnp.sum(f_ok_t.astype(jnp.float32)),
+                 jnp.sum(r1.astype(jnp.float32)),
+                 jnp.sum(r2.astype(jnp.float32)),
+                 jnp.sum(r3.astype(jnp.float32))])
+            foacc = foacc + jnp.sum((m_row <= 0.0).astype(jnp.float32))
+            gapacc = gapacc + jnp.sum((~ok_t).astype(jnp.float32))
+        else:
+            on_new, st_, cap, draw = hard_hour_step(
+                on, p_t, p_on_new, p_off_new, off_level, idle_frac)
         stop = jnp.maximum(on - on_new, 0.0)
 
         err1 = jnp.abs(fc[:, 0] - truth_rows[:, 0])
@@ -208,7 +295,12 @@ def _live_scan(prices, market_idx, fixed, power, period, p_on0, p_off0,
                acc[3] + st_ * p_t, acc[4] + stop,
                acc[5] + churn.astype(jnp.float32),
                acc[6] + err1, acc[7] + err_h, acc[8] + naive1)
-        carry = (on_new, p_on_new, p_off_new, po_t, m_t, v_t, tc, acc)
+        if faulted:
+            carry = (on_new, p_on_new, p_off_new, po_t, m_t, v_t, tc,
+                     acc, (fc_prev, fc_age, racc, foacc, gapacc))
+        else:
+            carry = (on_new, p_on_new, p_off_new, po_t, m_t, v_t, tc,
+                     acc)
         if telemetry:
             ys = (jnp.sum(power * cap), jnp.sum(power * draw * p_t),
                   jnp.sum(st_) + jnp.sum(stop), jnp.mean(err1),
@@ -221,19 +313,29 @@ def _live_scan(prices, market_idx, fixed, power, period, p_on0, p_off0,
     po0 = jnp.where(jnp.isfinite(p_off0), p_off0, p_max_rows)
     init = (jnp.ones((b,), jnp.float32), p_on0, p_off0, po0,
             zeros, zeros, zeros, tuple(zeros for _ in range(9)))
+    if faulted:
+        # last-published window starts fully aged so a blackout at the
+        # first hour already lands on the seasonal-naive rung
+        init = init + ((jnp.zeros((b, h), jnp.float32),
+                        jnp.full((b,), h, jnp.int32),
+                        jnp.zeros((4,), jnp.float32),
+                        jnp.zeros((), jnp.float32),
+                        jnp.zeros((), jnp.float32)),)
     ts = cfg.start + jnp.arange(cfg.hours, dtype=jnp.int32)
-    (on, p_on_f, p_off_f, *_rest), ys = jax.lax.scan(step, init, ts)
-    acc = _rest[-1]
+    carry_f, ys = jax.lax.scan(step, init, ts)
+    fstats = carry_f[8][2:] if faulted else None
+    acc = carry_f[7]
+    p_off_f = carry_f[2]
     if telemetry:
         obs.drain("live.step", on_mw=ys[0], cost_rate=ys[1],
                   transitions=ys[2], abs_err1=ys[3], commits=ys[4])
     scan_out = FleetScanOut(draw_price_sum=acc[0], up_units=acc[1],
                             n_starts=acc[2], restart_price_sum=acc[3])
-    return scan_out, acc[4:], p_off_f
+    return scan_out, acc[4:], p_off_f, fstats
 
 
-def live_backtest(lgrid: LiveGrid, cfg: LiveConfig = LiveConfig()
-                  ) -> LiveResult:
+def live_backtest(lgrid: LiveGrid, cfg: LiveConfig = LiveConfig(), *,
+                  faults=None) -> LiveResult:
     """Run every controller instance of ``lgrid`` over the live window
     in one jitted scan and assemble realized costs.
 
@@ -244,18 +346,57 @@ def live_backtest(lgrid: LiveGrid, cfg: LiveConfig = LiveConfig()
     exactly. Indices wrap mod ``T`` (circular trace): the trailing
     window before hour ``season`` reads the end of the trace, which is
     the periodic-boundary convention of the synthetic markets.
+
+    ``faults`` is an optional `repro.faults.FaultTrace` (compiled here
+    onto B rows x N markets x T trace hours — outage targets index
+    controller *rows*, fault hours are absolute trace hours) or
+    pre-compiled `repro.faults.FaultMasks`. None or a trivial schedule
+    takes the healthy scan, bit-identical to omitting the argument;
+    otherwise the degradation ladder engages (module docstring) and a
+    ``live.fallback`` event reports rung occupancy.
     """
     grid = lgrid.grid
     if cfg.hours < 1:
         raise ValueError("LiveConfig.hours must be >= 1")
     telemetry = obs.enabled()
-    scan_out, extras, p_off_f = _live_scan(
+    masks = None
+    if faults is not None and getattr(faults, "events", True):
+        from repro.faults.inject import emit_fault_events, resolve_masks
+        b = grid.n_rows
+        t_total = grid.n_hours
+        masks = resolve_masks(faults, b, int(grid.prices.shape[0]),
+                              t_total)
+        if masks.is_trivial:
+            masks = None
+        else:
+            emit_fault_events(faults, masks, scope="live")
+    faulted = masks is not None
+    fault_kw = {}
+    if faulted:
+        fault_kw = dict(
+            cap_mult=jnp.asarray(masks.cap_mult, jnp.float32),
+            price_ok=jnp.asarray(masks.price_ok),
+            forecast_ok=jnp.asarray(masks.forecast_ok))
+    scan_out, extras, p_off_f, fstats = _live_scan(
         grid.prices, grid.market_idx, grid.fixed, grid.power, grid.period,
         grid.p_on, grid.p_off, grid.off_level, grid.idle_frac,
         lgrid.forecaster_id, lgrid.horizon, lgrid.cadence,
         lgrid.family_id, lgrid.x, lgrid.hysteresis,
-        cfg=cfg, h_max=lgrid.h_max, telemetry=telemetry)
+        cfg=cfg, h_max=lgrid.h_max, telemetry=telemetry,
+        faulted=faulted, **fault_kw)
     n_stops, churn, err1, err_h, naive1 = extras
+    if faulted and telemetry:
+        import numpy as np
+        rungs = np.asarray(fstats[0])
+        obs.trace_event("live.fallback", {
+            "fresh": int(rungs[0]), "stale_shift": int(rungs[1]),
+            "seasonal_naive": int(rungs[2]),
+            "persistence": int(rungs[3]),
+            "forced_off_row_hours": int(fstats[1]),
+            "stale_price_row_hours": int(fstats[2]),
+            "rows": grid.n_rows, "hours": cfg.hours})
+        obs.counter("live.fallback_hours").inc(
+            int(rungs[1] + rungs[2] + rungs[3]))
 
     t_total = grid.n_hours
     frac = cfg.hours / t_total

@@ -201,6 +201,46 @@ def render_digest(run_dir, *, top_k: int = 5,
         for e in infeas:
             out.append(f"- [{e.get('constraint', '?')}] {e['reason']}")
 
+    # degradation (faults, shed, fallbacks, guard) --------------------
+    faults = by_kind.get("fault.injected", [])
+    sheds = by_kind.get("dispatch.shed", [])
+    fallbacks = by_kind.get("live.fallback", [])
+    guards = by_kind.get("tune.guard", [])
+    if faults or sheds or fallbacks or guards:
+        _section(out, "Degradation")
+        if faults:
+            per_kind: dict = {}
+            for e in faults:
+                per_kind.setdefault(e["fault"], []).append(e)
+            scopes = sorted({e.get("scope", "?") for e in faults})
+            out.append(f"- faults injected: {len(faults)} "
+                       f"(scope: {', '.join(scopes)})")
+            for kind, evs in sorted(per_kind.items()):
+                hours = sum(int(e.get("duration", 0)) for e in evs)
+                out.append(f"  - {kind}: {len(evs)} events, "
+                           f"{hours} fault-hours")
+        if sheds:
+            s = sheds[-1]
+            out.append(f"- load shed: {_fmt(s['shed_mwh'])} MWh over "
+                       f"{s['n_shed_hours']} hours at VoLL "
+                       f"{_fmt(s['voll_eur_mwh'])} EUR/MWh "
+                       f"(cost {_fmt(s['shed_cost'])} EUR)")
+        if fallbacks:
+            f = fallbacks[-1]
+            out.append(f"- forecast fallbacks: fresh {f['fresh']}, "
+                       f"stale-shift {f['stale_shift']}, seasonal-naive "
+                       f"{f['seasonal_naive']}, persistence "
+                       f"{f['persistence']} row-hours")
+            out.append(f"- forced-off row-hours: "
+                       f"{f['forced_off_row_hours']}; stale-price "
+                       f"row-hours: {f['stale_price_row_hours']}")
+        if guards:
+            g = guards[-1]
+            out.append(f"- tuner guard: {g['rejects_total']} non-finite "
+                       f"steps rejected across {g['steps_affected']} "
+                       f"steps (first at step {g['first_step']}, "
+                       f"{g['rows']} rows)")
+
     # live operation --------------------------------------------------
     live_res = by_kind.get("live.result", [])
     live_steps = by_kind.get("live.step", [])
@@ -257,9 +297,12 @@ def render_digest(run_dir, *, top_k: int = 5,
         _section(out, "Data loading")
         for e in loads:
             path = Path(e["path"]).name if redact_meta else e["path"]
+            filled = int(e.get("n_filled", 0) or 0)
+            tail = f", {filled} gap-filled" if filled else ""
             out.append(f"- [{e['action']}] {e['loader']} {path}: "
                        f"{e['n_parsed']}/{e['n_rows']} rows parsed "
-                       f"({e['n_skipped']} skipped, {e['n_nan']} empty)")
+                       f"({e['n_skipped']} skipped, {e['n_nan']} empty"
+                       f"{tail})")
 
     # profiling -------------------------------------------------------
     spans = by_kind.get("profile.span", [])

@@ -51,6 +51,16 @@ EVENT_KINDS: dict[str, tuple[str, tuple[str, ...]]] = {
     "live.result": ("live.report.summarize_live", (
         "rows", "hours", "cpc_mean", "regret_oracle_mean",
         "regret_offline_mean", "mae1_mean", "churn_total")),
+    # faults & degradation ------------------------------------------------
+    "fault.injected": ("faults.inject.emit_fault_events", (
+        "fault", "target", "start", "duration", "magnitude", "scope")),
+    "dispatch.shed": ("dispatch.allocate.summarize_alloc", (
+        "shed_mwh", "shed_cost", "n_shed_hours", "voll_eur_mwh")),
+    "live.fallback": ("live.controller.live_backtest", (
+        "fresh", "stale_shift", "seasonal_naive", "persistence",
+        "forced_off_row_hours", "stale_price_row_hours")),
+    "tune.guard": ("tune.optimizer.optimize", (
+        "rejects_total", "steps_affected", "first_step", "rows")),
     # data loading --------------------------------------------------------
     "loader.skipped_rows": ("energy.smard._finalize", (
         "loader", "path", "n_rows", "n_parsed", "n_skipped", "n_nan",

@@ -37,7 +37,8 @@ from repro.tune.objective import (DispatchCoupling, PhysicalPolicy,
                                   transform)
 from repro.tune.optimizer import (TuneConfig, TuneResult, cell_best_rows,
                                   hard_cpc, optimize,
-                                  sharded_soft_objective, tune_loop)
+                                  sharded_soft_objective, tune_loop,
+                                  tune_loop_checkpointed)
 
 __all__ = ["Coupling", "DispatchCoupling", "ExecutionPlan",
            "PhysicalPolicy", "PolicyParams",
@@ -46,4 +47,4 @@ __all__ = ["Coupling", "DispatchCoupling", "ExecutionPlan",
            "init_from_grid", "inverse_transform", "problem_from_grid",
            "soft_costs", "soft_dispatch_ratio", "soft_objective",
            "sharded_soft_objective", "transform", "optimize",
-           "tune_loop"]
+           "tune_loop", "tune_loop_checkpointed"]

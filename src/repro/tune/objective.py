@@ -54,7 +54,7 @@ import numpy as np
 from repro.dispatch import (DispatchConfig, resolve_demand, segment_keys,
                             segment_rank)
 from repro.fleet.engine import fleet_costs
-from repro.kernels.soft_dispatch import soft_dispatch
+from repro.kernels.soft_dispatch import soft_dispatch, soft_shed
 from repro.parallel.axes import psum_id
 from repro.kernels.soft_scan import soft_scan_parts
 
@@ -113,6 +113,13 @@ _FEAS_MARGIN_SCALE = 1.05  # the soft feasibility term defends demand
                            # overstates the hard schedules near the
                            # thresholds, and the hard re-evaluation has
                            # no tolerance at all
+
+_SHED_FLOOR_FRAC = 1e-3   # relief: the soft water-fill always
+                          # dispatches at least this fraction of the
+                          # demand — a ~zero effective demand parks the
+                          # bisected water level off the sigmoid tails
+                          # and the implicit-function backward divides
+                          # by the vanished occupancy slope (NaN)
 
 _SEL_SCALE = 0.01   # per-cell candidate-selection temperature per unit
                     # tau: the dispatched fleet runs ONE policy per
@@ -299,8 +306,8 @@ def soft_dispatch_ratio(cap: jax.Array, row_ratio: jax.Array,
                         coupling: DispatchCoupling, tau, *,
                         min_dwell: int = 0, mw_scale: float = 0.05,
                         fused: bool = False,
-                        axis_name: Optional[str] = None
-                        ) -> tuple[jax.Array, jax.Array]:
+                        axis_name: Optional[str] = None,
+                        relief=None) -> tuple[jax.Array, jax.Array]:
     """Fleet-level dispatched-CPC ratio of the relaxed schedules.
 
     ``cap`` is the [B, T] soft capacity trajectory and ``row_ratio``
@@ -323,6 +330,16 @@ def soft_dispatch_ratio(cap: jax.Array, row_ratio: jax.Array,
     loss-scale cost: a sum does, a per-hour mean would dilute it by T,
     and the margin covers the soft capacity slightly overstating the
     hard schedules near thresholds).
+
+    ``relief`` (a duck-typed `repro.dispatch.Relief`) switches
+    infeasibility handling from penalty to *pricing*: the smoothed
+    shortfall (`repro.kernels.soft_dispatch.soft_shed`, co-annealed at
+    the same MW temperature) is shed from the demand the water-fill
+    places, its cost enters the fleet numerator at the value-of-lost-
+    load price, and the squared-shortfall penalty is zeroed — gradients
+    then weigh serving an expensive hour against shedding it, exactly
+    the trade the hard dispatcher under `Relief` settles. ``None``
+    traces the exact pre-relief program.
 
     With ``axis_name`` (inside a `shard_map` over a row mesh) each
     program holds only its shard of rows: the per-cell selection and
@@ -388,8 +405,24 @@ def soft_dispatch_ratio(cap: jax.Array, row_ratio: jax.Array,
         fixed_fleet = psum_id(
             jnp.sum(sel * coupling.fixed.astype(dtype)), axis_name)
     demand = coupling.demand.astype(dtype)
+    if relief is None:
+        d_eff = demand
+    else:
+        # shed >= the exact shortfall, so the dispatched d_eff never
+        # exceeds total availability — the water-fill stays in its
+        # feasible regime even through a storm-derated fleet. The
+        # smoothing can push shed past a small demand at high tau
+        # (w ~ tau * mw_scale in MW) and the water level falls off the
+        # sigmoid tails at ~zero demand (1/occupancy' backward -> NaN)
+        # — floor the *dispatched* demand only: the VoLL charge keeps
+        # the unclamped shed so availability still feels gradient
+        # pressure at fully-shed hours, and the floor is inactive as
+        # tau -> 0 on any hour with availability (exact shed <= demand)
+        shed = soft_shed(jnp.sum(avail_c, axis=0), demand, tau,
+                         mw_scale=mw_scale)                     # [T]
+        d_eff = jnp.maximum(demand - shed, _SHED_FLOOR_FRAC * demand)
     alloc = soft_dispatch(avail_c, coupling.keys.astype(dtype),
-                          coupling.order, demand, tau=tau,
+                          coupling.order, d_eff, tau=tau,
                           min_dwell=min_dwell, mw_scale=mw_scale,
                           use_pallas=False, fused=fused)        # [C, T]
 
@@ -403,13 +436,20 @@ def soft_dispatch_ratio(cap: jax.Array, row_ratio: jax.Array,
     moved = 0.5 * (inflow + outflow - jnp.abs(inflow - outflow))
     migration = coupling.migrate_cost.astype(dtype) * jnp.sum(moved)
     delivered = jnp.maximum(jnp.sum(alloc), 1e-9)
-    cpc_fleet = (fixed_fleet + energy + migration) / delivered
+    if relief is None:
+        cpc_fleet = (fixed_fleet + energy + migration) / delivered
+        ratio = cpc_fleet / coupling.cpc_ref.astype(dtype)
+        short = jax.nn.relu(_FEAS_MARGIN_SCALE * demand
+                            - jnp.sum(avail_c, axis=0)) \
+            / jnp.maximum(demand, 1e-9)
+        return ratio, jnp.sum(short ** 2)
+    # relief: the VoLL charge replaces the squared-shortfall penalty —
+    # shed is priced, not forbidden, matching the hard dispatcher
+    shed_cost = dtype.type(float(relief.voll_eur_mwh)) * jnp.sum(shed)
+    cpc_fleet = (fixed_fleet + energy + migration + shed_cost) \
+        / delivered
     ratio = cpc_fleet / coupling.cpc_ref.astype(dtype)
-
-    short = jax.nn.relu(_FEAS_MARGIN_SCALE * demand
-                        - jnp.sum(avail_c, axis=0)) \
-        / jnp.maximum(demand, 1e-9)
-    return ratio, jnp.sum(short ** 2)
+    return ratio, jnp.zeros((), dtype)
 
 
 def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
@@ -421,6 +461,7 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
                    dispatch_min_dwell: int = 0,
                    dispatch_mw_scale: float = 0.05,
                    dispatch_fused: bool = False,
+                   relief=None,
                    fused: bool = True, block_t: int = 256,
                    reduction: str = "mean",
                    axis_name: Optional[str] = None,
@@ -440,7 +481,9 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
         loss = (1 - blend) mean_b ratio_b + blend ratio_fleet + ...
 
     plus an availability-shortfall penalty under ``penalty_weight``, so
-    gradients cannot park the fleet below the demand it must serve. The
+    gradients cannot park the fleet below the demand it must serve
+    (``relief`` — a duck-typed `repro.dispatch.Relief` — replaces that
+    penalty with VoLL-priced soft shed, see `soft_dispatch_ratio`). The
     dispatch term couples every row through the shared water level —
     this objective is then *not* batch-separable: the chunked tuner
     path refuses it, and the sharded path reduces the fleet aggregates
@@ -504,7 +547,7 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
         dratio, shortfall = soft_dispatch_ratio(
             cap, ratio, dispatch, tau, min_dwell=dispatch_min_dwell,
             mw_scale=dispatch_mw_scale, fused=dispatch_fused,
-            axis_name=axis_name)
+            axis_name=axis_name, relief=relief)
         base = (1.0 - dispatch_blend) * loss
         loss = (1.0 - dispatch_blend) * loss \
             + dispatch_blend * scale * dratio

@@ -238,6 +238,9 @@ class TuneResult(NamedTuple):
     # "tuned"/"swept" are repro.dispatch.DispatchResult and "rows" the
     # grid rows operated as sites
     dispatch: Optional[dict] = None
+    # total row-steps the finite-step guard rejected (0 on any healthy
+    # run; per-step counts in history["guard_rejects"])
+    guard_count: int = 0
 
 
 def _tau_schedule(cfg: TuneConfig) -> jnp.ndarray:
@@ -310,64 +313,11 @@ def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
     Returns ``(raw_f, history, cpc_tuned)``.
     """
     b = raw0.raw_off.shape[0]
-    rc = cfg.resolved_coupling
-    opt = AdamWConfig(lr=cfg.lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
-                      weight_decay=0.0, clip_norm=cfg.clip_norm)
-
-    def row_update(g, st, p):
-        new_p, new_st, _ = adamw_update(g, st, p, opt)
-        return new_p, new_st
-
-    state_axes = AdamWState(step=None, mu=0, nu=0)
-    vupdate = jax.vmap(row_update, in_axes=(0, state_axes, 0),
-                       out_axes=(0, state_axes))
-
-    grad_fn = jax.value_and_grad(soft_objective, has_aux=True)
-    state0 = AdamWState(step=jnp.zeros((), jnp.int32),
-                        mu=jax.tree.map(jnp.zeros_like, raw0),
-                        nu=jax.tree.map(jnp.zeros_like, raw0))
-    min_dwell = rc.dispatch.min_dwell_h \
-        if rc.dispatch is not None else 0
-
-    def step(carry, tau):
-        raw, st = carry
-        (loss, aux), grads = grad_fn(
-            raw, problem, tau, power_cap_mw=rc.power_cap_mw,
-            min_up_hours=rc.min_up_hours,
-            penalty_weight=rc.penalty_weight,
-            dispatch=coupling, dispatch_blend=rc.dispatch_blend,
-            dispatch_min_dwell=min_dwell,
-            dispatch_mw_scale=rc.dispatch_mw_scale,
-            dispatch_fused=cfg.fused,
-            fused=cfg.fused, block_t=cfg.block_t, reduction="sum",
-            axis_name=axis_name, scale_rows=scale_rows)
-        if axis_name is None:
-            hist_loss = loss / b
-        else:
-            # every shard's loss carries the full global coupled term;
-            # keep 1/n_sh of it so the caller's shard average (which
-            # divides the separable part by B through the b-per-shard
-            # denominators) reproduces the single program's loss/B
-            n_sh = jax.lax.psum(1, axis_name)
-            hist_loss = (loss - aux["coupled"] * (1.0 - 1.0 / n_sh)) / b
-        out = {"loss": hist_loss, "tau": tau,
-               "penalty": aux["penalty"],
-               "dispatch_ratio": aux["dispatch_ratio"]}
-        if telemetry:
-            # observers only: read the gradients the update consumes,
-            # feed nothing back
-            norm = jnp.sqrt(grads.raw_off ** 2 + grads.raw_gap ** 2
-                            + grads.raw_lvl ** 2)            # [B]
-            out["grad_norm"] = jnp.mean(norm)
-            out["clip_frac"] = (
-                jnp.mean((norm > cfg.clip_norm).astype(norm.dtype))
-                if cfg.clip_norm else jnp.zeros((), norm.dtype))
-        raw, st = vupdate(grads, st, raw)
-        return (raw, st), out
-
+    step = _make_step(problem, cfg, coupling, b, telemetry=telemetry,
+                      axis_name=axis_name, scale_rows=scale_rows)
     taus = _tau_schedule(cfg)
     bounds = _stage_bounds(cfg)
-    carry = (raw0, state0)
+    carry = _init_carry(raw0)
     hists, stage_cpc = [], []
     for lo, hi in zip(bounds[:-1], bounds[1:]):
         carry, h = jax.lax.scan(step, carry, taus[lo:hi])
@@ -382,6 +332,121 @@ def _loop_body(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
     hist["stage_cpc"] = jnp.stack(stage_cpc)
     # cpc_rows from the last stage IS the final hard re-evaluation
     return raw_f, hist, cpc_rows
+
+
+_LR_BACKOFF_FLOOR = 2.0 ** -10   # per-row lr multiplier never decays
+                                 # below this — a row that recovers
+                                 # still moves
+
+
+def _init_carry(raw0: PolicyParams):
+    """The hot loop's scan carry: raw params, per-row Adam moments, and
+    the per-row guard lr multiplier (1.0 until a step is rejected)."""
+    b = raw0.raw_off.shape[0]
+    state0 = AdamWState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(jnp.zeros_like, raw0),
+                        nu=jax.tree.map(jnp.zeros_like, raw0))
+    return (raw0, state0, jnp.ones((b,), jnp.float32))
+
+
+def _make_step(problem: TuneProblem, cfg: TuneConfig,
+               coupling: Optional[DispatchCoupling], b: int, *,
+               telemetry: bool = False,
+               axis_name: Optional[str] = None,
+               scale_rows: Optional[int] = None):
+    """Build the per-step closure of the Adam scan (shared by
+    `_loop_body` and the stage-wise `tune_loop_checkpointed` segments,
+    so both trace the *same* per-step program).
+
+    Every step carries a branchless finite-step guard: a row whose soft
+    CPC ratio or gradient leaves a non-finite value (a NaN price gap
+    reaching the objective, an overflowing coupled term mid-storm) has
+    its gradient zeroed, its parameters and Adam moments held, and its
+    per-row lr multiplier halved (floor ``_LR_BACKOFF_FLOOR``) — the
+    row re-enters at reduced step size instead of poisoning the carry.
+    On an all-finite run every guard op is an exact arithmetic identity
+    (``where(True, x, _)``, ``where(lr == 1.0, new, _)``), so healthy
+    trajectories are bit-identical to the unguarded loop (asserted in
+    tests/test_faults.py). The per-step reject count streams out as
+    ``history["guard_rejects"]``.
+    """
+    rc = cfg.resolved_coupling
+    opt = AdamWConfig(lr=cfg.lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
+                      weight_decay=0.0, clip_norm=cfg.clip_norm)
+
+    def row_update(g, st, p):
+        new_p, new_st, _ = adamw_update(g, st, p, opt)
+        return new_p, new_st
+
+    state_axes = AdamWState(step=None, mu=0, nu=0)
+    vupdate = jax.vmap(row_update, in_axes=(0, state_axes, 0),
+                       out_axes=(0, state_axes))
+
+    grad_fn = jax.value_and_grad(soft_objective, has_aux=True)
+    min_dwell = rc.dispatch.min_dwell_h \
+        if rc.dispatch is not None else 0
+
+    def step(carry, tau):
+        raw, st, lr_scale = carry
+        (loss, aux), grads = grad_fn(
+            raw, problem, tau, power_cap_mw=rc.power_cap_mw,
+            min_up_hours=rc.min_up_hours,
+            penalty_weight=rc.penalty_weight,
+            dispatch=coupling, dispatch_blend=rc.dispatch_blend,
+            dispatch_min_dwell=min_dwell,
+            dispatch_mw_scale=rc.dispatch_mw_scale,
+            dispatch_fused=cfg.fused, relief=rc.relief_config,
+            fused=cfg.fused, block_t=cfg.block_t, reduction="sum",
+            axis_name=axis_name, scale_rows=scale_rows)
+        if axis_name is None:
+            hist_loss = loss / b
+        else:
+            # every shard's loss carries the full global coupled term;
+            # keep 1/n_sh of it so the caller's shard average (which
+            # divides the separable part by B through the b-per-shard
+            # denominators) reproduces the single program's loss/B
+            n_sh = jax.lax.psum(1, axis_name)
+            hist_loss = (loss - aux["coupled"] * (1.0 - 1.0 / n_sh)) / b
+        # finite-step guard: per-row accept mask over the row's own CPC
+        # ratio and its three gradient components
+        ok = (jnp.isfinite(aux["ratio"]) & jnp.isfinite(grads.raw_off)
+              & jnp.isfinite(grads.raw_gap)
+              & jnp.isfinite(grads.raw_lvl))                  # [B]
+        out = {"loss": hist_loss, "tau": tau,
+               "penalty": aux["penalty"],
+               "dispatch_ratio": aux["dispatch_ratio"],
+               "guard_rejects": jnp.sum((~ok).astype(jnp.float32))}
+        if telemetry:
+            # observers only: read the gradients the update consumes,
+            # feed nothing back
+            norm = jnp.sqrt(grads.raw_off ** 2 + grads.raw_gap ** 2
+                            + grads.raw_lvl ** 2)            # [B]
+            out["grad_norm"] = jnp.mean(norm)
+            out["clip_frac"] = (
+                jnp.mean((norm > cfg.clip_norm).astype(norm.dtype))
+                if cfg.clip_norm else jnp.zeros((), norm.dtype))
+        g_safe = jax.tree.map(lambda g: jnp.where(ok, g, 0.0), grads)
+        new_p, new_st = vupdate(g_safe, st, raw)
+        # backed-off rows blend toward the Adam target; where(lr == 1)
+        # selects new_p itself because raw + 1.0 * (new_p - raw) is NOT
+        # a bitwise identity
+        applied = jax.tree.map(
+            lambda n, r: jnp.where(lr_scale == 1.0, n,
+                                   r + lr_scale * (n - r)), new_p, raw)
+        raw_new = jax.tree.map(lambda a, r: jnp.where(ok, a, r),
+                               applied, raw)
+        st_new = AdamWState(
+            step=new_st.step,       # global step counts every attempt
+            mu=jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                            new_st.mu, st.mu),
+            nu=jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                            new_st.nu, st.nu))
+        lr_new = jnp.where(ok, lr_scale,
+                           jnp.maximum(lr_scale * 0.5,
+                                       _LR_BACKOFF_FLOOR))
+        return (raw_new, st_new, lr_new), out
+
+    return step
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "telemetry"),
@@ -400,8 +465,112 @@ def tune_loop(raw0: PolicyParams, problem: TuneProblem,
     return _loop_body(raw0, problem, cfg, coupling, telemetry)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "lo", "hi", "telemetry"))
+def _stage_segment(carry, problem: TuneProblem,
+                   coupling: Optional[DispatchCoupling] = None, *,
+                   cfg: TuneConfig, lo: int, hi: int,
+                   telemetry: bool = False):
+    """One anneal stage of the checkpointed runner: the Adam scan over
+    ``taus[lo:hi]`` plus the boundary's hard re-evaluation, jitted per
+    (cfg, stage window). Same per-step program as `tune_loop` (built by
+    `_make_step`); stage boundaries compile separately, so the
+    checkpointed trajectory's bit-identity contract is against *itself*
+    (resumed == uninterrupted), not against the single-jit loop —
+    XLA fusion differs across program boundaries."""
+    b = carry[0].raw_off.shape[0]
+    step = _make_step(problem, cfg, coupling, b, telemetry=telemetry)
+    taus = _tau_schedule(cfg)
+    carry, hist = jax.lax.scan(step, carry, taus[lo:hi])
+    ph = transform(carry[0])
+    cpc_rows = _hard_cpc_rows(ph.p_on, ph.p_off, ph.off_level, problem)
+    return carry, hist, cpc_rows
+
+
+def _ckpt_template(carry, cfg: TuneConfig, n_steps_done: int,
+                   n_stages_done: int, b: int, telemetry: bool) -> dict:
+    """Zero-filled pytree matching a `tune_loop_checkpointed` save after
+    ``n_stages_done`` stages — what `load_checkpoint` restores into."""
+    keys = ["dispatch_ratio", "guard_rejects", "loss", "penalty", "tau"]
+    if telemetry:
+        keys += ["clip_frac", "grad_norm"]
+    return {
+        "carry": carry,
+        "hist": {k: np.zeros((n_steps_done,), np.float32)
+                 for k in keys},
+        "stage_cpc": np.zeros((n_stages_done,), np.float32),
+        "cpc_rows": np.zeros((b,), np.float32),
+    }
+
+
+def tune_loop_checkpointed(raw0: PolicyParams, problem: TuneProblem,
+                           coupling: Optional[DispatchCoupling] = None,
+                           *, cfg: TuneConfig, directory,
+                           telemetry: bool = False, keep: int = 2):
+    """`tune_loop` as resumable anneal stages with the full optimizer
+    carry checkpointed at every stage boundary (`repro.checkpoint`).
+
+    The scan runs stage by stage (`_stage_segment`, one jit per stage
+    window); after each stage the carry — raw params, per-row Adam
+    moments, the guard's lr multipliers — plus the accumulated history
+    and stage CPCs land under ``directory`` via `CheckpointManager`
+    (npz round-trips float bits exactly). A rerun over the same
+    directory restores the newest stage and continues: a killed run
+    resumed this way is *bit-identical* to one that never died
+    (asserted in tests/test_faults.py), because the restored carry is
+    the exact bytes the uninterrupted run would have carried and every
+    remaining stage re-traces the same program. Returns
+    ``(raw_f, history, cpc_tuned)`` like `tune_loop`."""
+    from repro.checkpoint import CheckpointManager
+
+    raw0 = PolicyParams(*(jnp.asarray(a) for a in raw0))
+    b = raw0.raw_off.shape[0]
+    bounds = _stage_bounds(cfg)
+    n_stages = len(bounds) - 1
+    mgr = CheckpointManager(directory, keep=keep)
+    carry = _init_carry(raw0)
+    hists: list = []
+    stage_cpc: list = []
+    cpc_rows = None
+    start = 0
+    latest = mgr.latest_step()
+    if latest is not None:
+        k = min(int(latest), n_stages)
+        tree, _ = mgr.restore(
+            _ckpt_template(carry, cfg, bounds[k], k, b, telemetry),
+            step=latest)
+        carry = tree["carry"]
+        hists = [tree["hist"]]
+        stage_cpc = [np.float32(v) for v in tree["stage_cpc"]]
+        cpc_rows = tree["cpc_rows"]
+        start = k
+    for k in range(start, n_stages):
+        carry, h, cpc_rows = _stage_segment(
+            carry, problem, coupling, cfg=cfg, lo=bounds[k],
+            hi=bounds[k + 1], telemetry=telemetry)
+        hists.append({kk: np.asarray(v) for kk, v in h.items()})
+        stage_cpc.append(np.float32(np.asarray(jnp.mean(cpc_rows))))
+        hist_acc = {kk: np.concatenate([np.asarray(hh[kk])
+                                        for hh in hists])
+                    for kk in hists[0]}
+        mgr.save(k + 1, {
+            "carry": carry, "hist": hist_acc,
+            "stage_cpc": np.asarray(stage_cpc, np.float32),
+            "cpc_rows": np.asarray(cpc_rows, np.float32)},
+            metadata={"stage": k + 1, "steps": cfg.steps},
+            blocking=True)
+    hist = {kk: np.concatenate([np.asarray(hh[kk]) for hh in hists])
+            for kk in hists[0]}
+    hist["stage_cpc"] = np.asarray(stage_cpc, np.float32)
+    return carry[0], hist, cpc_rows
+
+
 _PROBLEM_ROW_FIELDS = tuple(f for f in TuneProblem._fields
                             if f != "prices")
+
+# history keys that count events over rows merge across chunks/shards
+# by summing; everything else (losses, taus, fractions) averages
+_HIST_MERGE = {"guard_rejects": np.sum}
 
 
 def _take_problem(problem: TuneProblem, idx: np.ndarray) -> TuneProblem:
@@ -521,7 +690,7 @@ def _run_sharded(raw0: PolicyParams, problem: TuneProblem,
     else:
         raw_f, hist, cpc = fn(raw0, problem)
     raw_f = jax.tree.map(lambda x: x[:n_rows], raw_f)
-    return raw_f, {k: np.asarray(v).mean(axis=0)
+    return raw_f, {k: _HIST_MERGE.get(k, np.mean)(np.asarray(v), axis=0)
                    for k, v in hist.items()}, cpc[:n_rows]
 
 
@@ -561,7 +730,8 @@ def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
             raws.append(r)
             hists.append(h)
             cpcs.append(cp)
-        hist = {k: np.mean([np.asarray(h[k]) for h in hists], axis=0)
+        hist = {k: _HIST_MERGE.get(k, np.mean)(
+                    [np.asarray(h[k]) for h in hists], axis=0)
                 for k in hists[0]}
         return (concat_rows(raws, n_rows), hist,
                 concat_rows(cpcs, n_rows))
@@ -588,7 +758,8 @@ def _run_loop(raw0: PolicyParams, problem: TuneProblem, cfg: TuneConfig,
         if n_dev > 1:
             raw_f, hist, cpc = _sharded_loop(n_dev, cfg,
                                              telemetry)(raw0, problem)
-            return raw_f, {k: np.asarray(v).mean(axis=0)
+            return raw_f, {k: _HIST_MERGE.get(k, np.mean)(
+                               np.asarray(v), axis=0)
                            for k, v in hist.items()}, cpc
 
     raw_f, hist, cpc = tune_loop(raw0, problem, coupling, cfg=cfg,
@@ -870,6 +1041,11 @@ def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
     dispatch_out = None
     reeval_cfg = rc.reeval_config
     if reeval_cfg is not None:
+        if rc.relief_config is not None and reeval_cfg.relief is None:
+            # a Coupling-level relief covers the hard re-scoring too:
+            # a storm-degraded policy set sheds at VoLL instead of
+            # scoring a bare `inf`
+            reeval_cfg = reeval_cfg._replace(relief=rc.relief_config)
         dispatch_out = _dispatch_reeval(grid, params, cpc, best_row,
                                         reeval_cfg)
 
@@ -879,7 +1055,8 @@ def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
         improvement_vs_best=1.0 - cpc / cpc_swept_best,
         improvement_vs_own=1.0 - cpc / cpc_swept,
         source=source, history=hist, stage_cpc=stage_cpc,
-        dispatch=dispatch_out)
+        dispatch=dispatch_out,
+        guard_count=int(np.sum(hist.get("guard_rejects", 0.0))))
     if telemetry:
         _emit_tune_events(cfg, result)
     return result
@@ -914,5 +1091,13 @@ def _emit_tune_events(cfg: TuneConfig, res: TuneResult) -> None:
         "improvement_vs_best_mean": float(np.mean(res.improvement_vs_best)),
         "source_counts": {src_names[s]: int(n) for s, n in
                           zip(*np.unique(res.source, return_counts=True))}})
+    if res.guard_count:
+        rej = np.asarray(res.history["guard_rejects"])
+        obs.trace_event("tune.guard", {
+            "rejects_total": int(res.guard_count),
+            "steps_affected": int((rej > 0).sum()),
+            "first_step": int(np.argmax(rej > 0)),
+            "rows": int(res.cpc.shape[0])})
+        obs.counter("tune.guard_rejects").inc(int(res.guard_count))
     obs.gauge("tune.cpc_mean").set(float(np.mean(res.cpc)))
     obs.counter("tune.runs").inc()

@@ -1,0 +1,442 @@
+"""Fault-injection subsystem tests: the zero-fault bit-identity
+contract of `faulted_backtest` (telemetry on and off, including the
+256-row acceptance grid), `FaultTrace` compilation and validation,
+relief-mode dispatch properties (zero-shed relief bitwise equal to the
+hard dispatcher, shed cost exactly linear in VoLL), the tuner's
+non-finite step guard (healthy runs bitwise unperturbed, poisoned runs
+survive with finite results), checkpoint kill/resume bit-identity of
+`tune_loop_checkpointed`, the live controller's degradation ladder,
+and the gap-fill/staleness accounting of the data layer."""
+
+import dataclasses
+import json
+import pathlib
+import shutil
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.tco import make_system
+from repro.dispatch import (DispatchConfig, DispatchInfeasible,
+                            DispatchProblem, Relief, dispatch,
+                            segment_rank)
+from repro.energy.markets import MarketParams
+from repro.energy.stream import PriceStream, ffill_with_staleness
+from repro.faults import (FAULT_KINDS, FaultEvent, FaultMasks, FaultTrace,
+                          faulted_backtest, faulted_problem,
+                          identity_masks, random_storm)
+from repro.fleet import PolicySpec, backtest, build_grid, summarize
+from repro.live import LiveConfig, build_live_grid, live_backtest
+from repro.obs.report import load_events, render_digest
+from repro.obs.schema import validate
+from repro.tune import TuneConfig, optimize, tune_loop_checkpointed
+from repro.tune.objective import init_from_grid, problem_from_grid
+
+import jax.numpy as jnp
+
+
+def _grid(n_markets=2, t=400):
+    markets = [MarketParams(n_hours=t, seed=s) for s in range(n_markets)]
+    sys = make_system(0.5 * t * 80.0, 1.0, float(t))
+    pols = [PolicySpec("ao"), PolicySpec("x10", x=0.10, off_level=0.3),
+            PolicySpec("x30", x=0.30, off_level=0.3)]
+    return build_grid(markets, [sys], pols)
+
+
+def _acceptance_grid():
+    """The fixed-seed 256-row grid shared with tests/test_tune.py."""
+    t = 600
+    markets = [MarketParams(n_hours=t, seed=s) for s in range(4)]
+    systems = [make_system(float(psi) * t * 1.0 * 80.0, 1.0, float(t))
+               for psi in (0.5, 1.0, 2.0, 4.0)]
+    xs = (0.01, 0.02, 0.03, 0.05, 0.08, 0.10, 0.12, 0.15,
+          0.20, 0.25, 0.30, 0.40)
+    policies = [PolicySpec("ao")] + \
+        [PolicySpec(f"x{int(x * 100)}", x=x, off_level=0.25)
+         for x in xs] + \
+        [PolicySpec("x3h", x=0.03, hysteresis=0.9, off_level=0.25),
+         PolicySpec("x8h", x=0.08, hysteresis=0.85, off_level=0.25),
+         PolicySpec("x15h", x=0.15, hysteresis=0.9, off_level=0.25)]
+    return build_grid(markets, systems, policies)
+
+
+def _assert_reports_equal(a, b):
+    for f in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f)
+
+
+def _problem(s=4, t=300, *, demand_frac=0.5, seed=17, migrate_cost=0.0):
+    r = np.random.default_rng(seed)
+    prices = r.normal(80, 40, (s, t)).astype(np.float32)
+    power = r.uniform(1.0, 3.0, s).astype(np.float32)
+    on = (r.uniform(size=(s, t)) > 0.3).astype(np.float32)
+    avail = power[:, None] * (0.2 + 0.8 * on)
+    demand = np.full(t, demand_frac * float(avail.sum(axis=0).min()),
+                     np.float32)
+    order, rank = segment_rank(prices, migrate_cost)
+    return DispatchProblem(
+        prices=prices, avail_mw=avail, demand_mw=demand,
+        power_cap_mw=float("inf"), migrate_cost=migrate_cost,
+        min_dwell_h=0, compute_floor_mwh=0.0, fixed_cost=0.0,
+        order=order, rank=rank)
+
+
+# ---------------------------------------------------------------------------
+# FaultTrace schema
+# ---------------------------------------------------------------------------
+
+def test_fault_trace_validation():
+    with pytest.raises(ValueError):
+        FaultTrace(events=(FaultEvent("quake", 0, 0, 1),))
+    with pytest.raises(ValueError):
+        FaultTrace(events=(FaultEvent("site_outage", 0, -1, 1),))
+    # zero-duration events are legal no-ops (compile to trivial masks)
+    assert FaultTrace(events=(FaultEvent("site_outage", 0, 0, 0),)) \
+        .compile(2, 2, 10).is_trivial
+    assert len(FaultTrace()) == 0
+    assert FaultTrace().compile(2, 2, 10).is_trivial
+
+
+def test_fault_trace_compile_masks():
+    tr = FaultTrace(events=(
+        FaultEvent("site_outage", 1, 5, 3),
+        FaultEvent("price_gap", 0, 2, 4),
+        FaultEvent("forecast_blackout", 0, 0, 2),
+        FaultEvent("demand_surge", 0, 6, 2, magnitude=1.5)))
+    m = tr.compile(2, 2, 12)
+    assert not m.is_trivial
+    np.testing.assert_array_equal(np.asarray(m.cap_mult[1, 5:8]), 0.0)
+    assert float(np.asarray(m.cap_mult).sum()) == 2 * 12 - 3
+    assert not np.asarray(m.price_ok)[0, 2:6].any()
+    assert not np.asarray(m.forecast_ok)[0, :2].any()
+    np.testing.assert_allclose(np.asarray(m.demand_mult[6:8]), 1.5)
+    counts = m.counts()
+    assert counts["outage_site_hours"] == 3
+    assert counts["price_gap_hours"] == 4
+
+
+def test_random_storm_seeded_and_bounded():
+    a = random_storm(7, 4, 2, 200)
+    b = random_storm(7, 4, 2, 200)
+    assert a == b
+    assert random_storm(8, 4, 2, 200) != a
+    for ev in a.events:
+        assert ev.kind in FAULT_KINDS
+        assert 0 <= ev.start < 200
+        assert ev.start + ev.duration <= 200
+
+
+# ---------------------------------------------------------------------------
+# zero-fault bit-identity
+# ---------------------------------------------------------------------------
+
+def test_zero_fault_backtest_bit_identical():
+    grid = _grid()
+    ref = backtest(grid, use_pallas=False)
+    for faults in (None, FaultTrace(),
+                   identity_masks(grid.n_rows, 2, 400)):
+        _assert_reports_equal(ref, faulted_backtest(grid, faults))
+    # the masked program itself (not the trivial-mask short-circuit) is
+    # also bitwise the plain backtest: identity masks reduce every
+    # fault channel to where(True, x) / * 1.0
+    _assert_reports_equal(
+        ref, faulted_backtest(grid, None, _force_masked=True))
+
+
+def test_zero_fault_bit_identical_on_acceptance_grid(tmp_path):
+    """The acceptance contract: on the 256-row grid the zero-fault
+    faulted path is bitwise the plain backtest — with telemetry off
+    AND on (fault channels may not perturb through the obs layer)."""
+    grid = _acceptance_grid()
+    assert grid.n_rows == 256
+    ref = backtest(grid, use_pallas=False)
+    _assert_reports_equal(ref, faulted_backtest(grid, _force_masked=True))
+    obs.enable(tmp_path / "run", run_id="zf")
+    try:
+        traced = faulted_backtest(grid, _force_masked=True)
+    finally:
+        obs.disable()
+    _assert_reports_equal(ref, traced)
+    # an empty schedule emits no fault events
+    events = load_events(tmp_path / "run")
+    assert not [e for e in events if e["kind"] == "fault.injected"]
+
+
+def test_faulted_backtest_degrades_not_crashes():
+    grid = _grid()
+    ref = backtest(grid, use_pallas=False)
+    storm = random_storm(3, grid.n_rows, 2, 400)
+    rep = faulted_backtest(grid, storm)
+    assert np.isfinite(np.asarray(rep.cpc)).all()
+    assert not np.array_equal(np.asarray(rep.cpc), np.asarray(ref.cpc))
+    # a pure outage only ever removes compute (price gaps, by contrast,
+    # can keep stale-decided units running longer)
+    outage = FaultTrace(events=(FaultEvent("site_outage", 1, 100, 40),))
+    out = faulted_backtest(grid, outage)
+    assert (np.asarray(out.up_hours)
+            <= np.asarray(ref.up_hours) + 1e-6).all()
+    assert np.asarray(out.up_hours)[1] < np.asarray(ref.up_hours)[1]
+
+
+def test_faulted_problem_trivial_identity_and_surge():
+    prob = _problem()
+    assert faulted_problem(prob, FaultTrace()) is prob
+    surge = FaultTrace(events=(
+        FaultEvent("demand_surge", 0, 10, 20, magnitude=1.3),))
+    fp = faulted_problem(prob, surge)
+    np.testing.assert_allclose(np.asarray(fp.demand_mw[10:30]),
+                               np.asarray(prob.demand_mw[10:30]) * 1.3,
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(fp.avail_mw),
+                                  np.asarray(prob.avail_mw))
+
+
+# ---------------------------------------------------------------------------
+# dispatch relief mode
+# ---------------------------------------------------------------------------
+
+def test_relief_zero_shed_bitwise_equal_to_hard():
+    """On a feasible problem the relief dispatcher sheds nothing and the
+    result is bitwise the hard dispatcher's."""
+    prob = _problem(demand_frac=0.4)
+    hard = dispatch(prob)
+    soft = dispatch(prob._replace(relief=Relief()))
+    assert soft.shed_mwh == 0.0
+    assert soft.shed_cost == 0.0
+    assert soft.n_shed_hours == 0
+    for f in hard._fields:
+        if f in ("shed_mwh", "shed_cost", "n_shed_hours"):
+            continue
+        np.testing.assert_array_equal(np.asarray(getattr(hard, f)),
+                                      np.asarray(getattr(soft, f)),
+                                      err_msg=f)
+
+
+def test_relief_sheds_instead_of_raising():
+    prob = _problem(demand_frac=0.4)
+    outage = FaultTrace(events=(
+        FaultEvent("site_outage", 0, 50, 30),
+        FaultEvent("site_outage", 1, 55, 30),
+        FaultEvent("site_outage", 2, 60, 30),
+        FaultEvent("site_outage", 3, 60, 20),))
+    fp = faulted_problem(prob, outage)
+    with pytest.raises(DispatchInfeasible):
+        dispatch(fp)
+    res = dispatch(fp._replace(relief=Relief(voll_eur_mwh=1000.0)))
+    assert res.shed_mwh > 0.0
+    assert res.n_shed_hours > 0
+    assert np.isfinite(res.cpc)
+
+
+def test_relief_shed_cost_linear_in_voll():
+    prob = _problem(demand_frac=0.4)
+    fp = faulted_problem(prob, FaultTrace(events=tuple(
+        FaultEvent("site_outage", k, 50, 25) for k in range(4))))
+    runs = {v: dispatch(fp._replace(relief=Relief(voll_eur_mwh=v)))
+            for v in (500.0, 2500.0, 5000.0)}
+    shed = {v: r.shed_mwh for v, r in runs.items()}
+    # the shed profile is VoLL-independent (exact water-fill shortfall)
+    assert shed[500.0] == shed[2500.0] == shed[5000.0]
+    np.testing.assert_allclose(runs[2500.0].shed_cost,
+                               5 * runs[500.0].shed_cost, rtol=1e-12)
+    np.testing.assert_allclose(runs[5000.0].shed_cost,
+                               10 * runs[500.0].shed_cost, rtol=1e-12)
+    assert runs[500.0].cpc < runs[2500.0].cpc < runs[5000.0].cpc
+
+
+# ---------------------------------------------------------------------------
+# tuner guard + checkpoint/resume
+# ---------------------------------------------------------------------------
+
+def _tune_fixture(t=240):
+    markets = [MarketParams(n_hours=t, seed=s) for s in range(2)]
+    systems = [make_system(0.6 * t * 1.0 * 60.0, 1.0, float(t))]
+    pols = [PolicySpec(f"x{int(x * 100)}", x=x, off_level=0.4)
+            for x in (0.1, 0.3, 0.5)]
+    return build_grid(markets, systems, pols)
+
+
+def test_tuner_guard_noop_on_healthy_run():
+    grid = _tune_fixture()
+    a = optimize(grid, TuneConfig(steps=40))
+    b = optimize(grid, TuneConfig(steps=40))
+    assert a.guard_count == 0
+    assert float(np.sum(a.history["guard_rejects"])) == 0.0
+    np.testing.assert_array_equal(np.asarray(a.cpc), np.asarray(b.cpc))
+    for fa, fb in zip(a.raw, b.raw):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+def test_tuner_guard_survives_poisoned_input():
+    """A NaN in one market's price trace poisons every loss/grad that
+    touches it; the guard must reject those steps (count them) and
+    still return finite parameters for the healthy rows."""
+    grid = _tune_fixture()
+    bad = dataclasses.replace(
+        grid, prices=grid.prices.at[0, 5].set(jnp.nan))
+    res = optimize(bad, TuneConfig(steps=40))
+    assert res.guard_count > 0
+    for f in res.raw:
+        assert np.isfinite(np.asarray(f)).all()
+
+
+def test_tune_checkpoint_kill_resume_bit_identical(tmp_path):
+    grid = _tune_fixture()
+    problem = problem_from_grid(grid)
+    raw0 = init_from_grid(grid)
+    cfg = TuneConfig(steps=40)
+    d1, d2 = tmp_path / "a", tmp_path / "b"
+    raw_a, hist_a, cpc_a = tune_loop_checkpointed(
+        raw0, problem, cfg=cfg, directory=d1)
+    # run to completion, then "crash" by deleting everything after the
+    # second stage checkpoint and resume from what survived
+    tune_loop_checkpointed(raw0, problem, cfg=cfg, directory=d2)
+    for p in sorted(pathlib.Path(d2).glob("step_*"))[2:]:
+        shutil.rmtree(p)
+    raw_b, hist_b, cpc_b = tune_loop_checkpointed(
+        raw0, problem, cfg=cfg, directory=d2)
+    for fa, fb in zip(raw_a, raw_b):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+    np.testing.assert_array_equal(np.asarray(cpc_a), np.asarray(cpc_b))
+    for k in hist_a:
+        np.testing.assert_array_equal(np.asarray(hist_a[k]),
+                                      np.asarray(hist_b[k]), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# live degradation ladder
+# ---------------------------------------------------------------------------
+
+def _live_fixture(t=600):
+    markets = [MarketParams(n_hours=t, seed=s) for s in range(2)]
+    systems = [make_system(0.6 * t * 1.0 * 60.0, 1.0, float(t))]
+    pols = [PolicySpec("x30", x=0.3, off_level=0.4),
+            PolicySpec("x10", x=0.1, off_level=0.4)]
+    grid = build_grid(markets, systems, pols)
+    return build_live_grid(grid, pols,
+                           forecasters=("seasonal_naive", "persistence"),
+                           families=("quantile", "tuned"))
+
+
+def test_live_zero_fault_bit_identical():
+    lg = _live_fixture()
+    cfg = LiveConfig(hours=336, start=170)
+    ref = live_backtest(lg, cfg)
+    for faults in (None, FaultTrace()):
+        got = live_backtest(lg, cfg, faults=faults)
+        for f in ref._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                          np.asarray(getattr(got, f)),
+                                          err_msg=f)
+
+
+def test_live_fallback_ladder_under_storm(tmp_path):
+    lg = _live_fixture()
+    cfg = LiveConfig(hours=336, start=170)
+    ref = live_backtest(lg, cfg)
+    storm = FaultTrace(events=(
+        FaultEvent("site_outage", 0, 200, 24),
+        FaultEvent("price_gap", 0, 250, 12),
+        FaultEvent("forecast_blackout", 1, 300, 60)), seed=7)
+    obs.enable(tmp_path / "run", run_id="lf")
+    try:
+        res = live_backtest(lg, cfg, faults=storm)
+    finally:
+        obs.disable()
+    assert np.isfinite(np.asarray(res.cpc)).all()
+    assert not np.array_equal(np.asarray(res.cpc), np.asarray(ref.cpc))
+    events = load_events(tmp_path / "run")
+    for e in events:
+        assert validate(e) == [], e
+    fb = [e for e in events if e["kind"] == "live.fallback"]
+    assert len(fb) == 1
+    f = fb[0]
+    # every row-hour lands on exactly one rung
+    total = f["fresh"] + f["stale_shift"] + f["seasonal_naive"] \
+        + f["persistence"]
+    assert total == lg.n_rows * cfg.hours
+    # the 60 h blackout outlasts every horizon, so the ladder must
+    # reach past the age-shifted rung
+    assert f["stale_shift"] > 0
+    assert f["seasonal_naive"] > 0
+    assert f["forced_off_row_hours"] > 0
+    assert [e for e in events if e["kind"] == "fault.injected"]
+
+
+# ---------------------------------------------------------------------------
+# data-layer gap filling
+# ---------------------------------------------------------------------------
+
+def test_ffill_with_staleness_units():
+    vals = np.array([np.nan, 10.0, np.nan, np.nan, 40.0])
+    filled, stale = ffill_with_staleness(vals, fill_value=5.0)
+    np.testing.assert_allclose(filled, [5.0, 10.0, 10.0, 10.0, 40.0])
+    np.testing.assert_array_equal(stale, [1, 0, 1, 2, 0])
+
+
+def test_price_stream_ffill_mode():
+    prices = np.array([50.0, np.nan, np.nan, 80.0, 90.0])
+    with pytest.raises(ValueError):
+        PriceStream(prices)
+    st = PriceStream(prices, fill="ffill")
+    np.testing.assert_allclose(np.asarray(st.prices),
+                               [50.0, 50.0, 50.0, 80.0, 90.0])
+    np.testing.assert_array_equal(np.asarray(st.staleness),
+                                  [0, 1, 2, 0, 0])
+
+
+def test_smard_csv_ffill_counts_filled(tmp_path):
+    from repro.energy.smard import load_smard_csv
+    csv = tmp_path / "p.csv"
+    csv.write_text("Datum;Preis\na;50,5\nb;-\nc;-\nd;70,0\n")
+    p, stats = load_smard_csv(str(csv), return_stats=True, fill="ffill")
+    np.testing.assert_allclose(p, [50.5, 50.5, 50.5, 70.0])
+    assert stats.n_filled == 2
+    assert stats.n_nan == 2
+    # filled hours no longer count toward the skip fraction
+    assert stats.skip_frac == 0.0
+
+
+def test_summarize_nan_safe_with_degraded_rows():
+    """A degraded report row (inf CPC from a fully-outaged site) must
+    not poison the fleet summary's totals or the regret table."""
+    grid = _grid()
+    rep = backtest(grid, use_pallas=False)
+    bad = rep._replace(
+        cpc=rep.cpc.at[0].set(jnp.inf),
+        cpc_reduction=rep.cpc_reduction.at[0].set(jnp.nan),
+        tco=rep.tco.at[0].set(jnp.inf))
+    s = summarize(grid, bad)
+    assert np.isfinite(s.total_cost)
+    assert np.isfinite(s.energy_by_policy).all()
+
+
+# ---------------------------------------------------------------------------
+# obs integration: the Degradation digest section
+# ---------------------------------------------------------------------------
+
+def test_degradation_digest_section(tmp_path):
+    grid = _grid()
+    storm = random_storm(5, grid.n_rows, 2, 400)
+    run = tmp_path / "run"
+    obs.enable(run, run_id="dg")
+    try:
+        faulted_backtest(grid, storm)
+    finally:
+        obs.disable()
+    for e in load_events(run):
+        assert validate(e) == [], e
+    digest = render_digest(run, redact_meta=True)
+    assert "## Degradation" in digest
+    assert "faults injected" in digest
+    # healthy traces keep the section out (golden digest unchanged)
+    run2 = tmp_path / "run2"
+    obs.enable(run2, run_id="dg2")
+    try:
+        faulted_backtest(grid)
+    finally:
+        obs.disable()
+    assert "## Degradation" not in render_digest(run2, redact_meta=True)
