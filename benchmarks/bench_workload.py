@@ -1,0 +1,100 @@
+"""Workload-coupling overhead: what an exogenous-demand run pays for
+workload support, and what the coupled ledger costs.
+
+`repro.workload.workload_backtest` threads a [B, G, deadline] queue
+carry plus a [G, T] demand stream through the fleet scan — a real cost.
+The contract is that configs without a `Workload` never pay it:
+zero-workload calls short-circuit to the plain backtest program, so
+``workload_short_circuit_ratio`` (plain time / zero-workload time) sits
+at ~1.0 and its committed baseline plus the 30% gate tolerance trips if
+someone removes the short-circuit. ``workload_coupled_speed_ratio``
+(plain time / coupled time at G demand draws) is the low-water mark for
+the fused program itself: a structural regression — sampling demand
+inside the scan, a host round-trip per hour, or a de-fused per-draw
+loop — costs integer factors and trips it. The fleet half of the fused
+scan must stay a bitwise no-op (the ledger rides the carry without
+feeding back), checked field-for-field on the FleetReport."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.bench_fleet import _fleet_grid
+from benchmarks.common import timed, write_artifact
+from repro.fleet import backtest
+from repro.workload import Workload, workload_backtest
+
+
+def bench_workload(n_markets: int = 8, n_systems: int = 4,
+                   hours: int = 4096, n_draws: int = 8) -> dict:
+    grid = _fleet_grid(n_markets, n_systems, hours)
+    b = grid.n_rows
+    wl = Workload(n_draws=n_draws, seed=7)
+
+    def run_plain():
+        rep = backtest(grid, use_pallas=False)
+        jax.block_until_ready(rep.cpc)
+        return rep
+
+    def run_zero_workload():
+        res = workload_backtest(grid)
+        jax.block_until_ready(res.report.cpc)
+        return res
+
+    def run_coupled():
+        res = workload_backtest(grid, wl)
+        jax.block_until_ready(res.report.cpc)
+        return res
+
+    rep_plain, us_plain = timed(run_plain, repeats=3)
+    res_zero, us_zero = timed(run_zero_workload, repeats=3)
+    res_coupled, us_coupled = timed(run_coupled, repeats=3)
+
+    identical = all(
+        np.array_equal(np.asarray(getattr(rep_plain, f)),
+                       np.asarray(getattr(res_coupled.report, f)))
+        for f in rep_plain._fields)
+
+    return {
+        "rows": b,
+        "hours": hours,
+        "n_draws": n_draws,
+        "workload_short_circuit_ratio": us_plain / us_zero,
+        "workload_coupled_speed_ratio": us_plain / us_coupled,
+        "rows_per_s_plain": b / (us_plain * 1e-6),
+        "rows_per_s_zero_workload": b / (us_zero * 1e-6),
+        "rows_per_s_coupled": b / (us_coupled * 1e-6),
+        "bit_identical_coupled_fleet_report": identical,
+        "cpc_p50_mean": float(np.mean(
+            np.asarray(res_coupled.workload.cpc_p50))),
+        "drop_frac": float(
+            np.sum(np.asarray(res_coupled.workload.dropped_mwh))
+            / max(np.sum(np.asarray(res_coupled.workload.arrivals_mwh)),
+                  1e-9)),
+    }
+
+
+ALL = {"bench_workload": bench_workload}
+
+
+def main() -> None:
+    out = bench_workload()
+    print(f"fleet: {out['rows']} rows x {out['hours']} h x "
+          f"{out['n_draws']} demand draws")
+    print(f"plain backtest      : {out['rows_per_s_plain']:>12.0f} rows/s")
+    print(f"zero-workload       : "
+          f"{out['rows_per_s_zero_workload']:>12.0f} rows/s  "
+          f"(ratio {out['workload_short_circuit_ratio']:.3f} — "
+          "no-Workload configs short-circuit)")
+    print(f"coupled ledger      : {out['rows_per_s_coupled']:>12.0f} "
+          f"rows/s  (ratio {out['workload_coupled_speed_ratio']:.3f}, "
+          f"fleet half bit-identical: "
+          f"{out['bit_identical_coupled_fleet_report']})")
+    print(f"coupled CPC p50 mean {out['cpc_p50_mean']:.1f} EUR/MWh, "
+          f"drop fraction {out['drop_frac']:.3f}")
+    write_artifact("bench_workload", out)
+
+
+if __name__ == "__main__":
+    main()

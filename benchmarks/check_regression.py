@@ -44,7 +44,8 @@ LOW_WATER = 0.5           # --reset seeds baseline at median x this:
 # CI time)
 def _suites():
     from benchmarks import (bench_dispatch, bench_faults, bench_fleet,
-                            bench_live, bench_tune, bench_tune_coupled)
+                            bench_live, bench_tune, bench_tune_coupled,
+                            bench_workload)
     return {
         # shapes sized so the fused calls take tens of ms: smaller smoke
         # runs time nothing but host jitter and the gate flakes
@@ -67,6 +68,21 @@ def _suites():
             ("rows_per_s_plain", "rows_per_s_zero_fault",
              "rows_per_s_forced_masked", "rows_per_s_storm", "rows",
              "storm_events", "bit_identical_masked_zero_fault")),
+        # workload-coupling overhead on the same gated fleet shape:
+        # workload_short_circuit_ratio (~1.0) gates that no-Workload
+        # configs pay nothing for the ledger plumbing (they
+        # short-circuit to the plain program), and
+        # workload_coupled_speed_ratio is the fused fleet+ledger
+        # program's low-water mark — sampling demand in-scan or a
+        # de-fused per-draw loop costs integer factors and trips it
+        "bench_workload": (
+            bench_workload.bench_workload,
+            dict(n_markets=8, n_systems=4, hours=4096, n_draws=8),
+            ("workload_short_circuit_ratio",
+             "workload_coupled_speed_ratio"),
+            ("rows_per_s_plain", "rows_per_s_zero_workload",
+             "rows_per_s_coupled", "rows", "n_draws",
+             "bit_identical_coupled_fleet_report")),
         "bench_dispatch": (
             bench_dispatch.bench_dispatch,
             dict(n_sites=32, hours=4096, baseline_hours=256),

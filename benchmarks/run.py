@@ -13,7 +13,7 @@ import traceback
 from benchmarks import (bench_dispatch, bench_faults, bench_fleet,
                         bench_live,
                         bench_runtime, bench_tune, bench_tune_coupled,
-                        paper_figures)
+                        bench_workload, paper_figures)
 from benchmarks.common import ARTIFACTS
 
 
@@ -32,6 +32,7 @@ def main() -> int:
         suites.update(bench_tune_coupled.ALL)
         suites.update(bench_live.ALL)
         suites.update(bench_faults.ALL)
+        suites.update(bench_workload.ALL)
         suites.update(bench_runtime.ALL)
     if args.only:
         suites = {k: v for k, v in suites.items() if k == args.only}
@@ -112,6 +113,13 @@ def _headline(name: str, out: dict) -> str:
                 f"{out['fault_mask_speed_ratio']:.2f}, storm ratio "
                 f"{out['fault_storm_speed_ratio']:.2f}, masked "
                 f"bit-identical: {out['bit_identical_masked_zero_fault']}")
+    if name == "bench_workload":
+        return (f"{out['rows']} rows x {out['n_draws']} draws: "
+                f"short-circuit ratio "
+                f"{out['workload_short_circuit_ratio']:.2f}, coupled "
+                f"ratio {out['workload_coupled_speed_ratio']:.2f}, "
+                f"fleet half bit-identical: "
+                f"{out['bit_identical_coupled_fleet_report']}")
     if name == "bench_tune":
         line = (f"{out['rows']} rows x {out['steps']} steps: "
                 f"{out['row_steps_per_s_fused']:.0f} row-steps/s fused "

@@ -94,7 +94,12 @@ class DispatchConfig(NamedTuple):
     `TuneConfig` and `fleet.backtest` take; None leaves the backend
     auto-select in force. ``relief`` (a `Relief`) converts infeasible
     hours into priced shed instead of raising; None keeps the hard
-    raise, bit-identical to the pre-relief dispatcher.
+    raise, bit-identical to the pre-relief dispatcher. ``workload`` (a
+    `repro.workload.Workload`, duck-typed to avoid the import cycle)
+    derives the demand profile from the request-arrival model when
+    ``demand_mw`` is None — the expected MW of
+    `Workload.mean_demand_mw`; with both unset the ``demand_frac``
+    default applies bit-identically.
     """
 
     demand_mw: Optional[Union[float, tuple]] = None
@@ -105,6 +110,7 @@ class DispatchConfig(NamedTuple):
     compute_floor_mwh: float = 0.0
     plan: Optional[ExecutionPlan] = None
     relief: Optional[Relief] = None
+    workload: Optional[object] = None
 
 
 class DispatchProblem(NamedTuple):
@@ -209,8 +215,13 @@ def resolve_demand(cfg: DispatchConfig, power: np.ndarray,
     else raises — a profile built for the wrong horizon is a bug, not a
     broadcast), and None defaults to ``demand_frac`` of the summed site
     ratings. Shared by `build_problem` and the soft dispatch coupling
-    (`repro.tune.objective.dispatch_coupling_from_grid`)."""
-    if cfg.demand_mw is None:
+    (`repro.tune.objective.dispatch_coupling_from_grid`). A
+    ``cfg.workload`` spec takes over the None default: the profile is
+    the workload's expected demand (`Workload.mean_demand_mw`)."""
+    if cfg.demand_mw is None and getattr(cfg, "workload", None) \
+            is not None:
+        demand = np.asarray(cfg.workload.mean_demand_mw(t), np.float64)
+    elif cfg.demand_mw is None:
         demand = np.asarray(cfg.demand_frac
                             * float(np.asarray(power, np.float64).sum()))
     else:

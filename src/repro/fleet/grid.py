@@ -98,6 +98,11 @@ class ScenarioGrid:
     market_names: tuple = ()
     system_names: tuple = ()
     policy_names: tuple = ()
+    # optional `repro.workload.Workload` spec (duck-typed to avoid the
+    # import cycle): None keeps every engine on the exogenous-demand
+    # programs bit-identically; set, `workload_backtest`/`summarize`/
+    # `optimize` couple the rows to sampled request traces
+    workload: Optional[object] = None
 
     @property
     def n_rows(self) -> int:
@@ -122,7 +127,7 @@ class ScenarioGrid:
     # fields shared across rows, NOT permuted by take_rows; everything
     # else must be a [B]-leading array or take_rows refuses to guess
     SHARED_FIELDS = ("prices", "market_names", "system_names",
-                     "policy_names")
+                     "policy_names", "workload")
 
     def take_rows(self, order: np.ndarray) -> "ScenarioGrid":
         """Row-permuted view (shared fields stay); row order is an
@@ -190,13 +195,17 @@ def build_grid(markets: Union[Sequence[MarketParams], np.ndarray],
                systems: Sequence[SystemCosts],
                policies: Sequence[PolicySpec],
                market_names: Optional[Sequence[str]] = None,
-               system_names: Optional[Sequence[str]] = None) -> ScenarioGrid:
+               system_names: Optional[Sequence[str]] = None,
+               workload=None) -> ScenarioGrid:
     """Materialise the B = N*M*K scenario grid.
 
     ``markets``: either MarketParams (each generated via
     `repro.energy.markets.generate_market`) or an [N, T] price matrix
     (e.g. real SMARD traces). All markets must share T; all systems are
-    backtested over the same period.
+    backtested over the same period. ``workload`` (a
+    `repro.workload.Workload`) couples the grid to sampled request
+    traces wherever the grid flows; None keeps today's exogenous-demand
+    programs untouched.
     """
     if len(systems) == 0 or len(policies) == 0:
         raise ValueError("need at least one system and one policy")
@@ -253,4 +262,5 @@ def build_grid(markets: Union[Sequence[MarketParams], np.ndarray],
         market_names=tuple(market_names),
         system_names=tuple(system_names),
         policy_names=tuple(p.name for p in policies),
+        workload=workload,
     )

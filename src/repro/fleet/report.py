@@ -67,6 +67,11 @@ class FleetSummary(NamedTuple):
     # row order, the dispatch stats themselves are order-invariant)
     dispatch: Optional[DispatchResult] = None
     dispatch_rows: Optional[np.ndarray] = None
+    # workload-coupled ledger economics (a
+    # `repro.workload.WorkloadResult`: CPC p10/p50/p90 over the demand
+    # draws, served/deferred/dropped totals) — None unless the grid
+    # carries a Workload spec or summarize() was given one
+    workload: Optional[object] = None
 
 
 def oracle_reduction_grid(prices: jnp.ndarray,
@@ -105,8 +110,8 @@ def dispatch_sites(grid, report: FleetReport,
 
 
 def summarize(grid, report: FleetReport, *,
-              dispatch_cfg: Optional[DispatchConfig] = None
-              ) -> FleetSummary:
+              dispatch_cfg: Optional[DispatchConfig] = None,
+              workload=None) -> FleetSummary:
     """Aggregate a `FleetReport` over the scenario cube of ``grid``
     (a `repro.fleet.grid.ScenarioGrid`). Row order never matters: cells
     are addressed by the report's index columns.
@@ -117,7 +122,13 @@ def summarize(grid, report: FleetReport, *,
     with the operated rows in `FleetSummary.dispatch_rows` (raises
     `repro.dispatch.DispatchInfeasible` when the configured demand —
     scalar or a [T] profile such as `repro.dispatch.diurnal_demand` —
-    cannot be met; hard constraints are never clipped)."""
+    cannot be met; hard constraints are never clipped).
+
+    ``workload`` (a `repro.workload.Workload`, defaulting to
+    ``grid.workload``) re-runs the rows through the workload-coupled
+    backtest and lands the ledger economics — CPC p10/p50/p90 over the
+    demand draws, served/deferred/dropped — in `FleetSummary.workload`;
+    None (and no grid spec) leaves the summary exactly as before."""
     n, m, k = grid.n_markets, grid.n_systems, grid.n_policies
     mi = np.asarray(report.market_idx)
     si = np.asarray(report.system_idx)
@@ -173,6 +184,14 @@ def summarize(grid, report: FleetReport, *,
             dispatch_cfg, fixed=np.asarray(grid.fixed)[rows],
             site_names=names))
 
+    wl = workload if workload is not None \
+        else getattr(grid, "workload", None)
+    wl_result = None
+    if wl is not None:
+        # lazy import: repro.workload imports the fleet engine
+        from repro.workload import workload_backtest
+        wl_result = workload_backtest(grid, wl).workload
+
     summary = FleetSummary(
         reduction=red,
         best_policy=best_policy,
@@ -185,6 +204,7 @@ def summarize(grid, report: FleetReport, *,
         total_up_hours=float(np.nansum(hours)),
         dispatch=disp,
         dispatch_rows=rows,
+        workload=wl_result,
     )
     if obs.enabled():
         obs.trace_event("fleet.summary", {

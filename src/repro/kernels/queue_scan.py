@@ -1,0 +1,223 @@
+"""In-scan work ledger: bounded deferral queue with deadline aging.
+
+`queue_hour_step` is one hour of the hard ledger — the single source of
+the per-hour update, shared by the standalone `queue_scan`, the fused
+`workload_fleet_scan` (fleet state machine + ledger in one carry), and
+the soft path of `repro.tune.objective.soft_objective` — exactly the
+role `hard_hour_step` plays for the shutdown state machine.
+
+The greedy oldest-first fill uses the same parallel-cumsum idiom as
+`dispatch_alloc_hour`: line the waiting work up oldest-first with the
+hour's arrivals last, take ``clip(cap - older_mass, 0, width)`` per age
+bucket, and the fill equals the sequential greedy serve. Work that has
+waited past ``deadline`` hours drops; survivors age one hour and
+re-queue under the backlog ``bound`` (oldest kept, youngest dropped on
+overflow — upstream is most likely to still retry the newest work).
+
+The soft relaxation replaces both clips with `smoothclip` — a softplus
+pair whose derivative is the sigmoid drop gate — at an MWh temperature
+co-annealed with the tuner's price temperature (``tau_mwh = tau *
+QUEUE_MWH_SCALE``, mirroring `_DWELL_CNT_SCALE`). It is exact at zero
+width, strictly inside ``(0, w)`` otherwise, and converges to the hard
+clip as tau -> 0, so the soft ledger conserves work the same way the
+hard one does and FD-gradient checks pass at every temperature.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import FleetScanOut, hard_hour_step
+
+QUEUE_MWH_SCALE = 0.05   # MWh smoothing width per price-unit of tau:
+                         # the soft ledger's clip temperature co-anneals
+                         # with the tuner's sigmoid temperature, so the
+                         # tau -> 0 limit recovers the hard ledger and
+                         # the schedule needs no second knob
+
+
+def smoothclip(z, w, tau):
+    """Soft ``clip(z, 0, w)``: ``tau*(softplus(z/tau) -
+    softplus((z-w)/tau))``. Exactly 0 at w == 0, strictly in (0, w) for
+    w > 0, monotone in z, derivative a sigmoid pair (the drop gate), and
+    -> clip(z, 0, w) as tau -> 0."""
+    return tau * (jax.nn.softplus(z / tau)
+                  - jax.nn.softplus((z - w) / tau))
+
+
+def queue_hour_step(q, a_t, cap_t, *, bound, tau=None):
+    """One hour of the work ledger (hard, or soft when ``tau`` is set).
+
+    q: [..., D] backlog by age (index 0 youngest = arrived last hour,
+    D-1 one hour from deadline expiry); a_t/cap_t: [...] arrivals and
+    serving capacity in MWh (broadcastable against q's batch shape).
+    Returns ``(q_new, served, dropped)`` — served/dropped [...].
+    """
+    # oldest-first work vector: [q[D-1], ..., q[0], arrivals]
+    w = jnp.concatenate([q[..., ::-1], jnp.broadcast_to(
+        a_t[..., None], q.shape[:-1] + (1,))], axis=-1)
+    excl = jnp.cumsum(w, axis=-1) - w
+    room = cap_t[..., None] - excl
+    serve = jnp.clip(room, 0.0, w) if tau is None \
+        else smoothclip(room, w, tau)
+    served = jnp.sum(serve, axis=-1)
+    u = w - serve
+    aged = u[..., 1:]                     # survivors, still oldest-first
+    excl_a = jnp.cumsum(aged, axis=-1) - aged
+    keep = jnp.clip(bound - excl_a, 0.0, aged) if tau is None \
+        else smoothclip(bound - excl_a, aged, tau)
+    dropped = u[..., 0] + jnp.sum(aged - keep, axis=-1)
+    return keep[..., ::-1], served, dropped
+
+
+class QueueScanOut(NamedTuple):
+    """Ledger sufficient statistics over the horizon (batch-shaped)."""
+
+    served: jax.Array       # total MWh served
+    dropped: jax.Array      # total MWh dropped (expiry + overflow)
+    backlog: jax.Array      # MWh-hours deferred (sum of hourly backlog)
+    served_cost: jax.Array  # EUR: sum_t served_t * p_t (0 if no prices)
+    q_final: jax.Array      # [..., D] end-of-run queue, youngest first
+
+
+class QueueHourly(NamedTuple):
+    """Per-hour ledger series ([..., T] each)."""
+
+    served: jax.Array
+    dropped: jax.Array
+    backlog: jax.Array
+
+
+def queue_scan(arrivals, cap, *, deadline: int, bound, tau=None,
+               prices=None, hourly: bool = False):
+    """Scan the work ledger over the horizon.
+
+    arrivals/cap: [..., T] MWh per hour, mutually broadcastable;
+    ``prices`` (optional, broadcastable) prices each served MWh at the
+    hour it is *actually* served — deferral pays the price eventually
+    paid, which is the whole point of carrying work into cheaper hours.
+    ``tau=None`` is the hard ledger; a scalar (traced is fine) runs the
+    `smoothclip` relaxation in the capacity dtype (f64 under x64 — FD
+    checks rely on it). With ``hourly=True`` returns
+    ``(QueueScanOut, QueueHourly)``.
+    """
+    a = jnp.asarray(arrivals)
+    c = jnp.asarray(cap)
+    dtype = jnp.result_type(a.dtype, c.dtype)
+    if not jnp.issubdtype(dtype, jnp.floating):
+        dtype = jnp.float32
+    shape = jnp.broadcast_shapes(a.shape, c.shape)
+    a = jnp.broadcast_to(a.astype(dtype), shape)
+    c = jnp.broadcast_to(c.astype(dtype), shape)
+    p = jnp.zeros(shape, dtype) if prices is None \
+        else jnp.broadcast_to(jnp.asarray(prices, dtype), shape)
+    batch = shape[:-1]
+    d = int(deadline)
+
+    def step(carry, xs):
+        q, s_acc, d_acc, b_acc, c_acc = carry
+        a_t, cap_t, p_t = xs
+        q, served, dropped = queue_hour_step(q, a_t, cap_t, bound=bound,
+                                             tau=tau)
+        bl = jnp.sum(q, axis=-1)
+        carry = (q, s_acc + served, d_acc + dropped, b_acc + bl,
+                 c_acc + served * p_t)
+        ys = (served, dropped, bl) if hourly else None
+        return carry, ys
+
+    zeros = jnp.zeros(batch, dtype)
+    init = (jnp.zeros(batch + (d,), dtype), zeros, zeros, zeros, zeros)
+    (q, served, dropped, backlog, cost), ys = jax.lax.scan(
+        step, init, (jnp.moveaxis(a, -1, 0), jnp.moveaxis(c, -1, 0),
+                     jnp.moveaxis(p, -1, 0)))
+    out = QueueScanOut(served, dropped, backlog, cost, q)
+    if hourly:
+        return out, QueueHourly(*(jnp.moveaxis(y, 0, -1) for y in ys))
+    return out
+
+
+class WorkloadFleetOut(NamedTuple):
+    """Fused fleet + ledger scan output.
+
+    ``fleet`` carries the exact `FleetScanOut` sums of
+    `repro.kernels.ref.fleet_scan_ref` (op-for-op the same per-hour
+    update — the ledger rides the carry without feeding back, so the
+    fleet half stays bit-identical); the ledger stats are [B, G] over
+    the G demand draws every row serves.
+    """
+
+    fleet: FleetScanOut     # [B] each
+    served: jax.Array       # [B, G] MWh
+    dropped: jax.Array      # [B, G] MWh
+    backlog: jax.Array      # [B, G] MWh-hours deferred
+    served_cost: jax.Array  # [B, G] EUR at the hour each MWh is served
+
+
+class WorkloadHourly(NamedTuple):
+    """Per-hour fleet-mean ledger aggregates ([T] each) — the payload of
+    the ``workload.hourly`` telemetry drain (mean over rows x draws, so
+    only 4T floats cross to the host)."""
+
+    demand_mwh: jax.Array
+    served_mwh: jax.Array
+    dropped_mwh: jax.Array
+    backlog_mwh: jax.Array
+
+
+def workload_fleet_scan(prices, p_on, p_off, off_level, idle_frac,
+                        cap_mwh, demand_mw, dt, *, deadline: int,
+                        bound, hourly: bool = False):
+    """Fleet shutdown state machine and work ledger in one lax.scan.
+
+    prices: [B, T]; policy params: [B]; ``cap_mwh`` [B] is the MWh one
+    fully-on hour serves (power * dt); ``demand_mw`` [G, T] the demand
+    draws (MW, converted per-row to MWh via ``dt`` [B]); the queue carry
+    is [B, G, deadline]. The fleet accumulators reproduce
+    `fleet_scan_ref` exactly — same `hard_hour_step`, same accumulation
+    order, f32 — and the ledger serves each draw with the hour's
+    *realised* capacity, so shutdown decisions defer or drop real work.
+    With ``hourly=True`` returns ``(WorkloadFleetOut, WorkloadHourly)``.
+    """
+    p = jnp.asarray(prices, jnp.float32)
+    b = p.shape[0]
+    p_on, p_off, off_level, idle_frac = (
+        jnp.broadcast_to(jnp.asarray(v, jnp.float32), (b,))
+        for v in (p_on, p_off, off_level, idle_frac))
+    dem = jnp.asarray(demand_mw, jnp.float32)
+    g = dem.shape[0]
+    cap_mwh = jnp.broadcast_to(jnp.asarray(cap_mwh, jnp.float32), (b,))
+    dt = jnp.broadcast_to(jnp.asarray(dt, jnp.float32), (b,))
+    d = int(deadline)
+    bound = jnp.float32(bound)
+
+    def step(carry, xs):
+        on_prev, acc, q, qacc = carry
+        p_t, a_t = xs
+        on, start, cap, draw = hard_hour_step(on_prev, p_t, p_on, p_off,
+                                              off_level, idle_frac)
+        acc = (acc[0] + draw * p_t, acc[1] + cap,
+               acc[2] + start, acc[3] + start * p_t)
+        a_bg = dt[:, None] * a_t[None, :]          # [B, G] MWh arriving
+        q, served, dropped = queue_hour_step(
+            q, a_bg, (cap_mwh * cap)[:, None], bound=bound)
+        bl = jnp.sum(q, axis=-1)
+        qacc = (qacc[0] + served, qacc[1] + dropped, qacc[2] + bl,
+                qacc[3] + served * p_t[:, None])
+        ys = (jnp.mean(a_bg), jnp.mean(served), jnp.mean(dropped),
+              jnp.mean(bl)) if hourly else None
+        return (on, acc, q, qacc), ys
+
+    zeros_b = jnp.zeros((b,), jnp.float32)
+    zeros_bg = jnp.zeros((b, g), jnp.float32)
+    init = (jnp.ones((b,), jnp.float32),
+            (zeros_b, zeros_b, zeros_b, zeros_b),
+            jnp.zeros((b, g, d), jnp.float32),
+            (zeros_bg, zeros_bg, zeros_bg, zeros_bg))
+    (_, acc, _, qacc), ys = jax.lax.scan(step, init, (p.T, dem.T))
+    out = WorkloadFleetOut(FleetScanOut(*acc), *qacc)
+    if hourly:
+        return out, WorkloadHourly(*ys)
+    return out

@@ -122,6 +122,57 @@ def fleet_scan_ref(prices: jax.Array, p_on: jax.Array, p_off: jax.Array,
     return FleetScanOut(*acc)
 
 
+def queue_scan_ref(arrivals: jax.Array, cap: jax.Array, *,
+                   deadline: int, bound) -> tuple[jax.Array, jax.Array,
+                                                  jax.Array, jax.Array]:
+    """Sequential oracle for the hard work-ledger scan
+    (`repro.kernels.queue_scan.queue_scan`).
+
+    arrivals/cap: [R, T] MWh per hour. Deliberately a different
+    formulation from the kernel's parallel-cumsum fill: the age buckets
+    are walked *sequentially* (python-unrolled — ``deadline`` is
+    static), serving oldest-first from a running remaining-capacity
+    variable and re-queueing under ``bound`` with a running kept-mass —
+    the greedy prose the cumsum idiom must reproduce. Returns per-hour
+    ``(served [R, T], dropped [R, T], backlog [R, T], q_final [R, D])``.
+    """
+    a = jnp.asarray(arrivals)
+    dtype = a.dtype if jnp.issubdtype(a.dtype, jnp.floating) else jnp.float32
+    a = a.astype(dtype)
+    c = jnp.broadcast_to(jnp.asarray(cap, dtype), a.shape)
+    r = a.shape[0]
+    d = int(deadline)
+
+    def hour(q, inp):
+        a_t, c_t = inp
+        # q[:, i] has waited i+1 hours; serve oldest first
+        work = [q[:, d - 1 - i] for i in range(d)] + [a_t]
+        rem = c_t
+        served = jnp.zeros_like(c_t)
+        unserved = []
+        for w in work:
+            s_i = jnp.minimum(rem, w)
+            rem = rem - s_i
+            served = served + s_i
+            unserved.append(w - s_i)
+        dropped = unserved[0]             # waited past the deadline
+        kept = jnp.zeros_like(c_t)
+        new_q = []
+        for w in unserved[1:]:            # oldest survivor first
+            keep = jnp.minimum(w, jnp.maximum(bound - kept, 0.0))
+            kept = kept + keep
+            dropped = dropped + (w - keep)
+            new_q.append(keep)
+        q = jnp.stack(new_q[::-1], axis=1) if d \
+            else jnp.zeros((r, 0), dtype)
+        return q, (served, dropped, kept)
+
+    q0 = jnp.zeros((r, d), dtype)
+    q_final, (served, dropped, backlog) = jax.lax.scan(
+        hour, q0, (a.T, c.T))
+    return served.T, dropped.T, backlog.T, q_final
+
+
 def soft_gates(p_t, p_on, p_off, inv_tau):
     """Per-hour sigmoid event gates of the relaxed hysteresis recurrence.
 

@@ -28,7 +28,7 @@ running inside jit:
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +52,11 @@ class LiveFleetResult(NamedTuple):
     shed_mwh: jax.Array       # demand the fleet could not place
     replan_mw: jax.Array      # sum_t |commit_t - plan_{t-1}(t)|
     p_off_final: jax.Array    # [S] last committed thresholds
+    # work-ledger economics over the sampled demand draws (see
+    # `live_fleet_dispatch`'s ``workload``): {"served_mwh",
+    # "dropped_mwh", "deferred_mwh_h", "cost" (all [n_draws]),
+    # "cpc_p10"/"cpc_p50"/"cpc_p90" (floats)} — None without a Workload
+    workload: Optional[dict] = None
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -122,11 +127,12 @@ def _live_fleet_scan(prices, power, p_on0, p_off0, off_level, idle_frac,
 
 
 def live_fleet_dispatch(prices, power, p_on, p_off, off_level, idle_frac,
-                        x, demand, *, start: int = 0, hours: int = 168,
+                        x, demand=None, *, start: int = 0,
+                        hours: int = 168,
                         horizon: int = 24, cadence: int = 1,
                         season: int = 168, migrate_cost: float = 0.0,
-                        min_dwell: int = 0,
-                        fixed: float = 0.0) -> LiveFleetResult:
+                        min_dwell: int = 0, fixed: float = 0.0,
+                        workload=None, faults=None) -> LiveFleetResult:
     """Run the live dispatch loop over one fleet.
 
     prices: [S, T] per-site market prices; power/p_on/p_off/off_level/
@@ -136,11 +142,35 @@ def live_fleet_dispatch(prices, power, p_on, p_off, off_level, idle_frac,
     offline `dispatch_ref` path); demand: scalar MW or [hours] profile.
     Cost accounting mirrors `repro.dispatch.summarize_alloc` (matched
     in/out migration flow; hour 0 placement is not a move).
+
+    ``workload`` (a `repro.workload.Workload`) makes ``demand``
+    optional: the loop then plans against the workload's *mean* demand
+    profile over the live window, and afterwards replays every sampled
+    demand draw through the hard work ledger
+    (`repro.workload.replay_ledger`) against the hour-by-hour
+    *delivered* fleet allocation — `LiveFleetResult.workload` reports
+    served/deferred/dropped totals per draw plus CPC p10/p50/p90 over
+    the draws. ``faults`` (a demand-surge schedule, see
+    `repro.faults`) perturbs the arrival intensity of the live window,
+    so live rows feel surges in the request process itself.
     """
     prices = jnp.asarray(prices, jnp.float32)
     s, t_total = prices.shape
     if horizon < 2:
         raise ValueError("horizon must be >= 2")
+    mult = None
+    if workload is not None and faults is not None:
+        from repro.faults.inject import emit_fault_events, resolve_masks
+        masks = resolve_masks(faults, s, s, int(start) + int(hours))
+        emit_fault_events(faults, masks, scope="live.workload")
+        m = np.asarray(masks.demand_mult, np.float64)
+        mult = None if np.all(m == 1.0) else m
+    if demand is None:
+        if workload is None:
+            raise ValueError("live_fleet_dispatch: pass demand= or a "
+                             "workload= to derive it from")
+        demand = workload.mean_demand_mw(int(start) + int(hours),
+                                         mult)[start:start + hours]
     demand = np.asarray(demand, np.float32)
     if demand.ndim == 0:
         demand_h = np.broadcast_to(demand, (hours,))
@@ -170,6 +200,12 @@ def live_fleet_dispatch(prices, power, p_on, p_off, off_level, idle_frac,
     energy = jnp.sum(energy_t)
     delivered = jnp.sum(a)
     migration_cost = migrate_cost * migration_mw
+    wl_stats = None
+    if workload is not None:
+        wl_stats = _replay_workload(
+            workload, np.asarray(alloc), mult, start=int(start),
+            hours=int(hours),
+            fleet_cost=float(fixed + energy + migration_cost))
     return LiveFleetResult(
         alloc_mw=alloc,
         cpc=(fixed + energy + migration_cost)
@@ -177,4 +213,38 @@ def live_fleet_dispatch(prices, power, p_on, p_off, off_level, idle_frac,
         energy_cost=energy, migration_cost=migration_cost,
         migration_mw=migration_mw, delivered_mwh=delivered,
         shed_mwh=jnp.sum(shed_t), replan_mw=jnp.sum(replan_t),
-        p_off_final=p_off_f)
+        p_off_final=p_off_f, workload=wl_stats)
+
+
+def _replay_workload(workload, alloc: np.ndarray,
+                     mult: Optional[np.ndarray], *, start: int,
+                     hours: int, fleet_cost: float) -> dict:
+    """Hard-ledger replay of every sampled demand draw against the
+    committed hour-by-hour fleet allocation (post-hoc, host-side — the
+    live scan itself is untouched). Costing mirrors
+    `repro.workload.WorkloadResult`: fleet bill + SLO-priced backlog +
+    VoLL-priced drops, per served MWh."""
+    from repro.workload import replay_ledger
+    draws = workload.sample_demand_mw(start + hours, mult)[:,
+                                                           start:
+                                                           start + hours]
+    cap = np.sum(alloc, axis=0).astype(np.float64)      # MWh per hour
+    served = np.empty(draws.shape[0])
+    dropped = np.empty(draws.shape[0])
+    backlog = np.empty(draws.shape[0])
+    for g in range(draws.shape[0]):
+        rep = replay_ledger(draws[g], cap,
+                            deadline=int(workload.deadline_h),
+                            bound=float(workload.queue_bound_mwh))
+        served[g] = np.sum(rep.served)
+        dropped[g] = np.sum(rep.dropped)
+        backlog[g] = np.sum(rep.backlog)
+    cost = (fleet_cost
+            + float(workload.slo_penalty_eur_mwh) * backlog
+            + float(workload.relief.voll_eur_mwh) * dropped)
+    cpc = cost / np.maximum(served, 1e-9)
+    p10, p50, p90 = np.quantile(cpc, [0.1, 0.5, 0.9])
+    return {"served_mwh": served, "dropped_mwh": dropped,
+            "deferred_mwh_h": backlog, "cost": cost,
+            "cpc_p10": float(p10), "cpc_p50": float(p50),
+            "cpc_p90": float(p90)}

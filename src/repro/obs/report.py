@@ -166,6 +166,39 @@ def render_digest(run_dir, *, top_k: int = 5,
                        f"MW, mean {_fmt(on.mean())} MW, max "
                        f"{_fmt(on.max())} MW")
 
+    # workload --------------------------------------------------------
+    wl_res = by_kind.get("workload.result", [])
+    wl_hourly = by_kind.get("workload.hourly", [])
+    if wl_res or wl_hourly:
+        _section(out, "Workload")
+        if wl_res:
+            w = wl_res[-1]
+            out.append(f"- coupled backtests: {len(wl_res)}; last: "
+                       f"{w['rows']} rows x {w['hours']} h x "
+                       f"{w['n_draws']} demand draws")
+            out.append(f"- mean per (row, draw): served "
+                       f"{_fmt(w['served_mwh'])} MWh, dropped "
+                       f"{_fmt(w['dropped_mwh'])} MWh "
+                       f"(drop fraction {_fmt(w['drop_frac'], 3)}), "
+                       f"deferred {_fmt(w['deferred_mwh_h'])} MWh-h")
+            out.append(f"- CPC over draws (row means): p10 "
+                       f"{_fmt(w['cpc_p10_mean'])}, p50 "
+                       f"{_fmt(w['cpc_p50_mean'])}, p90 "
+                       f"{_fmt(w['cpc_p90_mean'])} EUR/MWh")
+        if wl_hourly:
+            h = wl_hourly[-1]
+            dem = np.asarray(h["demand_mwh"], np.float64)
+            srv = np.asarray(h["served_mwh"], np.float64)
+            drp = np.asarray(h["dropped_mwh"], np.float64)
+            bkl = np.asarray(h["backlog_mwh"], np.float64)
+            out.append(f"- hourly (fleet means over {dem.shape[0]} h): "
+                       f"offered {_fmt(dem.sum())} MWh, served "
+                       f"{_fmt(srv.sum())} MWh, dropped "
+                       f"{_fmt(drp.sum())} MWh")
+            out.append(f"- backlog: peak {_fmt(bkl.max())} MWh (hour "
+                       f"{int(bkl.argmax())}), mean {_fmt(bkl.mean())} "
+                       "MWh")
+
     # dispatch --------------------------------------------------------
     recon = reconstruct_dispatch(events)
     disp = by_kind.get("dispatch.result", [])

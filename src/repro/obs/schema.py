@@ -51,6 +51,14 @@ EVENT_KINDS: dict[str, tuple[str, tuple[str, ...]]] = {
     "live.result": ("live.report.summarize_live", (
         "rows", "hours", "cpc_mean", "regret_oracle_mean",
         "regret_offline_mean", "mae1_mean", "churn_total")),
+    # workload ------------------------------------------------------------
+    "workload.hourly": (
+        "workload.backtest._workload_backtest_jit (io_callback drain)", (
+            "demand_mwh", "served_mwh", "dropped_mwh", "backlog_mwh")),
+    "workload.result": ("workload.backtest.workload_backtest", (
+        "rows", "hours", "n_draws", "served_mwh", "dropped_mwh",
+        "deferred_mwh_h", "drop_frac", "cpc_p10_mean", "cpc_p50_mean",
+        "cpc_p90_mean")),
     # faults & degradation ------------------------------------------------
     "fault.injected": ("faults.inject.emit_fault_events", (
         "fault", "target", "start", "duration", "magnitude", "scope")),

@@ -54,6 +54,7 @@ import numpy as np
 from repro.dispatch import (DispatchConfig, resolve_demand, segment_keys,
                             segment_rank)
 from repro.fleet.engine import fleet_costs
+from repro.kernels.queue_scan import QUEUE_MWH_SCALE, queue_scan
 from repro.kernels.soft_dispatch import soft_dispatch, soft_shed
 from repro.parallel.axes import psum_id
 from repro.kernels.soft_scan import soft_scan_parts
@@ -462,6 +463,7 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
                    dispatch_mw_scale: float = 0.05,
                    dispatch_fused: bool = False,
                    relief=None,
+                   workload=None, workload_demand=None,
                    fused: bool = True, block_t: int = 256,
                    reduction: str = "mean",
                    axis_name: Optional[str] = None,
@@ -473,6 +475,16 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
     The CPC ratio is dimensionless (Eq. 28), so rows with very different
     absolute costs contribute comparably and one learning rate serves
     the whole grid. Returns ``(loss, aux)`` with per-row diagnostics.
+
+    With ``workload`` (a `repro.workload.Workload`) and
+    ``workload_demand`` (its [T] mean demand profile, MW), each row
+    additionally pays a soft work-ledger bill — SLO-rate-priced backlog
+    plus VoLL-priced drops from `repro.kernels.queue_scan.queue_scan`
+    at the co-annealed ledger temperature — normalized by its always-on
+    bill so tuning learns SLO-aware shutdown thresholds. The term is
+    per-row separable (each row serves the mean profile independently),
+    so every chunk/shard trajectory contract is preserved;
+    ``aux["workload"]`` carries the per-row term (zeros when off).
 
     With ``dispatch`` (a `DispatchCoupling`), the isolated-site term is
     *blended* with the fleet-level dispatched-CPC ratio of the relaxed
@@ -518,6 +530,34 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
                                   block_t=block_t)
     ratio = costs.cpc / costs.cpc_ao
     loss = jnp.sum(ratio) if reduction == "sum" else jnp.mean(ratio)
+    wl_ratio = jnp.zeros_like(ratio)
+    if workload is not None and workload_demand is not None:
+        # SLO-aware term (`workload` is a duck-typed
+        # `repro.workload.Workload`, ``workload_demand`` its [T] mean
+        # demand profile in MW): run the profile through the soft work
+        # ledger against each row's relaxed capacity and price the
+        # resulting backlog and drops. The ledger temperature co-anneals
+        # with tau (`QUEUE_MWH_SCALE` MWh of smoothing per price unit),
+        # so at the end of the schedule the term converges to the hard
+        # ledger's deferral/drop bill. Normalizing by the row's
+        # always-on bill (cpc_ao * period = F + E_AO) keeps it
+        # dimensionless like ``ratio`` — and per-row separable, so the
+        # chunked / sharded trajectory contracts are untouched.
+        dtp = ratio.dtype
+        dt = problem.period.astype(dtp) / cap.shape[1]              # [B]
+        cap_mwh = (problem.power.astype(dtp) * dt)[:, None] * cap
+        dem = dt[:, None] * jnp.asarray(workload_demand, dtp)[None, :]
+        qs = queue_scan(dem, cap_mwh,
+                        deadline=int(workload.deadline_h),
+                        bound=float(workload.queue_bound_mwh),
+                        tau=tau * QUEUE_MWH_SCALE)
+        wl_cost = (dtp.type(float(workload.slo_penalty_eur_mwh))
+                   * qs.backlog
+                   + dtp.type(float(workload.relief.voll_eur_mwh))
+                   * qs.dropped)                                    # [B]
+        wl_ratio = wl_cost / (costs.cpc_ao * problem.period.astype(dtp))
+        loss = loss + (jnp.sum(wl_ratio) if reduction == "sum"
+                       else jnp.mean(wl_ratio))
     if scale_rows is not None:
         scale = scale_rows if reduction == "sum" else 1.0
     else:
@@ -561,5 +601,5 @@ def soft_objective(raw: PolicyParams, problem: TuneProblem, tau, *,
 
     aux = {"ratio": ratio, "cpc": costs.cpc, "up_hours": costs.up_hours,
            "penalty": penalty, "dispatch_ratio": dratio,
-           "base": base, "coupled": coupled}
+           "base": base, "coupled": coupled, "workload": wl_ratio}
     return loss, aux

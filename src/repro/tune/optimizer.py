@@ -144,6 +144,13 @@ class TuneConfig:
     dispatch_soft: Optional[DispatchConfig] = None
     dispatch_blend: float = 0.5
     dispatch_mw_scale: float = 0.05
+    # optional `repro.workload.Workload` (duck-typed, hashable frozen
+    # dataclass — safe as part of this jit-static config): the soft
+    # objective adds its SLO-aware work-ledger term and `optimize`
+    # selects candidates by *realized* workload cost (energy + deferral
+    # + drop) instead of bare CPC. None falls back to ``grid.workload``;
+    # neither set keeps today's programs untouched
+    workload: Optional[object] = None
     # the redesigned config surface (None: derive from the fields above)
     plan: Optional[ExecutionPlan] = None
     coupling: Optional[Coupling] = None
@@ -241,6 +248,11 @@ class TuneResult(NamedTuple):
     # total row-steps the finite-step guard rejected (0 on any healthy
     # run; per-step counts in history["guard_rejects"])
     guard_count: int = 0
+    # [B] realized workload cost (energy + deferral + drop, EUR, mean
+    # over the shared demand draws) of the *selected* policy — None
+    # unless a Workload was configured; when set, ``source`` was chosen
+    # by this yardstick instead of bare CPC
+    workload_cost: Optional[np.ndarray] = None
 
 
 def _tau_schedule(cfg: TuneConfig) -> jnp.ndarray:
@@ -385,6 +397,12 @@ def _make_step(problem: TuneProblem, cfg: TuneConfig,
     grad_fn = jax.value_and_grad(soft_objective, has_aux=True)
     min_dwell = rc.dispatch.min_dwell_h \
         if rc.dispatch is not None else 0
+    wl = getattr(cfg, "workload", None)
+    # the [T] mean demand profile is host-side numpy (constant-folded
+    # into the traced program); each row serves it independently, so
+    # the workload term stays per-row separable on every plan path
+    wl_demand = None if wl is None else jnp.asarray(
+        wl.mean_demand_mw(int(problem.prices.shape[1])), jnp.float32)
 
     def step(carry, tau):
         raw, st, lr_scale = carry
@@ -396,6 +414,7 @@ def _make_step(problem: TuneProblem, cfg: TuneConfig,
             dispatch_min_dwell=min_dwell,
             dispatch_mw_scale=rc.dispatch_mw_scale,
             dispatch_fused=cfg.fused, relief=rc.relief_config,
+            workload=wl, workload_demand=wl_demand,
             fused=cfg.fused, block_t=cfg.block_t, reduction="sum",
             axis_name=axis_name, scale_rows=scale_rows)
         if axis_name is None:
@@ -964,6 +983,15 @@ def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
     (under ``cfg.dispatch`` if also given, else under the same config)
     against the best-swept set — so the reported fleet CPC under hard
     dispatch is never worse than the swept baseline's.
+
+    With a `repro.workload.Workload` (``cfg.workload``, defaulting to
+    ``grid.workload``) the annealed objective adds the soft work-ledger
+    term (`soft_objective`'s ``workload`` kwarg) and the final per-row
+    selection is judged by *realized workload cost* — energy + SLO
+    deferral + VoLL drops on one shared demand sample
+    (`repro.workload.realized_cost`) — instead of bare CPC, landing in
+    ``TuneResult.workload_cost``; the selected policy never costs more
+    than the best swept policy of its cell under the same workload.
     """
     telemetry = obs.enabled()
     problem = problem_from_grid(grid)
@@ -989,6 +1017,12 @@ def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
         raw0 = PolicyParams(*(jnp.array(a) for a in raw0))
     rc = cfg.resolved_coupling
     chunk = cfg.resolved_plan.chunk_rows
+    wl = cfg.workload if cfg.workload is not None \
+        else getattr(grid, "workload", None)
+    if wl is not None and cfg.workload is None:
+        # a grid-carried Workload flows into the loop too (cfg is the
+        # jit-static carrier `_make_step` reads)
+        cfg = cfg._replace(workload=wl)
     coupling = dispatch_coupling_from_grid(grid, rc.dispatch) \
         if rc.dispatch is not None else None
     raw_f, hist, cpc_tuned_dev = _run_loop(raw0, problem, cfg,
@@ -1004,10 +1038,29 @@ def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
         else ExecutionPlan(mode="single")
     swept = backtest(grid, use_pallas=False, plan=swept_plan)
     cpc_swept = np.asarray(swept.cpc, np.float64)
-    best_row = cell_best_rows(grid, cpc_swept)
-    cpc_swept_best = cpc_swept[best_row]
 
     tuned = transform(raw_f)
+    wl_demand = None
+    wc_tuned = wc_swept = None
+    if wl is not None:
+        # the hard selection yardstick becomes the *realized* workload
+        # cost — energy + SLO deferral + VoLL drops — on one shared
+        # demand sample, so the tuned/swept comparison is paired and
+        # the selected policy can never cost more than the best swept
+        # one under the same workload
+        from repro.workload import realized_cost
+        wl_demand = wl.sample_demand_mw(grid.n_hours)
+        wc_tuned = np.asarray(realized_cost(
+            grid, tuned.p_on, tuned.p_off, tuned.off_level, wl,
+            demand_mw=wl_demand), np.float64)
+        wc_swept = np.asarray(realized_cost(
+            grid, grid.p_on, grid.p_off, grid.off_level, wl,
+            demand_mw=wl_demand), np.float64)
+        best_row = cell_best_rows(grid, wc_swept)
+    else:
+        best_row = cell_best_rows(grid, cpc_swept)
+    cpc_swept_best = cpc_swept[best_row]
+
     # cell-best swept params evaluated under *this* row's hardware
     cb = PhysicalPolicy(p_on=grid.p_on[best_row], p_off=grid.p_off[best_row],
                         off_level=grid.off_level[best_row])
@@ -1015,6 +1068,10 @@ def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
                                chunk)
 
     cand = np.stack([cpc_tuned, cpc_swept, cpc_cb])        # [3, B]
+    # the selection yardstick: realized workload cost when a Workload
+    # is configured, bare hard CPC otherwise
+    yard = np.stack([wc_tuned, wc_swept, wc_swept[best_row]]) \
+        if wl is not None else cand
     if rc.binds:
         # fleet-coupling constraints: the swept baselines ignore them, so
         # falling back to a lower-CPC swept policy would silently violate
@@ -1025,8 +1082,10 @@ def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
         # whole fleet, in the hard dispatch re-scoring below.)
         source = np.zeros(cand.shape[1], np.int64)
     else:
-        source = np.argmin(cand, axis=0)
+        source = np.argmin(yard, axis=0)
     cpc = cand[source, np.arange(cand.shape[1])]
+    workload_cost = yard[source, np.arange(yard.shape[1])] \
+        if wl is not None else None
 
     def pick(tuned_v, own_v, cb_v):
         stacked = jnp.stack([jnp.asarray(tuned_v), jnp.asarray(own_v),
@@ -1056,7 +1115,8 @@ def optimize(grid, cfg: TuneConfig = TuneConfig(), *,
         improvement_vs_own=1.0 - cpc / cpc_swept,
         source=source, history=hist, stage_cpc=stage_cpc,
         dispatch=dispatch_out,
-        guard_count=int(np.sum(hist.get("guard_rejects", 0.0))))
+        guard_count=int(np.sum(hist.get("guard_rejects", 0.0))),
+        workload_cost=workload_cost)
     if telemetry:
         _emit_tune_events(cfg, result)
     return result

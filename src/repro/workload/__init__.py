@@ -1,0 +1,20 @@
+"""Workload-coupled demand: request traces, the work ledger, and the
+coupled backtest. See `repro.workload.trace` for the arrival model and
+`repro.workload.backtest` for the coupled program."""
+
+from repro.workload.backtest import (WorkloadBacktest, WorkloadResult,
+                                     realized_cost, workload_backtest)
+from repro.workload.queue import (LedgerReplay, ledger_cost,
+                                  replay_ledger)
+from repro.workload.trace import Workload
+
+__all__ = [
+    "LedgerReplay",
+    "Workload",
+    "WorkloadBacktest",
+    "WorkloadResult",
+    "ledger_cost",
+    "realized_cost",
+    "replay_ledger",
+    "workload_backtest",
+]

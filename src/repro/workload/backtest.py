@@ -1,0 +1,236 @@
+"""Workload-coupled fleet backtest: CPC as a distribution over demand.
+
+`workload_backtest` is `repro.fleet.backtest` with the work ledger
+riding the scan carry: every scenario row serves all ``n_draws`` demand
+draws with its hour-by-hour *realised* capacity, so a shutdown decision
+defers real work into the bounded queue (priced at the SLO penalty per
+MWh-hour, plus the energy price eventually paid when it is served) or
+drops it (priced at the `repro.dispatch.Relief` VoLL rate). The result
+carries the plain `FleetReport` — bit-identical to the exogenous
+program, the ledger feeds nothing back — plus a `WorkloadResult` with
+served/deferred/dropped totals and CPC p10/p50/p90 over the draws, all
+from one jitted program.
+
+Zero-workload configs short-circuit to the plain ``backtest`` program
+at zero overhead, exactly like `repro.faults.faulted_backtest`
+(``_force_coupled`` keeps the coupled program anyway; tests use it to
+pin that the fleet half of the fused scan is a bitwise no-op).
+
+A ``demand_surge`` fault schedule perturbs the *arrival intensity*
+before sampling (`Workload.arrival_rate`), so surges reshape the
+request process itself rather than scaling a finished profile.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.fleet.engine import backtest, fleet_costs
+from repro.fleet.grid import ScenarioGrid
+from repro.fleet.report import FleetReport
+from repro.kernels.queue_scan import workload_fleet_scan
+from repro.workload.trace import Workload
+
+_SERVED_FLOOR_MWH = 1e-9   # CPC denominator floor (a draw a row never
+                           # serves is priced per this epsilon, like the
+                           # up-hours floor in `fleet_costs`)
+
+
+class WorkloadResult(NamedTuple):
+    """Ledger economics of a workload-coupled backtest.
+
+    Per-(row, draw) arrays are [B, G]; quantiles are per-row [B] over
+    the G draws. ``cost`` is the full realized bill — fleet TCO (energy
+    at true prices, restarts, fixed) + SLO deferral penalty + VoLL
+    drops — and ``cpc`` prices it per *served* MWh.
+    """
+
+    served_mwh: jax.Array      # [B, G]
+    dropped_mwh: jax.Array     # [B, G]
+    deferred_mwh_h: jax.Array  # [B, G] MWh-hours of carried backlog
+    served_cost: jax.Array     # [B, G] EUR at the hour each MWh served
+    arrivals_mwh: jax.Array    # [B, G] total offered work
+    cost: jax.Array            # [B, G] TCO + defer + drop EUR
+    cpc: jax.Array             # [B, G] cost per served MWh
+    cpc_p10: jax.Array         # [B]
+    cpc_p50: jax.Array         # [B]
+    cpc_p90: jax.Array         # [B]
+
+    @property
+    def n_draws(self) -> int:
+        return int(self.served_mwh.shape[1])
+
+
+class WorkloadBacktest(NamedTuple):
+    """``report`` is the plain `FleetReport`; ``workload`` is None on
+    the zero-workload short-circuit path."""
+
+    report: FleetReport
+    workload: Optional[WorkloadResult]
+
+
+def _workload_stats(res, costs, demand_mw, dt, slo_rate, voll):
+    """[B, G] ledger economics + per-row CPC quantiles from the fused
+    scan output — shared by the backtest and the tuner's hard
+    candidate-selection re-eval."""
+    arrivals_mwh = dt[:, None] * jnp.sum(demand_mw, axis=1)[None, :]
+    cost = costs.tco[:, None] + slo_rate * res.backlog \
+        + voll * res.dropped
+    cpc = cost / jnp.maximum(res.served, _SERVED_FLOOR_MWH)
+    q = jnp.quantile(cpc, jnp.asarray([0.1, 0.5, 0.9], cpc.dtype),
+                     axis=1)
+    return WorkloadResult(
+        served_mwh=res.served, dropped_mwh=res.dropped,
+        deferred_mwh_h=res.backlog, served_cost=res.served_cost,
+        arrivals_mwh=arrivals_mwh, cost=cost, cpc=cpc,
+        cpc_p10=q[0], cpc_p50=q[1], cpc_p90=q[2])
+
+
+@functools.partial(jax.jit, static_argnames=("deadline", "telemetry"))
+def _workload_backtest_jit(prices, market_idx, system_idx, policy_idx,
+                           fixed, power, period, p_on, p_off, off_level,
+                           idle_frac, restart_energy_mwh, restart_time_h,
+                           demand_mw, bound, slo_rate, voll, *,
+                           deadline: int, telemetry: bool = False):
+    """One jitted program mirroring `repro.fleet.engine._backtest_jit`
+    (gather -> fused scan -> cost assembly in the same jit, so the
+    bit-identity contract for the FleetReport holds program-for-program,
+    exactly like `_faulted_backtest_jit`)."""
+    t = prices.shape[1]
+    p_rows = prices[market_idx]                       # [B, T] gather
+    dt = period / t                                   # [B] hours/sample
+    res = workload_fleet_scan(
+        p_rows, p_on, p_off, off_level, idle_frac, power * dt,
+        demand_mw, dt, deadline=deadline, bound=bound, hourly=telemetry)
+    if telemetry:
+        res, hourly = res
+        obs.drain("workload.hourly", demand_mwh=hourly.demand_mwh,
+                  served_mwh=hourly.served_mwh,
+                  dropped_mwh=hourly.dropped_mwh,
+                  backlog_mwh=hourly.backlog_mwh)
+    price_sum = jnp.sum(prices, axis=1)[market_idx]   # [B] sum_t p_t
+    costs = fleet_costs(res.fleet, price_sum=price_sum, fixed=fixed,
+                        power=power, period=period,
+                        restart_energy_mwh=restart_energy_mwh,
+                        restart_time_h=restart_time_h, n_samples=t)
+    report = FleetReport(
+        cpc=costs.cpc, cpc_ao=costs.cpc_ao,
+        cpc_reduction=1.0 - costs.cpc / costs.cpc_ao,
+        tco=costs.tco, energy_cost=costs.energy_cost,
+        restart_cost=costs.restart_cost,
+        up_hours=costs.up_hours, n_starts=res.fleet.n_starts,
+        x_realized=1.0 - res.fleet.up_units / t,
+        market_idx=market_idx, system_idx=system_idx,
+        policy_idx=policy_idx)
+    return report, _workload_stats(res, costs, demand_mw, dt, slo_rate,
+                                   voll)
+
+
+def _demand_mult(grid: ScenarioGrid, faults) -> Optional[np.ndarray]:
+    """Compile a fault schedule onto the grid shape and keep only the
+    demand-surge channel (price/outage channels belong to
+    `repro.faults.faulted_backtest` — pair the two for the supply
+    side)."""
+    if faults is None:
+        return None
+    from repro.faults.inject import emit_fault_events, resolve_masks
+    masks = resolve_masks(faults, grid.n_rows,
+                          int(grid.prices.shape[0]),
+                          int(grid.prices.shape[1]))
+    emit_fault_events(faults, masks, scope="workload")
+    mult = np.asarray(masks.demand_mult, np.float64)
+    return None if np.all(mult == 1.0) else mult
+
+
+def workload_backtest(grid: ScenarioGrid,
+                      workload: Optional[Workload] = None,
+                      faults=None, *,
+                      _force_coupled: bool = False) -> WorkloadBacktest:
+    """Backtest ``grid`` against a stochastic request workload.
+
+    ``workload`` defaults to ``grid.workload``; with neither set (and
+    ``faults`` carrying no demand surge to apply), the call
+    short-circuits to the plain ``backtest(grid, use_pallas=False)``
+    program — bit-identical, zero overhead, no demand sampling
+    (gated in benchmarks/bench_workload.py).
+    """
+    wl = workload if workload is not None \
+        else getattr(grid, "workload", None)
+    if wl is None and not _force_coupled:
+        return WorkloadBacktest(backtest(grid, use_pallas=False), None)
+    if wl is None:
+        wl = Workload()
+    t = int(grid.prices.shape[1])
+    demand_mw = wl.sample_demand_mw(t, _demand_mult(grid, faults))
+    telemetry = obs.enabled()
+    report, result = _workload_backtest_jit(
+        grid.prices, grid.market_idx, grid.system_idx, grid.policy_idx,
+        grid.fixed, grid.power, grid.period, grid.p_on, grid.p_off,
+        grid.off_level, grid.idle_frac, grid.restart_energy_mwh,
+        grid.restart_time_h, jnp.asarray(demand_mw, jnp.float32),
+        float(wl.queue_bound_mwh), float(wl.slo_penalty_eur_mwh),
+        float(wl.relief.voll_eur_mwh), deadline=int(wl.deadline_h),
+        telemetry=telemetry)
+    if telemetry:
+        obs.counter("workload.backtests").inc()
+        served = float(jnp.mean(result.served_mwh))
+        dropped = float(jnp.mean(result.dropped_mwh))
+        obs.trace_event("workload.result", {
+            "rows": int(grid.n_rows), "hours": t,
+            "n_draws": result.n_draws,
+            "served_mwh": served, "dropped_mwh": dropped,
+            "deferred_mwh_h": float(jnp.mean(result.deferred_mwh_h)),
+            "drop_frac": dropped / max(served + dropped, 1e-30),
+            "cpc_p10_mean": float(jnp.mean(result.cpc_p10)),
+            "cpc_p50_mean": float(jnp.mean(result.cpc_p50)),
+            "cpc_p90_mean": float(jnp.mean(result.cpc_p90))})
+    return WorkloadBacktest(report, result)
+
+
+@functools.partial(jax.jit, static_argnames=("deadline",))
+def _realized_cost_jit(prices, market_idx, fixed, power, period,
+                       p_on, p_off, off_level, idle_frac,
+                       restart_energy_mwh, restart_time_h, demand_mw,
+                       bound, slo_rate, voll, *, deadline: int):
+    t = prices.shape[1]
+    p_rows = prices[market_idx]
+    dt = period / t
+    res = workload_fleet_scan(
+        p_rows, p_on, p_off, off_level, idle_frac, power * dt,
+        demand_mw, dt, deadline=deadline, bound=bound)
+    price_sum = jnp.sum(prices, axis=1)[market_idx]
+    costs = fleet_costs(res.fleet, price_sum=price_sum, fixed=fixed,
+                        power=power, period=period,
+                        restart_energy_mwh=restart_energy_mwh,
+                        restart_time_h=restart_time_h, n_samples=t)
+    cost = costs.tco[:, None] + slo_rate * res.backlog \
+        + voll * res.dropped
+    return jnp.mean(cost, axis=1)                     # [B] EUR
+
+
+def realized_cost(grid: ScenarioGrid, p_on, p_off, off_level,
+                  workload: Workload,
+                  demand_mw: Optional[np.ndarray] = None) -> jax.Array:
+    """Mean-over-draws realized workload cost (energy + deferral +
+    drop), [B] EUR, of candidate policies ``(p_on, p_off, off_level)``
+    on ``grid``'s markets/systems. The hard yardstick
+    `repro.tune.optimize` selects candidates by when a workload is
+    configured — sample ``demand_mw`` once and share it across
+    candidates so the comparison is paired."""
+    if demand_mw is None:
+        demand_mw = workload.sample_demand_mw(int(grid.prices.shape[1]))
+    return _realized_cost_jit(
+        grid.prices, grid.market_idx, grid.fixed, grid.power,
+        grid.period, p_on, p_off, off_level, grid.idle_frac,
+        grid.restart_energy_mwh, grid.restart_time_h,
+        jnp.asarray(demand_mw, jnp.float32),
+        float(workload.queue_bound_mwh),
+        float(workload.slo_penalty_eur_mwh),
+        float(workload.relief.voll_eur_mwh),
+        deadline=int(workload.deadline_h))

@@ -111,6 +111,81 @@ def test_min_slots_keeps_service_during_high_price(small_model):
     assert out["completed"] == 4           # trickles through 2 slots
 
 
+class _PriceStream:
+    def __init__(self, price):
+        self.price = price
+
+    def current(self):
+        return self.price
+
+
+class _MutableSched:
+    """Stub scheduler whose price can be flipped mid-run."""
+
+    def __init__(self, price, thresh=100.0):
+        self.stream = _PriceStream(price)
+        self.p_thresh = thresh
+
+    def step(self, hours):
+        return None
+
+
+def test_admission_width_shrinks_and_recovers(small_model):
+    """Above the threshold the admission width collapses to
+    ``min_slots``; when the price falls back below, the full width
+    returns and the backlog drains."""
+    cfg, params = small_model
+    sched = _MutableSched(price=500.0)
+    eng = ServingEngine(params, cfg,
+                        ServeConfig(slots=4, min_slots=1, max_seq=32),
+                        scheduler=sched)
+    for r in _requests(cfg, 6, max_new=6):
+        eng.submit(r)
+
+    assert eng._admission_width() == 1
+    for _ in range(3):
+        eng.tick()
+    # only the SLO floor is live while the price is high
+    assert int(eng.live.sum()) == 1
+
+    sched.stream.price = 50.0              # price relief
+    assert eng._admission_width() == 4
+    eng.tick()
+    assert int(eng.live.sum()) == 4        # full width recovered
+    out = eng.run(ticks=20)
+    assert out["completed"] == 6 and out["queued"] == 0
+
+
+def test_eur_per_1k_tokens_matches_tick_accounting(small_model):
+    """The serving meter's EUR/1k-tokens must equal the independently
+    integrated tick accounting: fixed cost accrues every tick, energy
+    at the constant stub price is exactly ``energy_mwh * price``."""
+    cfg, params = small_model
+    price = 60.0
+    scfg = ServeConfig(slots=2, max_seq=32, hours_per_tick=0.05,
+                       power_mw=0.4, fixed_cost_per_hour=10.0)
+    eng = ServingEngine(params, cfg, scfg,
+                        scheduler=_MutableSched(price=price))
+    for r in _requests(cfg, 3, max_new=5):
+        eng.submit(r)
+    ticks = 12
+    out = eng.run(ticks=ticks)
+    assert out["tokens_served"] == 3 * 5
+    hours = ticks * scfg.hours_per_tick
+    assert out["hours"] == pytest.approx(hours)
+    assert out["fixed_cost"] == pytest.approx(
+        scfg.fixed_cost_per_hour * hours)
+    # constant price: the energy bill is the metered MWh at that price
+    assert out["energy_cost"] == pytest.approx(
+        out["energy_mwh"] * price)
+    assert out["energy_mwh"] <= scfg.power_mw * hours + 1e-9
+    tco = out["fixed_cost"] + out["energy_cost"]
+    assert out["tco"] == pytest.approx(tco)
+    assert out["eur_per_1k_tokens"] == pytest.approx(
+        tco / out["tokens_served"] * 1000.0)
+    assert eng.meter.tco == pytest.approx(tco)
+
+
 def test_ssm_engine_serves(small_model):
     cfg = reduced_config(get_config("mamba2-1.3b"))
     params = init_params(jax.random.PRNGKey(0), cfg)
